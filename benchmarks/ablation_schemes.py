@@ -1,0 +1,54 @@
+"""Ablation (beyond the paper's tables): permutation-scheme comparison.
+
+The paper argues (§4.2.2, supplement B.2) that the parse-tree counter map
+prevents "accidental" sparsity overlap that the plain one-hot map allows
+only per-coordinate, and describes the D-ary generalisation without
+evaluating it.  This table quantifies all three on the same factors at
+matched thresholds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import KAPPA
+from repro.core.mapping import GamConfig
+from repro.core.retrieval import (
+    BruteForceRetriever,
+    GamRetriever,
+    recovery_accuracy,
+)
+from repro.data import synthetic_ratings
+
+
+def run(n_users: int = 100, n_items: int = 10_000, k: int = 10,
+        seed: int = 0) -> list[dict]:
+    u, v, _ = synthetic_ratings(n_users, n_items, k, seed=seed)
+    brute = BruteForceRetriever(v).query(u, KAPPA)
+    rows = []
+    for scheme, d in (("one_hot", 1), ("parse_tree", 1),
+                      ("one_hot_dary", 2), ("one_hot_dary", 4)):
+        for mo in (2, 3):
+            cfg = GamConfig(k=k, scheme=scheme, d=d, threshold=0.45)
+            res = GamRetriever(v, cfg, min_overlap=mo).query(u, KAPPA)
+            rows.append({
+                "scheme": f"{scheme}(d={d})" if d > 1 else scheme,
+                "p": cfg.p, "min_overlap": mo,
+                "discard": float(res.discarded_frac.mean()),
+                "accuracy": float(
+                    recovery_accuracy(res.ids, brute.ids).mean()),
+            })
+    return rows
+
+
+def main(csv: bool = True) -> list[dict]:
+    rows = run()
+    if csv:
+        print("ablation,scheme,p,min_overlap,discard,accuracy")
+        for r in rows:
+            print(f"ablation,{r['scheme']},{r['p']},{r['min_overlap']},"
+                  f"{r['discard']:.4f},{r['accuracy']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

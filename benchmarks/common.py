@@ -1,0 +1,72 @@
+"""Shared benchmark machinery: method zoo, metrics, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import CroHash, PcaTree, SrpLsh, SuperBitLsh
+from repro.core.mapping import GamConfig
+from repro.core.retrieval import (
+    BruteForceRetriever,
+    GamRetriever,
+    recovery_accuracy,
+)
+
+__all__ = ["build_methods", "evaluate", "time_method", "KAPPA"]
+
+KAPPA = 10
+
+
+def build_methods(items: np.ndarray, k: int, *, gam_threshold: float = 0.2,
+                  gam_min_overlap: int = 2, sparse_threshold: float = 0.45,
+                  sparse_min_overlap: int = 3, seed: int = 0) -> dict:
+    """The paper's §6 line-up: GAM (ternary + parse-tree) vs 4 baselines,
+    parameters chosen so discard rates are comparable (the paper matches
+    sparsity levels when comparing accuracy)."""
+    return {
+        "gam": GamRetriever(
+            items, GamConfig(k=k, scheme="parse_tree",
+                             threshold=gam_threshold),
+            min_overlap=gam_min_overlap),
+        "gam-sparse": GamRetriever(      # the paper's headline-discard point
+            items, GamConfig(k=k, scheme="parse_tree",
+                             threshold=sparse_threshold),
+            min_overlap=sparse_min_overlap),
+        "srp-lsh": SrpLsh(items, n_bits=max(4, k // 2), n_tables=4, seed=seed),
+        "superbit-lsh": SuperBitLsh(items, n_bits=max(4, k // 2), n_tables=4,
+                                    seed=seed),
+        "cro": CroHash(items, n_proj=2 * k, top_l=2, n_tables=4, seed=seed),
+        "pca-tree": PcaTree(items, depth=max(3, int(np.log2(len(items))) - 4)),
+    }
+
+
+def evaluate(methods: dict, items: np.ndarray, users: np.ndarray,
+             kappa: int = KAPPA) -> dict:
+    """Per-method: recovery accuracy vs exact top-kappa, % discarded
+    (distribution over users), implied speed-up."""
+    brute = BruteForceRetriever(items).query(users, kappa)
+    out = {}
+    for name, method in methods.items():
+        res = method.query(users, kappa)
+        acc = recovery_accuracy(res.ids, brute.ids)
+        disc = res.discarded_frac
+        out[name] = {
+            "accuracy_mean": float(acc.mean()),
+            "accuracy": acc,
+            "discard_mean": float(disc.mean()),
+            "discard_std": float(disc.std()),
+            "discard": disc,
+            "speedup": float(1.0 / max(1.0 - disc.mean(), 1e-9)),
+        }
+    return out
+
+
+def time_method(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time (us) of fn(*args)."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md tables from results/*.json (dry-run + roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+ARCH_ORDER = ["qwen2-1.5b", "whisper-tiny", "internvl2-26b", "olmoe-1b-7b",
+              "mamba2-780m", "tinyllama-1.1b", "deepseek-67b",
+              "recurrentgemma-9b", "deepseek-v2-236b", "olmo-1b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{suf}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def dryrun_table(path="results/dryrun.json", mesh="16x16") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    rows = {(r["arch"], r["shape"]): r for r in rows if r["mesh"] == mesh}
+    out = [f"### Mesh {mesh}\n",
+           "| arch | shape | status | lower+compile (s) | args/device | "
+           "peak/device | collectives/device |",
+           "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | **{r['status']}** "
+                           f"({r.get('reason', r.get('error', ''))[:60]}) "
+                           f"| - | - | - | - |")
+                continue
+            coll = r.get("collectives_per_device", {})
+            coll_s = ", ".join(f"{k.replace('collective-','c-')}:"
+                               f"{_fmt(v, 'B')}"
+                               for k, v in sorted(coll.items())) or "none"
+            mem = r["bytes_per_device"]
+            out.append(
+                f"| {a} | {s} | ok | {r.get('lower_s', 0)}+"
+                f"{r.get('compile_s', 0)} | {_fmt(mem['argument'], 'B')} | "
+                f"{_fmt(mem['peak'], 'B')} | {coll_s} |")
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline.json") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    rows = {(r["arch"], r["shape"]): r for r in rows}
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | - | - | - | "
+                           f"**{r['status']}** | - | - |")
+                continue
+            out.append(
+                f"| {a} | {s} | {r['t_compute_s']:.2e} | "
+                f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+                f"**{r['dominant']}** | {_fmt(r['model_flops'])} | "
+                f"{r['useful_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print(dryrun_table(mesh="16x16"))
+        print()
+        print(dryrun_table(mesh="2x16x16"))
+    if which in ("all", "roofline"):
+        print(roofline_table())

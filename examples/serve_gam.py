@@ -1,0 +1,43 @@
+"""Serve a small LM with batched requests, comparing the exact LM head with
+the GAM-accelerated head (the paper's technique applied to vocab retrieval).
+
+Run:  PYTHONPATH=src python examples/serve_gam.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced_config
+from repro.models.model import Model
+from repro.serving import Engine, ServeConfig
+
+cfg = get_reduced_config("qwen2-1.5b").with_(vocab=4096, tie_embeddings=False)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)}
+
+exact = Engine(cfg, params, ServeConfig(max_new_tokens=16), capacity=64)
+gam = Engine(cfg, params, ServeConfig(
+    max_new_tokens=16, use_gam_head=True,
+    gam_threshold=1.5, gam_min_overlap=2), capacity=64)
+
+t0 = time.time()
+r_exact = exact.generate(batch)
+t_exact = time.time() - t0
+t0 = time.time()
+r_gam = gam.generate(batch)
+t_gam = time.time() - t0
+
+agree = float(np.mean(r_exact.tokens == r_gam.tokens))
+print(f"batch of 8, 16 new tokens each")
+print(f"exact head: scored {cfg.vocab} vocab rows/step")
+print(f"GAM head:   scored {r_gam.n_scored_vocab:.0f} vocab rows/step "
+      f"({r_gam.discard_frac:.1%} discarded -> "
+      f"x{1 / (1 - r_gam.discard_frac):.1f} head-matmul speed-up)")
+print(f"greedy next-token agreement with exact decode: {agree:.1%}")
+assert r_gam.discard_frac > 0.05 and agree > 0.5
+print("OK")

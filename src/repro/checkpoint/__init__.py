@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint, tree_paths

@@ -1,0 +1,73 @@
+"""Sharding-aware checkpointing: pytree -> npz with path-flattened keys.
+
+Arrays are gathered to host before saving (fine for the model sizes this
+container trains; the dry-run giants are never materialised).  Restore
+re-places leaves with the shardings of a donor pytree when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "tree_paths"]
+
+_SEP = "//"
+
+
+def tree_paths(tree: Any) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    meta = {"keys": [], "step": step, "dtypes": []}
+    for i, (kp, leaf) in enumerate(flat):
+        key = f"a{i}"
+        arr = np.asarray(jax.device_get(leaf))
+        meta["dtypes"].append(str(arr.dtype))
+        if arr.dtype == jnp.bfloat16:  # npz can't round-trip ml_dtypes
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+        meta["keys"].append(jax.tree_util.keystr(kp))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8
+        ), **arrays)
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
+    """Restore into the structure (and shardings, if any) of ``like``."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode())
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        like_keys = [jax.tree_util.keystr(kp) for kp, _ in flat_like]
+        if meta["keys"] != like_keys:
+            raise ValueError(
+                f"checkpoint structure mismatch:\n saved={meta['keys'][:5]}...\n"
+                f" expected={like_keys[:5]}..."
+            )
+        leaves = []
+        dtypes = meta.get("dtypes") or [None] * len(flat_like)
+        for i, (_, ref) in enumerate(flat_like):
+            arr = data[f"a{i}"]
+            if dtypes[i] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            leaf = jnp.asarray(arr, dtype=ref.dtype)
+            if hasattr(ref, "sharding") and ref.sharding is not None:
+                try:
+                    leaf = jax.device_put(leaf, ref.sharding)
+                except Exception:
+                    pass
+            leaves.append(leaf)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta.get("step")

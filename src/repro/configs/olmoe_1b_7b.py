@@ -1,0 +1,9 @@
+"""OLMoE-1B-7B [arXiv:2409.02060]: 64 experts, top-8, d_ff_expert=1024."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1024, d_ff_expert=1024, vocab=50_304,
+    n_experts=64, moe_top_k=8,
+)

@@ -1,0 +1,31 @@
+"""Core GAM library: the paper's contribution as composable JAX modules."""
+from repro.core.mapping import GamConfig, densify, pattern_overlap, sparse_map
+from repro.core.retrieval import (
+    BruteForceRetriever,
+    GamRetriever,
+    RetrievalResult,
+    recovery_accuracy,
+)
+from repro.core.tessellation import (
+    dary_pattern,
+    exhaustive_tess_vector,
+    ternary_pattern,
+    tess_vector,
+    tess_vector_d,
+)
+
+__all__ = [
+    "GamConfig",
+    "densify",
+    "pattern_overlap",
+    "sparse_map",
+    "BruteForceRetriever",
+    "GamRetriever",
+    "RetrievalResult",
+    "recovery_accuracy",
+    "dary_pattern",
+    "exhaustive_tess_vector",
+    "ternary_pattern",
+    "tess_vector",
+    "tess_vector_d",
+]

@@ -1,0 +1,154 @@
+"""Inverted index over sparse embeddings (paper §1.1).
+
+Two realisations:
+
+* ``InvertedIndex`` — the paper-faithful CPU structure: CSR posting lists
+  (numpy).  ``query`` walks the query's non-zero slots, unions the posting
+  lists, and returns candidate ids + overlap counts.  This is what the
+  retrieval-speedup benchmarks time.
+
+* ``DeviceIndex`` — the TPU-shaped realisation used inside serving: posting
+  lists padded to a fixed bucket width, stored as a dense (p, bucket) int32
+  table so the query is gather + bincount, fully jit-able and shardable over
+  the item/vocab axis.  Overflowing items (beyond bucket width) are tracked in
+  an always-candidate spill list so recall is never silently lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["InvertedIndex", "DeviceIndex"]
+
+
+class InvertedIndex:
+    """CSR posting lists: for each embedding slot i, the items whose phi is
+    non-zero at i."""
+
+    def __init__(self, item_indices: np.ndarray, p: int,
+                 mask: np.ndarray | None = None):
+        """``item_indices``: (N, k) destination indices tau for each item.
+        ``mask``: optional (N, k) bool — only True slots are indexed (the
+        paper stores only coordinates where phi(v) is NON-zero, so thresholded
+        coordinates never enter the index)."""
+        item_indices = np.asarray(item_indices)
+        n, k = item_indices.shape
+        self.n_items, self.p, self.k = n, p, k
+        if mask is None:
+            mask = np.ones((n, k), bool)
+        mask = np.asarray(mask, bool)
+        flat_slots = item_indices[mask]
+        flat_items = np.broadcast_to(
+            np.arange(n, dtype=np.int32)[:, None], (n, k)
+        )[mask]
+        order = np.argsort(flat_slots, kind="stable")
+        self.postings = flat_items[order]
+        counts = np.bincount(flat_slots, minlength=p)
+        self.offsets = np.zeros(p + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.offsets[1:])
+
+    def posting_list(self, slot: int) -> np.ndarray:
+        return self.postings[self.offsets[slot] : self.offsets[slot + 1]]
+
+    def query(self, query_indices: np.ndarray, min_overlap: int = 1,
+              mask: np.ndarray | None = None):
+        """Candidates for one query: ids whose pattern shares >= min_overlap
+        slots with the query's pattern.  Returns (candidate_ids, overlaps).
+
+        Overlap counting is a per-slot vectorised scatter-add into a dense
+        (n_items,) counter — an item appears at most once per posting list,
+        so plain fancy-index increments are exact, and this is ~10x faster
+        than sort/unique over the concatenated hits."""
+        q = np.asarray(query_indices)
+        if mask is not None:
+            q = q[np.asarray(mask, bool)]
+        if q.size == 0:
+            return np.empty(0, np.int32), np.empty(0, np.int64)
+        counts = np.zeros(self.n_items, np.int16)
+        for s in q:
+            counts[self.posting_list(int(s))] += 1
+        ids = np.nonzero(counts >= min_overlap)[0].astype(np.int32)
+        return ids, counts[ids].astype(np.int64)
+
+    def batch_query(self, query_indices: np.ndarray, min_overlap: int = 1,
+                    mask: np.ndarray | None = None):
+        qs = np.asarray(query_indices)
+        return [
+            self.query(qs[i], min_overlap, None if mask is None else mask[i])
+            for i in range(qs.shape[0])
+        ]
+
+
+@dataclasses.dataclass
+class DeviceIndex:
+    """Dense-bucket inverted index living on device.
+
+    table:  (p, bucket) int32 item ids, padded with n_items (a sentinel id).
+    counts: (p,) int32 true posting-list lengths.
+    spill:  (n_spill,) int32 ids of items overflowing any bucket — always
+            treated as candidates (recall-preserving).
+    """
+
+    table: jax.Array
+    counts: jax.Array
+    spill: jax.Array
+    n_items: int
+    p: int
+
+    @staticmethod
+    def build(item_indices: np.ndarray, p: int, bucket: int = 256,
+              mask: np.ndarray | None = None) -> "DeviceIndex":
+        item_indices = np.asarray(item_indices)
+        n, k = item_indices.shape
+        if mask is None:
+            mask = np.ones((n, k), bool)
+        mask = np.asarray(mask, bool)
+        table = np.full((p, bucket), n, dtype=np.int32)
+        counts = np.zeros(p, dtype=np.int32)
+        spilled = set()
+        for item in range(n):
+            for slot in item_indices[item][mask[item]]:
+                c = counts[slot]
+                if c < bucket:
+                    table[slot, c] = item
+                    counts[slot] = c + 1
+                else:
+                    spilled.add(item)
+                    counts[slot] = c + 1
+        spill = np.fromiter(sorted(spilled), dtype=np.int32, count=len(spilled))
+        return DeviceIndex(
+            table=jnp.asarray(table),
+            counts=jnp.asarray(np.minimum(counts, bucket)),
+            spill=jnp.asarray(spill),
+            n_items=n,
+            p=p,
+        )
+
+    def candidate_mask(self, query_indices: jax.Array, min_overlap: int = 1,
+                       query_mask: jax.Array | None = None) -> jax.Array:
+        """(n_items,) bool — jit-able candidate mask for one query pattern."""
+        rows = self.table[query_indices]            # (k, bucket)
+        valid = rows < self.n_items
+        if query_mask is not None:
+            valid = valid & query_mask[:, None]
+        ids = jnp.where(valid, rows, 0)
+        overlap = jnp.zeros(self.n_items, jnp.int32).at[ids.ravel()].add(
+            valid.ravel().astype(jnp.int32)
+        )
+        mask = overlap >= min_overlap
+        if self.spill.shape[0]:
+            mask = mask.at[self.spill].set(True)
+        return mask
+
+    def batch_candidate_mask(self, query_indices: jax.Array, min_overlap: int = 1,
+                             query_mask: jax.Array | None = None) -> jax.Array:
+        if query_mask is None:
+            return jax.vmap(lambda q: self.candidate_mask(q, min_overlap))(
+                query_indices
+            )
+        return jax.vmap(
+            lambda q, m: self.candidate_mask(q, min_overlap, m)
+        )(query_indices, query_mask)

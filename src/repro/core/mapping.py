@@ -1,0 +1,86 @@
+"""The sparse map phi (paper Algorithm 1, ProcessFactors).
+
+phi(z) = P_{a_z}(z zero-padded to p dims).  Because every scheme here is a
+coordinate-destination map tau (coordinate j of z lands at index tau_j of
+phi(z)), we represent phi(z) sparsely as (indices, values) with exactly k
+non-zeros — the inverted-index layer consumes this directly; the dense vector
+is only materialised for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permutation as perm
+from repro.core import tessellation as tess
+
+Scheme = Literal["one_hot", "parse_tree", "one_hot_dary"]
+
+__all__ = ["GamConfig", "sparse_map", "densify", "pattern_overlap"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GamConfig:
+    """Configuration of a geometry-aware mapping schema."""
+
+    k: int                       # factor dimensionality
+    scheme: Scheme = "parse_tree"  # the paper's experiments use parse_tree
+    d: int = 1                   # D-ary base set order (1 = ternary {-1,0,1})
+    threshold: float = 0.0       # optional |z| thresholding before mapping (§6)
+
+    @property
+    def p(self) -> int:
+        if self.scheme == "one_hot":
+            return perm.one_hot_dim(self.k)
+        if self.scheme == "parse_tree":
+            return perm.parse_tree_dim(self.k)
+        if self.scheme == "one_hot_dary":
+            return perm.one_hot_dary_dim(self.k, self.d)
+        raise ValueError(self.scheme)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sparse_map(z: jax.Array, cfg: GamConfig) -> tuple[jax.Array, jax.Array]:
+    """phi(z) as (indices, values): phi(z)[indices[j]] = values[j].
+
+    ``z``: (..., k).  Returns indices (..., k) int32 and values (..., k).
+    Exactly k entries; entries where z was thresholded to zero keep their
+    destination index but carry value 0 (the sparsity PATTERN is a function of
+    the tessellation region only — the paper's key design point).
+    """
+    if z.shape[-1] != cfg.k:
+        raise ValueError(f"expected factor dim {cfg.k}, got {z.shape[-1]}")
+    zt = jnp.where(jnp.abs(z) >= cfg.threshold, z, 0.0) if cfg.threshold else z
+    if cfg.scheme == "one_hot":
+        pattern = tess.ternary_pattern(zt)
+        tau = perm.one_hot_tau(pattern)
+    elif cfg.scheme == "parse_tree":
+        pattern = tess.ternary_pattern(zt)
+        tau = perm.parse_tree_tau(pattern)
+    elif cfg.scheme == "one_hot_dary":
+        h = tess.dary_pattern(zt, cfg.d)
+        tau = perm.one_hot_dary_tau(h, cfg.d)
+    else:
+        raise ValueError(cfg.scheme)
+    return tau, zt
+
+
+def densify(indices: jax.Array, values: jax.Array, p: int) -> jax.Array:
+    """Materialise the dense phi(z) in R^p (tests / small-scale only)."""
+    out = jnp.zeros(indices.shape[:-1] + (p,), values.dtype)
+    return jax.vmap(lambda i, v, o: o.at[i].set(v), in_axes=(0, 0, 0))(
+        indices.reshape(-1, indices.shape[-1]),
+        values.reshape(-1, values.shape[-1]),
+        out.reshape(-1, p),
+    ).reshape(indices.shape[:-1] + (p,))
+
+
+@jax.jit
+def pattern_overlap(tau_a: jax.Array, tau_b: jax.Array) -> jax.Array:
+    """|sparsity-pattern intersection| between phi maps (batched, O(k^2))."""
+    eq = tau_a[..., :, None] == tau_b[..., None, :]
+    return jnp.sum(eq, axis=(-2, -1))

@@ -1,0 +1,105 @@
+"""Region-specific permutation maps (paper §4.2 + supplement B.2).
+
+Each scheme maps coordinate j of a factor z to a destination index tau_j in the
+p-dimensional sparse embedding phi(z), as a deterministic function of the
+unnormalised tessellating pattern ã_z (no storage of the permutation set).
+
+Schemes:
+  * ``one_hot_tau``      — §4.2.1: p = 3k,  tau_j = 3j + c(ã^j).
+  * ``parse_tree_tau``   — supplement B.2 (delta=1 counter scheme, the one the
+    paper uses in its experiments): tau_j = k*(j+1) if ã^j=1; tau_{j-1}+1 if
+    ã^j=0; k*(k+j+1) if ã^j=-1.  p ~ O(k^2).
+  * ``one_hot_dary_tau`` — D-ary generalisation of one-hot: p = (2D+1)k.
+
+All are pure-jnp, batched over leading dims, jit-safe.  Indices are 0-based
+(the paper's presentation is 1-based; the geometry is identical).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "one_hot_tau",
+    "one_hot_dim",
+    "parse_tree_tau",
+    "parse_tree_dim",
+    "one_hot_dary_tau",
+    "one_hot_dary_dim",
+    "kendall_tau_distance",
+]
+
+
+def one_hot_dim(k: int) -> int:
+    return 3 * k
+
+
+@jax.jit
+def one_hot_tau(pattern: jax.Array) -> jax.Array:
+    """One-hot encoding (§4.2.1): coordinate j lands in its private 3-slot
+    segment, the slot chosen by ã^j.  tau_j = 3j + c, c = 0/1/2 for ã^j=1/0/-1.
+    """
+    j = jnp.arange(pattern.shape[-1], dtype=jnp.int32)
+    c = jnp.where(pattern == 1, 0, jnp.where(pattern == 0, 1, 2)).astype(jnp.int32)
+    return 3 * j + c
+
+
+def parse_tree_dim(k: int) -> int:
+    # max tau: a^j = -1 at the last coordinate gives k*(k+k) = 2k^2; a
+    # trailing zero-run can add at most k-1 more.  +1 for 0-based size.
+    return 2 * k * k + k
+
+
+@jax.jit
+def parse_tree_tau(pattern: jax.Array) -> jax.Array:
+    """Parse-tree counter scheme (supplement B.2, delta=1).
+
+    Counter dynamics (1-based j in the paper; here jj = j+1):
+        ã^j =  1  ->  tau_j = k * jj
+        ã^j =  0  ->  tau_j = tau_{j-1} + 1          (tau_{-1} = 0)
+        ã^j = -1  ->  tau_j = k * (k + jj)
+
+    Vectorised: let m(j) be the last index <= j with ã^m != 0 (or -1 if none).
+    Then tau_j = base(m) + (j - m), where base(-1) = 0,
+    base(m) = k*(m+1) if ã^m = 1 else k*(k+m+1).
+    """
+    k = pattern.shape[-1]
+    j = jnp.arange(k, dtype=jnp.int32)
+    nz = pattern != 0
+    # last nonzero index <= j  (running maximum of j where nonzero, -1 if none)
+    m = jax.lax.associative_scan(jnp.maximum, jnp.where(nz, j, -1), axis=-1)
+    sign_m = jnp.take_along_axis(
+        pattern.astype(jnp.int32), jnp.maximum(m, 0), axis=-1
+    )
+    base = jnp.where(sign_m == 1, k * (m + 1), k * (k + m + 1))
+    # m >= 0: tau = base(m) + zero-run length (j - m);  m == -1: tau = j + 1.
+    return jnp.where(m < 0, j + 1, base + (j - m))
+
+
+def one_hot_dary_dim(k: int, d: int) -> int:
+    return (2 * d + 1) * k
+
+
+@partial(jax.jit, static_argnames=("d",))
+def one_hot_dary_tau(h: jax.Array, d: int) -> jax.Array:
+    """D-ary one-hot: coordinate j's segment has 2D+1 slots, one per base value.
+
+    ``h`` are integer numerators in [-D, D] (ã = h/D).
+    """
+    j = jnp.arange(h.shape[-1], dtype=jnp.int32)
+    c = (d - h).astype(jnp.int32)  # h=D -> slot 0 ... h=-D -> slot 2D
+    return (2 * d + 1) * j + c
+
+
+def kendall_tau_distance(tau_a: jax.Array, tau_b: jax.Array) -> jax.Array:
+    """Number of pairwise order inversions between two index maps (test util).
+
+    For the one-hot scheme the paper proves this equals the l1 distance
+    between the unnormalised tessellating vectors.
+    """
+    a = tau_a[..., :, None] - tau_a[..., None, :]
+    b = tau_b[..., :, None] - tau_b[..., None, :]
+    inv = (jnp.sign(a) * jnp.sign(b)) < 0
+    return jnp.sum(inv, axis=(-2, -1)) // 2

@@ -1,0 +1,117 @@
+"""Directional tessellation of the unit sphere (paper §4.1).
+
+Implements:
+  * Algorithm 2 (``tess_vector``): exact closest tessellating vector for the
+    ternary base set B = {-1, 0, 1}, O(k log k), no storage of Gamma.
+  * Algorithm 3 (``tess_vector_d``): eps-approximate closest vector for the
+    D-ary base set B_D, O(k).
+  * ``exhaustive_tess_vector``: brute-force oracle over all of Gamma (test-only,
+    small k).
+
+All functions are pure-jnp, batched over leading dims, and jit-safe.  Both are
+scale-invariant in ``z`` (paper §5) — we never require ``z`` normalised.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "tess_vector",
+    "ternary_pattern",
+    "tess_vector_d",
+    "exhaustive_tess_vector",
+    "enumerate_gamma",
+]
+
+
+@jax.jit
+def ternary_pattern(z: jax.Array) -> jax.Array:
+    """Unnormalised ternary tessellating vector ``ã_z`` in {-1,0,1}^k (Alg 2).
+
+    Batched over leading dimensions; the last axis is the factor dim k.
+    Returns an int8 array of the same shape as ``z``.
+    """
+    k = z.shape[-1]
+    az = jnp.abs(z)
+    # Sort descending by absolute value (Alg 2 step 2).
+    z_down = -jnp.sort(-az, axis=-1)
+    # Scaled cumulative sums  z_s^t = sum_{j<=t} z_down^j / sqrt(t)  (step 4-7).
+    iota = jnp.arange(1, k + 1, dtype=z.dtype)
+    z_s = jnp.cumsum(z_down, axis=-1) / jnp.sqrt(iota)
+    # t* = argmax_t z_s^t; support = top-(t*+1) coordinates by |z| (steps 8-9).
+    t_star = jnp.argmax(z_s, axis=-1)  # 0-based: support size = t_star + 1
+    # rank of each coordinate when sorted by descending |z| (stable ties).
+    order = jnp.argsort(-az, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    support = ranks <= t_star[..., None]
+    sign = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
+    return jnp.where(support, sign, jnp.int8(0))
+
+
+@jax.jit
+def tess_vector(z: jax.Array) -> jax.Array:
+    """Normalised closest tessellating vector ``a_z`` (Alg 2 step 10)."""
+    pat = ternary_pattern(z).astype(z.dtype)
+    t = jnp.sum(jnp.abs(pat), axis=-1, keepdims=True)
+    return pat / jnp.sqrt(jnp.maximum(t, 1))
+
+
+@partial(jax.jit, static_argnames=("d",))
+def dary_pattern(z: jax.Array, d: int) -> jax.Array:
+    """Unnormalised D-ary tessellating vector (Alg 3): per-coordinate rounding
+    of ``z`` (normalised) to the nearest multiple of 1/D, clipped to [-1, 1].
+
+    Returns integer numerators h in [-D, D] (int32), i.e. ã = h / D.
+    A zero vector is repaired by setting the max-|z| coordinate to ±1/D, since
+    A_D excludes the all-zero vector.
+    """
+    zn = z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+    h = jnp.clip(jnp.round(zn * d), -d, d).astype(jnp.int32)
+    all_zero = jnp.all(h == 0, axis=-1, keepdims=True)
+    top = jnp.argmax(jnp.abs(zn), axis=-1)
+    fix = jax.nn.one_hot(top, z.shape[-1], dtype=jnp.int32) * jnp.where(
+        jnp.take_along_axis(zn, top[..., None], axis=-1) >= 0, 1, -1
+    )
+    return jnp.where(all_zero, fix, h)
+
+
+@partial(jax.jit, static_argnames=("d",))
+def tess_vector_d(z: jax.Array, d: int) -> jax.Array:
+    """Normalised eps-approximate closest D-ary tessellating vector (Alg 3).
+
+    Lemma 2: angular distance to the true argmin is O(k / D^2).
+    """
+    h = dary_pattern(z, d).astype(z.dtype) / d
+    return h / jnp.linalg.norm(h, axis=-1, keepdims=True)
+
+
+def enumerate_gamma(k: int, d: int = 1) -> np.ndarray:
+    """Explicitly enumerate the normalised tessellating set Gamma (test oracle).
+
+    d=1 gives the ternary set (M = 3^k - 1); general d gives the D-ary set
+    with base values {0, ±1/d, ..., ±1}.  Only feasible for small k.
+    """
+    base = np.arange(-d, d + 1) / d
+    rows = np.array(
+        [v for v in itertools.product(base, repeat=k) if any(x != 0 for x in v)],
+        dtype=np.float64,
+    )
+    return rows / np.linalg.norm(rows, axis=1, keepdims=True)
+
+
+def exhaustive_tess_vector(z: np.ndarray, k: int | None = None, d: int = 1) -> np.ndarray:
+    """Brute-force argmin_{a in Gamma} d(a, z) — the oracle for Lemmas 1 and 2."""
+    z = np.asarray(z, dtype=np.float64)
+    squeeze = z.ndim == 1
+    if squeeze:
+        z = z[None]
+    gamma = enumerate_gamma(z.shape[-1], d)
+    zn = z / np.linalg.norm(z, axis=-1, keepdims=True)
+    best = np.argmax(zn @ gamma.T, axis=-1)
+    out = gamma[best]
+    return out[0] if squeeze else out

@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenPipeline, movielens_like_ratings, synthetic_ratings

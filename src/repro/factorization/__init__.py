@@ -1,0 +1,1 @@
+from repro.factorization.mf import MfConfig, train_mf

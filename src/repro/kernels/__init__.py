@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from repro.kernels.ops import decode_attention, gam_score, tess_project

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: flash-decode — one-token GQA attention over a KV cache.
+
+Online-softmax accumulation over KV blocks: the innermost grid dimension
+walks the sequence; VMEM scratch carries the running (max, sum, weighted
+accumulator) per (batch, kv-head), so the (S,) score row never round-trips
+to HBM.  Handles the cache-length mask (positions > len contribute nothing).
+
+Layout: q (B, Hkv, G, hd) — G = H / Hkv query heads per KV head; k/v
+(B, S, Hkv, hd); out (B, Hkv, G, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bs: int, n_sblk: int, scale: float):
+    sblk = pl.program_id(2)
+
+    @pl.when(sblk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # (G, hd)
+    k = k_ref[0, :, 0]                             # (BS, hd)
+    v = v_ref[0, :, 0]
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (G, BS)
+    pos = sblk * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= len_ref[0], s, NEG)
+
+    m_prev = m_scr[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (G, BS)
+    corr = jnp.exp(m_prev - m_new)                 # (G, 1)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(sblk == n_sblk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, bs: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); length: () int32 — attend to
+    positions <= length.  Returns (B, Hkv, G, hd) in q.dtype."""
+    b, hkv, g, hd = q.shape
+    s = k.shape[1]
+    bs = min(bs, s)
+    pad = (-s) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_sblk = k.shape[1] // bs
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, bs=bs, n_sblk=n_sblk, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hkv, n_sblk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # length
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h_, s_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: quantized coarse scoring against ternary patterns.
+
+The GAM LM-head's first stage scores the (thresholded) hidden state against
+the int8 ternary tessellation patterns of every unembedding row — the dense
+analogue of walking the query's inverted-index slots.  The kernel fuses the
+(B, d) f32 x (d, BV) int8 MXU matmul with the 1/sqrt(nnz) normalisation so
+the coarse score tensor is written once, and the int8 operand halves the
+HBM traffic of the vocab sweep vs a bf16 matmul.
+
+Grid: (V / BV,) — queries ride whole (decode batches are small).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gam_coarse"]
+
+
+def _kernel(h_ref, p_ref, s_ref, o_ref):
+    h = h_ref[...]                                    # (B, d) f32
+    pat = p_ref[...].astype(jnp.float32)              # (d, BV) int8 -> f32
+    scores = jax.lax.dot(h, pat, preferred_element_type=jnp.float32)
+    o_ref[...] = scores * s_ref[...]                  # (B, BV) * (1, BV)
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def gam_coarse(h: jax.Array, patterns: jax.Array, inv_sqrt_nnz: jax.Array, *,
+               bv: int = 2048, interpret: bool = False) -> jax.Array:
+    """h: (B, d) f32; patterns: (d, V) int8; inv_sqrt_nnz: (V,) f32.
+    Returns coarse scores (B, V) f32 = (h @ patterns) * inv_sqrt_nnz."""
+    b, d = h.shape
+    v = patterns.shape[1]
+    bv = min(bv, v)
+    pad = (-v) % bv
+    if pad:
+        patterns = jnp.pad(patterns, ((0, 0), (0, pad)))
+        inv_sqrt_nnz = jnp.pad(inv_sqrt_nnz, (0, pad))
+    vp = patterns.shape[1]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(vp // bv,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, bv), lambda j: (0, j)),
+            pl.BlockSpec((1, bv), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, bv), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, vp), jnp.float32),
+        interpret=interpret,
+    )(h.astype(jnp.float32), patterns, inv_sqrt_nnz[None, :])
+    return out[:, :v]

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile to Mosaic.  ``interpret`` defaults accordingly so library code can
+call these unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.gam_score import gam_score as _gam_score
+from repro.kernels.tess_project import tess_project as _tess_project
+
+__all__ = ["gam_score", "decode_attention", "tess_project"]
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gam_score(u, v, mask, **kw):
+    kw.setdefault("interpret", _on_cpu())
+    return _gam_score(u, v, mask, **kw)
+
+
+def decode_attention(q, k, v, length, **kw):
+    kw.setdefault("interpret", _on_cpu())
+    return _decode_attention(q, k, v, length, **kw)
+
+
+def tess_project(z, **kw):
+    kw.setdefault("interpret", _on_cpu())
+    return _tess_project(z, **kw)
+
+
+def gam_coarse(h, patterns, inv_sqrt_nnz, **kw):
+    from repro.kernels.gam_coarse import gam_coarse as _impl
+    kw.setdefault("interpret", _on_cpu())
+    return _impl(h, patterns, inv_sqrt_nnz, **kw)
+
+
+def flash_prefill(q, k, v, **kw):
+    from repro.kernels.flash_prefill import flash_prefill as _impl
+    kw.setdefault("interpret", _on_cpu())
+    return _impl(q, k, v, **kw)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tessellation import ternary_pattern, tess_vector
+
+__all__ = ["gam_score_ref", "decode_attention_ref", "tess_project_ref"]
+
+
+def gam_score_ref(u, v, mask):
+    scores = u.astype(jnp.float32) @ v.astype(jnp.float32).T
+    return jnp.where(mask != 0, scores, -1e30)
+
+
+def decode_attention_ref(q, k, v, length):
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(k.shape[1])
+    s = jnp.where(pos[None, None, None, :] <= length, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def tess_project_ref(z):
+    pat = ternary_pattern(z)
+    return pat, tess_vector(z).astype(jnp.float32)
+
+
+def gam_coarse_ref(h, patterns, inv_sqrt_nnz):
+    return (h.astype(jnp.float32) @ patterns.astype(jnp.float32)
+            ) * inv_sqrt_nnz[None, :]
+
+
+def flash_prefill_ref(q, k, v):
+    """q: (B, S, Hkv, G, hd); k/v: (B, S, Hkv, hd) — causal."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    sq = q.shape[1]
+    mask = jnp.tril(jnp.ones((sq, sq), bool))
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

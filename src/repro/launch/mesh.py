@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "model_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data", "model"); 2 pods = 512 chips
+    ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes the batch dim shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,150 @@
+"""Step functions (train / prefill / serve) + abstract input specs.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.  Modality frontends are STUBS per the brief: whisper gets mel
+frames (d_frontend=80), internvl gets ViT patch embeddings (d_frontend=3200).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["shape_adapted_config", "input_specs", "abstract_params",
+           "abstract_opt_state", "abstract_cache", "make_train_step",
+           "make_prefill_step", "make_serve_step", "decode_text_len"]
+
+
+def shape_adapted_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Per-shape architecture adaptation: dense/moe archs switch to the
+    sliding-window attention variant for long_500k (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return cfg.with_(attn_kind="sliding", window=4096)
+    return cfg
+
+
+def decode_text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Decoder-token length for a given total sequence length."""
+    if cfg.family == "encdec":
+        return max(seq_len // 4, 8)     # audio frames : text tokens ~ 4:1
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_image_tokens
+    return seq_len
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for train/prefill ('tokens' has the +1 label shift for
+    train)."""
+    b, s = shape.global_batch, shape.seq_len
+    extra = 1 if shape.kind == "train" else 0
+    t = decode_text_len(cfg, s)
+    batch = {"tokens": _sds((b, t + extra), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, s, cfg.d_frontend), jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_frontend),
+                                     jnp.float32)
+    return batch
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_sds):
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def abstract_cache(model: Model, batch: int, capacity: int):
+    return jax.eval_shape(partial(model.init_cache, batch, capacity))
+
+
+# ------------------------------------------------------------------ steps
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig()):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, capacity: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, capacity)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: greedy next token for every sequence in the batch."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+
+    return serve_step
+
+
+def make_gam_serve_step(model: Model, *, coarse_k: int = 128,
+                        budget: int = 16_384):
+    """Decode step with the GAM-accelerated LM head (the paper's technique on
+    the vocab inner product, TPU-dense formulation — DESIGN.md §3).
+
+    Two stages replace the full (B, d) x (d, V) head matmul:
+      1. coarse: score the query's ``coarse_k`` strongest coordinates against
+         the int8 ternary tessellation patterns of the unembedding rows —
+         the dense analogue of walking the query's inverted-index slots
+         (bytes ~ V * coarse_k * 1 instead of V * d * 2);
+      2. exact: gather the ``budget`` best candidate rows and compute exact
+         logits only there (the paper's candidate-only scoring).
+
+    ``gam`` inputs: patterns (d, V) int8 (phi patterns of unembed rows,
+    transposed) and inv_sqrt_nnz (V,) f32.
+    """
+
+    def serve_step(params, gam, cache, tokens):
+        hidden, cache = model.decode_step(params, cache, tokens,
+                                          return_hidden=True)
+        h = hidden[:, 0].astype(jnp.float32)                    # (B, d)
+        _, cols = jax.lax.top_k(jnp.abs(h), coarse_k)           # (B, k')
+        hsub = jnp.take_along_axis(h, cols, axis=1)             # (B, k')
+        psub = gam["patterns"][cols]                            # (B, k', V)
+        coarse = jnp.einsum("bk,bkv->bv", hsub,
+                            psub.astype(jnp.float32))
+        coarse = coarse * gam["inv_sqrt_nnz"][None, :]
+        _, cand = jax.lax.top_k(coarse, budget)                 # (B, C)
+        embed = (params["embed"] if model.cfg.tie_embeddings
+                 else params["lm_head"].T)
+        rows = embed[cand]                                      # (B, C, d)
+        exact = jnp.einsum("bd,bcd->bc", h,
+                           rows.astype(jnp.float32))
+        best = jnp.argmax(exact, axis=-1)
+        next_tokens = jnp.take_along_axis(cand, best[:, None], axis=1)
+        return next_tokens.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def gam_head_inputs(cfg: ModelConfig):
+    """Abstract (SDS) GAM-head side inputs for the dry-run."""
+    return {
+        "patterns": _sds((cfg.d_model, cfg.vocab), jnp.int8),
+        "inv_sqrt_nnz": _sds((cfg.vocab,), jnp.float32),
+    }

@@ -1,0 +1,360 @@
+"""Attention blocks: GQA (full / sliding-window), cross-attention, and MLA
+(multi-head latent attention, DeepSeek-V2).
+
+Prefill/train uses a blockwise formulation: an outer ``lax.scan`` over query
+chunks keeps the live logits tensor at (B, q_chunk, H, S) instead of
+(B, S, H, S) — the pure-JAX analogue of flash attention's memory behaviour
+(the Pallas kernel in kernels/decode_attention.py covers the decode hot spot).
+
+Decode uses a KV cache of capacity S with a write cursor; sliding-window
+attention masks the cache to the trailing ``window`` positions, which is what
+makes the dense architectures legal for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rope, truncated_normal
+
+__all__ = ["attn_init", "attention_train", "attention_decode", "init_kv_cache",
+           "mla_init", "mla_train", "mla_decode", "init_mla_cache",
+           "cross_attn_init", "cross_attention"]
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ GQA
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+def _blockwise_scores_softmax(q, k, v, *, q_offset, kv_positions, causal,
+                              window, f32=True):
+    """One query chunk vs full K/V.  q: (B,qc,Hkv,G,hd); k/v: (B,S,Hkv,hd).
+
+    ``f32=False`` keeps the (qc, S) score/probability tensors in bf16 (the
+    perf knob: halves the dominant HBM term of blockwise attention) while
+    still doing the max/sum reductions in f32."""
+    hd = q.shape[-1]
+    st = jnp.float32 if f32 else jnp.bfloat16
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", q.astype(st), k.astype(st),
+                        preferred_element_type=st) * jnp.asarray(
+                            hd, jnp.float32).astype(st) ** -0.5
+    qpos = q_offset + jnp.arange(q.shape[1])            # (qc,)
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= kv_positions[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kv_positions[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    if f32:
+        probs = jax.nn.softmax(scores, axis=-1)
+    else:
+        m = jnp.max(scores.astype(jnp.float32), -1, keepdims=True)
+        p = jnp.exp(scores - m.astype(st))
+        probs = p / jnp.sum(p.astype(jnp.float32), -1, keepdims=True
+                            ).astype(st)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", probs, v.astype(st),
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _grouped_attention(q, k, v, cfg: ModelConfig, *, q_offset=0, causal=True,
+                       window=None):
+    """Blockwise attention over query chunks.  q: (B,S,H,hd)."""
+    b, sq, h, hd = q.shape
+    vd = v.shape[-1]                     # may differ from hd (MLA)
+    g = h // k.shape[2]
+    qg = q.reshape(b, sq, k.shape[2], g, hd)
+    kv_positions = jnp.arange(k.shape[1])
+    qc = min(cfg.q_chunk, sq)
+    if sq % qc:
+        qc = sq  # fallback: single chunk (smoke-scale shapes)
+    nchunk = sq // qc
+    if nchunk == 1:
+        out = _blockwise_scores_softmax(
+            qg, k, v, q_offset=q_offset, kv_positions=kv_positions,
+            causal=causal, window=window, f32=cfg.attn_f32)
+        return out.reshape(b, sq, h, vd)
+
+    qg = qg.reshape(b, nchunk, qc, k.shape[2], g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if cfg.attn_truncate and causal and window is None:
+        # causal KV truncation (perf knob): chunk i only ever attends keys
+        # < (i+1)*qc, so slice K/V statically per chunk — halves score
+        # flops/bytes.  Unrolled loop (static slice bounds per chunk).
+        outs = jnp.stack([
+            _blockwise_scores_softmax(
+                qg[i], k[:, : (i + 1) * qc], v[:, : (i + 1) * qc],
+                q_offset=q_offset + i * qc,
+                kv_positions=kv_positions[: (i + 1) * qc],
+                causal=True, window=None, f32=cfg.attn_f32)
+            for i in range(nchunk)
+        ])
+        return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, vd)
+
+    if not cfg.scan_layers:
+        # unrolled (roofline probes): XLA cost analysis counts scan bodies
+        # once, so every chunk must appear in the HLO
+        outs = jnp.stack([
+            _blockwise_scores_softmax(
+                qg[i], k, v, q_offset=q_offset + i * qc,
+                kv_positions=kv_positions, causal=causal, window=window,
+                f32=cfg.attn_f32)
+            for i in range(nchunk)
+        ])
+        return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, vd)
+
+    def body(_, inputs):
+        i, qchunk = inputs
+        out = _blockwise_scores_softmax(
+            qchunk, k, v, q_offset=q_offset + i * qc,
+            kv_positions=kv_positions, causal=causal, window=window,
+            f32=cfg.attn_f32)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nchunk), qg))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, vd)
+
+
+def attention_train(params, x, cfg: ModelConfig, *, positions=None,
+                    causal=True, window=None, return_kv=False):
+    """Full-sequence attention (train / prefill).  x: (B, S, d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if window is None and cfg.attn_kind == "sliding":
+        window = cfg.window
+    out = _grouped_attention(q, k, v, cfg, causal=causal, window=window)
+    out = out.reshape(b, s, -1) @ params["wo"]
+    return (out, (k, v)) if return_kv else out
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                  layers: int | None = None) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    l = cfg.n_layers if layers is None else layers
+    return {
+        "k": jnp.zeros((l, batch, capacity, hkv, hd), dtype),
+        "v": jnp.zeros((l, batch, capacity, hkv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_decode(params, x, cfg: ModelConfig, layer_cache: dict, *,
+                     window=None, ring=False):
+    """One-token decode.  x: (B, 1, d); layer_cache k/v: (B, S, Hkv, hd).
+
+    Returns (out, updated layer_cache).  With ``ring=False`` the new K/V is
+    written at cursor ``len`` (clamped to capacity-1) and attention covers
+    positions <= len.  With ``ring=True`` the cache is a ring buffer of
+    ``capacity`` slots (slot = pos % capacity) — the native layout for
+    windowed/local attention where capacity ~ window << seq_len.
+    """
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cur = layer_cache["len"]
+    q, k, v = _qkv(params, x, cfg)
+    pos = jnp.full((b, 1), cur, jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    capacity = layer_cache["k"].shape[1]
+    wp = cur % capacity if ring else jnp.minimum(cur, capacity - 1)
+    kc = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, wp, 0, 0))
+    vc = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, wp, 0, 0))
+    if window is None and cfg.attn_kind == "sliding":
+        window = cfg.window
+    g = h // hkv
+    if cfg.use_decode_kernel and not ring and window is None:
+        # Pallas flash-decode kernel: online softmax over KV blocks in VMEM
+        from repro.kernels.ops import decode_attention as _flash_decode
+        qk = q[:, 0].reshape(b, hkv, g, hd)
+        out = _flash_decode(qk, kc, vc, wp)
+        out = out.reshape(b, 1, h * hd) @ params["wo"]
+        return out, {"k": kc, "v": vc, "len": layer_cache["len"]}
+    qg = q.reshape(b, 1, hkv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * hd ** -0.5
+    slots = jnp.arange(capacity)
+    if ring:
+        # absolute position held by each slot (<= cur, == slot mod capacity)
+        kv_positions = cur - ((cur - slots) % capacity)
+        mask = (kv_positions >= 0) & (kv_positions <= cur)
+    else:
+        kv_positions = slots
+        mask = kv_positions <= wp
+    if window is not None:
+        mask &= kv_positions > cur - window
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", probs, vc.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * hd) @ params["wo"]
+    return out, {"k": kc, "v": vc, "len": layer_cache["len"]}
+
+
+# ------------------------------------------------------------------ cross-attention (whisper decoder)
+
+
+def cross_attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention(params, x, enc_kv, cfg: ModelConfig):
+    """x: (B, S_dec, d); enc_kv = (k, v): (B, S_enc, Hkv, hd). No masking."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = _grouped_attention(q, k, v, cfg, causal=False, window=None)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def encode_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# ------------------------------------------------------------------ MLA
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora), dtype),
+        "q_norm": jnp.ones((cfg.q_lora,), dtype),
+        "wq_b": dense_init(ks[1], (cfg.q_lora, h * (nope + rdim)), dtype),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora + rdim), dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+        "wk_b": dense_init(ks[3], (cfg.kv_lora, h * nope), dtype),
+        "wv_b": dense_init(ks[4], (cfg.kv_lora, h * vdim), dtype),
+        "wo": dense_init(ks[5], (h * vdim, d), dtype),
+    }
+
+
+def _rmsnorm(x, scale):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_qkv_latent(params, x, cfg: ModelConfig, positions):
+    """Shared query path + latent KV (c_kv, k_rope) with rope applied."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rdim = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _rmsnorm(x @ params["wq_a"], params["q_norm"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ params["wkv_a"]
+    c_kv = _rmsnorm(kv[..., : cfg.kv_lora], params["kv_norm"])
+    k_rope = rope(kv[..., cfg.kv_lora :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(params, x, cfg: ModelConfig, *, positions=None, window=None,
+              return_latent=False):
+    """MLA attention for train/prefill (naive per-head K/V materialisation,
+    blockwise over query chunks)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(params, x, cfg, positions)
+    k_nope = (c_kv @ params["wk_b"]).reshape(b, s, h, nope)
+    v = (c_kv @ params["wv_b"]).reshape(b, s, h, vdim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (b, s, h, rdim))], -1)
+    if window is None and cfg.attn_kind == "sliding":
+        window = cfg.window
+    out = _grouped_attention(q, k, v, cfg.with_(q_chunk=cfg.q_chunk),
+                             causal=True, window=window)
+    out = out.reshape(b, s, h * vdim) @ params["wo"]
+    return (out, (c_kv, k_rope)) if return_latent else out
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                   layers: int | None = None) -> dict:
+    l = cfg.n_layers if layers is None else layers
+    return {
+        "c_kv": jnp.zeros((l, batch, capacity, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((l, batch, capacity, cfg.qk_rope_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(params, x, cfg: ModelConfig, layer_cache: dict, *, window=None):
+    """Absorbed-matrix MLA decode: scores/values computed directly against the
+    latent cache (c_kv, k_rope) — the memory win the paper's MLA variant is
+    about.  x: (B, 1, d)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cur = layer_cache["len"]
+    pos = jnp.full((b, 1), cur, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(params, x, cfg, pos)
+    capacity = layer_cache["c_kv"].shape[1]
+    wp = jnp.minimum(cur, capacity - 1)
+    ckv_c = jax.lax.dynamic_update_slice(layer_cache["c_kv"], c_kv, (0, wp, 0))
+    krope_c = jax.lax.dynamic_update_slice(layer_cache["k_rope"], k_rope,
+                                           (0, wp, 0))
+    # absorb wk_b into the query:  q_lat[h, c] = sum_n q_nope[h,n] wk_b[c, h, n]
+    wk_b = params["wk_b"].reshape(cfg.kv_lora, h, nope)
+    q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = (
+        jnp.einsum("bqhc,bsc->bqhs", q_lat, ckv_c.astype(jnp.float32))
+        + jnp.einsum("bqhr,bsr->bqhs", q_rope.astype(jnp.float32),
+                     krope_c.astype(jnp.float32))
+    ) * (nope + rdim) ** -0.5
+    kv_positions = jnp.arange(capacity)
+    mask = kv_positions <= wp
+    if window is None and cfg.attn_kind == "sliding":
+        window = cfg.window
+    if window is not None:
+        mask &= kv_positions > wp - window
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bqhs,bsc->bqhc", probs, ckv_c.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(cfg.kv_lora, h, vdim)
+    out = jnp.einsum("bqhc,chv->bqhv", o_lat, wv_b.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * vdim) @ params["wo"]
+    return out, {"c_kv": ckv_c, "k_rope": krope_c, "len": layer_cache["len"]}

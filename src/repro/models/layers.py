@@ -1,0 +1,87 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["norm_init", "apply_norm", "rope", "swiglu_init", "swiglu",
+           "dense_init", "dense", "truncated_normal"]
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+
+def norm_init(cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if cfg.norm == "ln_nonparam":   # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (xf * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    if cfg.norm == "ln":
+        xf = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return xf.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd) or (..., S, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                              # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp
+
+
+def swiglu_init(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "gate": truncated_normal(k1, (d, f), s_in, dtype),
+        "up": truncated_normal(k2, (d, f), s_in, dtype),
+        "down": truncated_normal(k3, (f, d), s_out, dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ params["gate"])
+    return (g * (x @ params["up"])) @ params["down"]
+
+
+def dense_init(key, shape, dtype, scale=None) -> jax.Array:
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return truncated_normal(key, shape, scale, dtype)
+
+
+def dense(w: jax.Array, x: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = x @ w
+    return y + b if b is not None else y

@@ -1,0 +1,386 @@
+"""The unified Model: init / loss / prefill / decode_step for all families.
+
+Parameter tree:
+  embed       (V, d)
+  blocks      stacked block params (L, ...) — scan-over-layers
+  tail        (hybrid only) trailing rec blocks beyond the period-3 groups
+  enc_*       (encdec only) encoder stack + frontend projector
+  img_proj    (vlm only)    patch-embedding projector (the stubbed frontend)
+  final_norm
+  lm_head     (d, V) unless cfg.tie_embeddings
+
+Caches are dicts of stacked per-layer arrays plus a scalar write cursor
+``len``; decode scans layers with the cache slices as scan xs/ys.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, dense_init, norm_init
+from repro.models.transformer import (
+    _mixer_for_layer,
+    block_decode,
+    block_init,
+    block_prefill,
+    block_train,
+    remat_wrap,
+    stack_init,
+)
+
+__all__ = ["Model"]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _maybe_scan(cfg: ModelConfig, body, init, xs):
+    """lax.scan over stacked layers, or an unrolled Python loop when
+    cfg.scan_layers=False (used by the roofline probes: XLA's cost analysis
+    counts a while-loop body once, so per-layer costs need unrolling)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "hybrid":
+            self.n_groups, self.n_tail = divmod(cfg.n_layers, 3)
+
+    # ------------------------------------------------------------ init
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: dict = {
+            "embed": dense_init(keys[0], (cfg.vocab_padded, cfg.d_model), dt,
+                                scale=0.02),
+            "final_norm": norm_init(cfg, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                keys[1], (cfg.d_model, cfg.vocab_padded), dt)
+        if cfg.family == "hybrid":
+            group_keys = jax.random.split(keys[2], self.n_groups)
+            params["blocks"] = jax.vmap(self._init_group)(group_keys)
+            if self.n_tail:
+                params["tail"] = stack_init(keys[3], cfg, "rec", self.n_tail,
+                                            dt)
+        elif cfg.family == "encdec":
+            params["frontend_proj"] = dense_init(
+                keys[2], (cfg.d_frontend, cfg.d_model), dt)
+            params["enc_blocks"] = stack_init(
+                keys[3], cfg, "attn", cfg.n_encoder_layers, dt)
+            params["enc_norm"] = norm_init(cfg, dt)
+            params["blocks"] = stack_init(keys[4], cfg, "attn", cfg.n_layers,
+                                          dt, cross=True)
+        else:
+            mixer = _mixer_for_layer(cfg, 0)
+            params["blocks"] = stack_init(keys[2], cfg, mixer, cfg.n_layers,
+                                          dt)
+            if cfg.family == "vlm":
+                params["img_proj"] = dense_init(
+                    keys[3], (cfg.d_frontend, cfg.d_model), dt)
+        return params
+
+    def _init_group(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "rec1": block_init(k1, cfg, "rec", dt),
+            "rec2": block_init(k2, cfg, "rec", dt),
+            "attn": block_init(k3, cfg, "attn", dt),
+        }
+
+    # ------------------------------------------------------------ stacks
+
+    def _scan_train(self, blocks, x, mixer, *, window=None, enc_out=None):
+        cfg = self.cfg
+
+        def body(x, bp):
+            return block_train(bp, x, cfg, mixer, window=window,
+                               enc_out=enc_out)
+
+        body = remat_wrap(body, cfg)
+
+        def scan_body(carry, bp):
+            x, aux = carry
+            x, a = body(x, bp)
+            return (x, aux + a), None
+
+        (x, aux), _ = _maybe_scan(cfg, scan_body,
+                                  (x, jnp.zeros((), jnp.float32)), blocks)
+        return x, aux
+
+    def _scan_train_hybrid(self, params, x):
+        cfg = self.cfg
+
+        def body(x, gp):
+            x, _ = block_train(gp["rec1"], x, cfg, "rec")
+            x, _ = block_train(gp["rec2"], x, cfg, "rec")
+            x, _ = block_train(gp["attn"], x, cfg, "attn",
+                               window=cfg.local_window)
+            return x, jnp.zeros((), jnp.float32)
+
+        body = remat_wrap(body, cfg)
+
+        def scan_body(carry, gp):
+            x, a = body(carry[0], gp)
+            return (x, carry[1] + a), None
+
+        (x, aux), _ = _maybe_scan(
+            cfg, scan_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        if self.n_tail:
+            x, aux2 = self._scan_train(params["tail"], x, "rec")
+            aux = aux + aux2
+        return x, aux
+
+    # ------------------------------------------------------------ forward
+
+    def _embed_decoder_inputs(self, params, batch):
+        """Token/patch embedding for the decoder stack.  Returns
+        (x, n_prefix) where n_prefix positions carry no LM loss."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        if cfg.family == "vlm":
+            proj = params["img_proj"]
+            img = batch["image_embeds"].astype(proj.dtype) @ proj
+            x = jnp.concatenate([img.astype(x.dtype), x], axis=1)
+            return x, cfg.n_image_tokens
+        return x, 0
+
+    def _encode(self, params, frames):
+        """Encoder stack (whisper): frames (B, S_enc, d_frontend)."""
+        cfg = self.cfg
+        proj = params["frontend_proj"]
+        x = frames.astype(proj.dtype) @ proj
+
+        def body(x, bp):
+            x, _ = block_train(bp, x, cfg, "attn", causal=False)
+            return x, None
+
+        x, _ = _maybe_scan(cfg, remat_wrap(body, cfg), x, params["enc_blocks"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        if cfg.vocab_padded != cfg.vocab:
+            # padded unembedding columns (sharding-divisibility padding)
+            # never win: mask without resharding
+            col = jnp.arange(cfg.vocab_padded)
+            logits = jnp.where(col < cfg.vocab, logits, -1e30)
+        return logits
+
+    def forward(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence logits.  batch: dict with 'tokens' (B, S) inputs and
+        family extras ('frames', 'image_embeds').  Returns (logits, aux)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+            x = params["embed"][batch["tokens"]]
+            x, aux = self._scan_train(params["blocks"], x, "attn",
+                                      enc_out=enc_out)
+        elif cfg.family == "hybrid":
+            x, _ = self._embed_decoder_inputs(params, batch)
+            x, aux = self._scan_train_hybrid(params, x)
+        else:
+            x, _ = self._embed_decoder_inputs(params, batch)
+            mixer = _mixer_for_layer(cfg, 0)
+            x, aux = self._scan_train(params["blocks"], x, mixer)
+        x = apply_norm(params["final_norm"], x, cfg)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        """batch['tokens']: (B, S+1) — inputs tokens[:, :-1], labels [:, 1:]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs = dict(batch)
+        inputs["tokens"] = tokens[:, :-1]
+        logits, aux = self.forward(params, inputs)
+        labels = tokens[:, 1:]
+        n_prefix = cfg.n_image_tokens if cfg.family == "vlm" else 0
+        logits = logits[:, n_prefix:, :]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        total = loss + 0.01 * aux
+        return total, {"nll": loss, "aux": aux,
+                       "ppl": jnp.exp(jnp.minimum(loss, 20.0))}
+
+    # ------------------------------------------------------------ cache
+
+    def init_cache(self, batch: int, capacity: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        if cfg.family == "ssm":
+            return ssm_mod.init_ssm_cache(cfg, batch, dt)
+        if cfg.family == "hybrid":
+            # local attention only ever sees the trailing window: ring buffer
+            cap_attn = min(capacity, cfg.local_window)
+            attn_c = attn_mod.init_kv_cache(cfg, batch, cap_attn, dt,
+                                            layers=self.n_groups)
+            rec_c = rglru_mod.init_rglru_cache(cfg, batch, dt,
+                                               layers=self.n_groups)
+            cache = {
+                "groups": {
+                    "rec1": {k: rec_c[k] for k in ("conv", "h")},
+                    "rec2": jax.tree.map(jnp.copy,
+                                         {k: rec_c[k] for k in ("conv", "h")}),
+                    "attn": {k: attn_c[k] for k in ("k", "v")},
+                },
+                "len": jnp.zeros((), jnp.int32),
+            }
+            if self.n_tail:
+                tail_c = rglru_mod.init_rglru_cache(cfg, batch, dt,
+                                                    layers=self.n_tail)
+                cache["tail"] = {k: tail_c[k] for k in ("conv", "h")}
+            return cache
+        if cfg.use_mla:
+            return attn_mod.init_mla_cache(cfg, batch, capacity, dt)
+        cache = attn_mod.init_kv_cache(cfg, batch, capacity, dt)
+        if cfg.family == "encdec":
+            s_enc = capacity  # encoder length bound
+            cache["cross_k"] = jnp.zeros(
+                (cfg.n_layers, batch, s_enc, cfg.n_kv_heads, cfg.hd), dt)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    # ------------------------------------------------------------ prefill
+
+    def prefill(self, params, batch, capacity: int):
+        """Run the prompt, build the decode cache.  Returns (logits_last, cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+            x = params["embed"][batch["tokens"]]
+
+            def body(x, bp):
+                return block_prefill(bp, x, cfg, "attn", capacity,
+                                     enc_out=enc_out)
+
+            x, caches = _maybe_scan(cfg, body, x, params["blocks"])
+            cache = {"k": caches["k"], "v": caches["v"],
+                     "cross_k": caches["cross_k"],
+                     "cross_v": caches["cross_v"],
+                     "len": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+        elif cfg.family == "hybrid":
+            x, _ = self._embed_decoder_inputs(params, batch)
+
+            cap_attn = min(capacity, cfg.local_window)
+
+            def gbody(x, gp):
+                x, c1 = block_prefill(gp["rec1"], x, cfg, "rec", capacity)
+                x, c2 = block_prefill(gp["rec2"], x, cfg, "rec", capacity)
+                x, ca = block_prefill(gp["attn"], x, cfg, "attn", cap_attn,
+                                      window=cfg.local_window, ring=True)
+                return x, {"rec1": c1, "rec2": c2, "attn": ca}
+
+            x, gcaches = _maybe_scan(cfg, gbody, x, params["blocks"])
+            cache = {"groups": gcaches,
+                     "len": jnp.asarray(x.shape[1], jnp.int32)}
+            if self.n_tail:
+                def tbody(x, bp):
+                    return block_prefill(bp, x, cfg, "rec", capacity)
+                x, tcache = _maybe_scan(cfg, tbody, x, params["tail"])
+                cache["tail"] = tcache
+        else:
+            x, n_prefix = self._embed_decoder_inputs(params, batch)
+            mixer = _mixer_for_layer(cfg, 0)
+
+            def body(x, bp):
+                return block_prefill(bp, x, cfg, mixer, capacity)
+
+            x, caches = _maybe_scan(cfg, body, x, params["blocks"])
+            cache = dict(caches)
+            cache["len"] = jnp.asarray(x.shape[1], jnp.int32)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, cache
+
+    # ------------------------------------------------------------ decode
+
+    def decode_step(self, params, cache, tokens, *, return_hidden=False):
+        """One token for every sequence.  tokens: (B, 1).  Returns
+        (logits (B, 1, V), new cache) — or (hidden (B, 1, d), new cache)
+        with ``return_hidden=True`` (the GAM-head path: no vocab matmul)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        cur = cache["len"]
+        if cfg.family == "hybrid":
+            def gbody(x, xs):
+                gp, gc = xs
+
+                def run(name, kind, x, window=None, ring=False):
+                    lc = dict(gc[name])
+                    lc["len"] = cur
+                    xo, nc = block_decode(gp[name], x, cfg, kind, lc,
+                                          window=window, ring=ring)
+                    nc.pop("len", None)
+                    return xo, nc
+
+                x, c1 = run("rec1", "rec", x)
+                x, c2 = run("rec2", "rec", x)
+                x, ca = run("attn", "attn", x, window=cfg.local_window,
+                            ring=True)
+                return x, {"rec1": c1, "rec2": c2, "attn": ca}
+
+            x, groups = _maybe_scan(cfg, gbody, x, (params["blocks"],
+                                                    cache["groups"]))
+            new_cache = {"groups": groups, "len": cur + 1}
+            if self.n_tail:
+                def tbody(x, xs):
+                    bp, lc = xs
+                    lc = dict(lc)
+                    lc["len"] = cur
+                    xo, nc = block_decode(bp, x, cfg, "rec", lc)
+                    nc.pop("len", None)
+                    return xo, nc
+                x, tail = _maybe_scan(cfg, tbody, x, (params["tail"],
+                                                      cache["tail"]))
+                new_cache["tail"] = tail
+        else:
+            mixer = _mixer_for_layer(cfg, 0)
+            layer_keys = [k for k in cache if k not in ("len",)]
+
+            def body(x, xs):
+                bp, lc = xs
+                lc = dict(lc)
+                lc["len"] = cur
+                enc_kv = None
+                if cfg.family == "encdec":
+                    enc_kv = (lc.pop("cross_k"), lc.pop("cross_v"))
+                xo, nc = block_decode(bp, x, cfg, mixer, lc, enc_kv=enc_kv)
+                nc.pop("len", None)
+                if cfg.family == "encdec":
+                    nc["cross_k"], nc["cross_v"] = enc_kv
+                return xo, nc
+
+            x, new_layers = _maybe_scan(
+                cfg, body, x, (params["blocks"],
+                               {k: cache[k] for k in layer_keys}))
+            new_cache = dict(new_layers)
+            new_cache["len"] = cur + 1
+        x = apply_norm(params["final_norm"], x, cfg)
+        if return_hidden:
+            return x, new_cache
+        return self._logits(params, x), new_cache

@@ -1,0 +1,98 @@
+"""Mixture-of-experts FFN with top-k routing.
+
+Dispatch is sort-based with a per-expert capacity (GShard/Switch style): the
+(token, slot) pairs are ranked within their expert by router probability via a
+single argsort, tokens beyond capacity are dropped (standard capacity-factor
+semantics), experts run as one batched einsum over (E, C, d) tiles.  Expert
+weights are stacked on a leading E axis so the sharding rules can lay experts
+across the ``model`` mesh axis (expert parallelism) — GSPMD then inserts the
+all-to-all around the dispatch gather/scatter.
+
+Includes DeepSeek-style shared experts (always-on) and the auxiliary
+load-balance loss from Switch Transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, swiglu, swiglu_init
+
+__all__ = ["moe_init", "moe_ffn"]
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, ffe ** -0.5
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=s_in),
+        "gate": dense_init(ks[1], (e, d, ffe), dtype, scale=s_in),
+        "up": dense_init(ks[2], (e, d, ffe), dtype, scale=s_in),
+        "down": dense_init(ks[3], (e, ffe, d), dtype, scale=s_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, cfg.n_shared_experts * ffe, dtype)
+    return p
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.ravel()].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(max(1, cfg.capacity_factor * t * k / e))
+    flat_expert = expert_idx.reshape(-1)                       # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+
+    # rank each (token, slot) within its expert: sort by (expert, -gate)
+    sort_key = flat_expert.astype(jnp.float32) * 2.0 - flat_gate / (
+        jnp.max(flat_gate) + 1e-9
+    )
+    # routing order is piecewise-constant in the inputs: no gradient flows
+    # through argsort itself (and sort_key_val's AD rule trips a jaxlib skew)
+    order = jnp.argsort(jax.lax.stop_gradient(sort_key))
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert = running index - first index of that expert
+    idx = jnp.arange(t * k)
+    is_start = jnp.concatenate([jnp.ones(1, bool), se[1:] != se[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, -1))
+    pos_in_expert = idx - seg_start
+    keep = pos_in_expert < capacity
+
+    # scatter tokens into (E, C, d) tiles
+    slot = jnp.where(keep, se * capacity + pos_in_expert, e * capacity)
+    dispatch = jnp.zeros((e * capacity + 1, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xt[st], 0).astype(x.dtype)
+    )[:-1].reshape(e, capacity, d)
+
+    hg = jnp.einsum("ecd,edf->ecf", dispatch, params["gate"])
+    hu = jnp.einsum("ecd,edf->ecf", dispatch, params["up"])
+    ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu, params["down"])
+
+    # gather back with gate weights
+    gathered = ho.reshape(e * capacity, d)[jnp.where(keep, se * capacity
+                                                     + pos_in_expert, 0)]
+    contrib = jnp.where(keep[:, None], gathered * sg[:, None].astype(x.dtype), 0)
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+
+    if cfg.n_shared_experts:
+        out = out + swiglu(params["shared"], xt)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,106 @@
+"""RecurrentGemma building blocks (arXiv:2402.19427): the RG-LRU recurrent
+block and its gated temporal-mixing wrapper.
+
+Recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)), c = 8.
+Train/prefill evaluates it with an associative scan (log-depth on TPU);
+decode is a single fused step.  The temporal block is: two linear branches,
+a causal conv1d (kernel 4) + RG-LRU on one, GeLU gate on the other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["rglru_init", "rglru_train", "rglru_decode", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c in [0.9, 0.999] roughly (paper's init range)
+    lam = jnp.linspace(0.9, 0.999, w)
+    lam_param = jnp.log(jnp.expm1(-jnp.log(lam) / _C))   # softplus inverse
+    return {
+        "in_x": dense_init(ks[0], (d, w), dtype),
+        "in_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, w), dtype,
+                             scale=cfg.conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (w, w), dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam_param.astype(jnp.float32),
+        "out": dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _gates(params, x):
+    """a_t (log-space) and input gate for RG-LRU.  x: (..., W) post-conv."""
+    ra = jax.nn.sigmoid((x @ params["w_a"]).astype(jnp.float32) + params["b_a"])
+    ri = jax.nn.sigmoid((x @ params["w_i"]).astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * ra    # (..., W), < 0
+    return log_a, ri
+
+
+def _conv(params, x, cfg: ModelConfig):
+    k = cfg.conv_kernel
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(
+        pad[:, i : i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
+    ) + params["conv_b"]
+
+
+def rglru_train(params, u, cfg: ModelConfig, *, return_state=False):
+    """Full-sequence recurrent block.  u: (B, L, d)."""
+    b, l, _ = u.shape
+    x = _conv(params, u @ params["in_x"], cfg)            # (B, L, W)
+    gate = jax.nn.gelu((u @ params["in_gate"]).astype(jnp.float32))
+    log_a, ri = _gates(params, x)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    v = beta * ri * x.astype(jnp.float32)                 # gated input
+
+    # associative scan over (a, v): h_t = a_t h_{t-1} + v_t
+    def combine(left, right):
+        a_l, v_l = left
+        a_r, v_r = right
+        return a_l * a_r, v_l * a_r + v_r
+
+    _, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+    out = (h * gate).astype(u.dtype) @ params["out"]
+    if return_state:
+        k = cfg.conv_kernel
+        conv_tail = (u @ params["in_x"])[:, -(k - 1):, :]
+        return out, (conv_tail, h[:, -1, :])
+    return out
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype, layers: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((layers, batch, cfg.conv_kernel - 1, w), dtype),
+        "h": jnp.zeros((layers, batch, w), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_decode(params, u, cfg: ModelConfig, layer_cache: dict):
+    """One-token decode.  u: (B, 1, d); cache conv (B, K-1, W), h (B, W)."""
+    x_new = u @ params["in_x"]                            # (B, 1, W)
+    window = jnp.concatenate([layer_cache["conv"], x_new], axis=1)
+    x = jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"]
+    gate = jax.nn.gelu((u[:, 0] @ params["in_gate"]).astype(jnp.float32))
+    log_a, ri = _gates(params, x)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * layer_cache["h"] + beta * ri * x.astype(jnp.float32)
+    out = ((h * gate).astype(u.dtype) @ params["out"])[:, None, :]
+    return out, {"conv": window[:, 1:, :], "h": h, "len": layer_cache["len"]}

@@ -1,0 +1,191 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+Train/prefill runs the chunked SSD algorithm: quadratic attention-like compute
+inside chunks of length Q (MXU-friendly einsums) and a linear ``lax.scan``
+carrying the (H, P, N) state across chunks — exactly the paper's decomposition
+Y = intra-chunk + inter-chunk.  Decode is a constant-time state update: the
+roofline win vs attention for the long-context shapes.
+
+Layout: x (B, L, H, P) with H = d_inner / head_dim heads; B/C (B, L, G, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["ssm_init", "ssm_train", "ssm_decode", "init_ssm_cache"]
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = _conv_channels(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_ch), dtype,
+                             scale=cfg.conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d), dtype),
+    }
+
+
+def _split_in_proj(params, u, cfg: ModelConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _gated_out(params, y, z, cfg: ModelConfig):
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    yz = yz * jax.lax.rsqrt(jnp.mean(yz * yz, -1, keepdims=True) + 1e-6)
+    yz = yz * params["norm"].astype(jnp.float32)
+    return yz.astype(z.dtype) @ params["out_proj"]
+
+
+def _causal_conv(params, xbc, cfg: ModelConfig):
+    """Depthwise causal conv1d, kernel K, over (B, L, C) channels."""
+    k = cfg.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * params["conv_w"][i] for i in range(k)
+    )
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, cfg: ModelConfig, s0=None):
+    """Chunked SSD.  x (B,L,H,P), dt (B,L,H), a (H,), b/c (B,L,G,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    q = min(cfg.ssm_chunk, l)
+    if l % q:
+        q = l
+    nc = l // q
+    hpg = h // g
+
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = b_mat.reshape(bsz, nc, q, g, n)
+    cr = c_mat.reshape(bsz, nc, q, g, n)
+
+    dta = dtr * a                                        # (B,nc,Q,H)
+    cum = jnp.cumsum(dta, axis=2)
+    # intra-chunk: scores[i,j] = (C_i.B_j) * exp(cum_i - cum_j) * dt_j, j<=i
+    cb = jnp.einsum("bcqgn,bcsgn->bcqsg", cr, br)        # (B,nc,Q,Q,G)
+    cb = jnp.repeat(cb, hpg, axis=-1)                    # -> heads (B,nc,Q,Q,H)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.where(tril[None, None, :, :, None],
+                       cb * decay * dtr[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores, xr)
+
+    # per-chunk outgoing state: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j (x) x_j
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtr           # (B,nc,Q,H)
+    b_heads = jnp.repeat(br, hpg, axis=3)                # (B,nc,Q,H,N)
+    s_local = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, b_heads, xr)
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(jnp.sum(dta, axis=2))          # (B,nc,H)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(s, inp):
+        dec, sl = inp
+        s_new = s * dec[:, :, None, None] + sl
+        return s_new, s
+
+    (s_final, s_prevs) = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,P,N)
+
+    c_heads = jnp.repeat(cr, hpg, axis=3)                # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         c_heads * jnp.exp(cum)[..., None], s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y, s_final
+
+
+def ssm_train(params, u, cfg: ModelConfig, *, return_state=False):
+    """Full-sequence Mamba-2 block.  u: (B, L, d) -> (B, L, d)."""
+    bsz, l, _ = u.shape
+    di, g, n, h, p = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    z, xbc, dt = _split_in_proj(params, u, cfg)
+    xbc = _causal_conv(params, xbc, cfg)
+    x = xbc[..., :di].reshape(bsz, l, h, p)
+    b_mat = xbc[..., di : di + g * n].reshape(bsz, l, g, n)
+    c_mat = xbc[..., di + g * n :].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y, s_final = _ssd_chunked(x.astype(jnp.float32), dt, a,
+                              b_mat.astype(jnp.float32),
+                              c_mat.astype(jnp.float32), cfg)
+    y = y + x.astype(jnp.float32) * params["d_skip"][:, None]
+    out = _gated_out(params, y.reshape(bsz, l, di), z, cfg)
+    if return_state:
+        return out, (xbc_raw_tail(params, u, cfg), s_final)
+    return out
+
+
+def xbc_raw_tail(params, u, cfg: ModelConfig):
+    """Last (K-1) pre-conv inputs — the conv cache at the end of prefill."""
+    _, xbc, _ = _split_in_proj(params, u, cfg)
+    k = cfg.conv_kernel
+    return xbc[:, -(k - 1):, :]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype,
+                   layers: int | None = None) -> dict:
+    l = cfg.n_layers if layers is None else layers
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, _conv_channels(cfg)),
+                          dtype),
+        "ssm": jnp.zeros((l, batch, h, p, n), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode(params, u, cfg: ModelConfig, layer_cache: dict):
+    """One-token decode.  u: (B, 1, d).  Cache: conv (B,K-1,C), ssm (B,H,P,N)."""
+    bsz = u.shape[0]
+    di, g, n, h, p = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    z, xbc_new, dt = _split_in_proj(params, u, cfg)     # (B,1,*)
+    window = jnp.concatenate([layer_cache["conv"], xbc_new], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(conv_out + params["conv_b"])       # (B,C)
+    x = xbc[:, :di].reshape(bsz, h, p)
+    b_mat = xbc[:, di : di + g * n].reshape(bsz, g, n)
+    c_mat = xbc[:, di + g * n :].reshape(bsz, g, n)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt1 * a)                                # (B,H)
+    hpg = h // g
+    b_heads = jnp.repeat(b_mat, hpg, axis=1)             # (B,H,N)
+    c_heads = jnp.repeat(c_mat, hpg, axis=1)
+    s = layer_cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt1, x.astype(jnp.float32),
+        b_heads.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", s, c_heads.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["d_skip"][:, None]
+    out = _gated_out(params, y.reshape(bsz, 1, di), z, cfg)
+    return out, {"conv": window[:, 1:, :], "ssm": s, "len": layer_cache["len"]}

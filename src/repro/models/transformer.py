@@ -1,0 +1,183 @@
+"""Layer blocks and their stacked (scan-over-layers) assembly.
+
+Every architecture family is expressed as a stack of homogeneous blocks that
+``jax.lax.scan`` iterates over stacked parameters (leading L axis) — this
+bounds trace size and compile time for the 95-layer dry-run configs.  The
+hybrid family scans period-3 groups (rec, rec, attn) per RecurrentGemma.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, norm_init, swiglu, swiglu_init
+
+__all__ = ["block_init", "block_train", "block_decode", "stack_init",
+           "remat_wrap", "MIXERS"]
+
+MIXERS = ("attn", "mla", "ssm", "rec")
+
+
+def _mixer_for_layer(cfg: ModelConfig, layer: int) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "rec" if layer % 3 != 2 else "attn"
+    if cfg.use_mla:
+        return "mla"
+    return "attn"
+
+
+# ------------------------------------------------------------------ block
+
+
+def block_init(key, cfg: ModelConfig, mixer: str, dtype, *,
+               cross: bool = False) -> dict:
+    ks = jax.random.split(key, 5)
+    p: dict = {"norm1": norm_init(cfg, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    elif mixer == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        return p                                 # mamba2: no separate MLP
+    elif mixer == "rec":
+        p["rec"] = rglru_mod.rglru_init(ks[0], cfg, dtype)
+    if cross:
+        p["norm_x"] = norm_init(cfg, dtype)
+        p["cross"] = attn.cross_attn_init(ks[2], cfg, dtype)
+    p["norm2"] = norm_init(cfg, dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_train(params, x, cfg: ModelConfig, mixer: str, *, causal=True,
+                window=None, enc_out=None):
+    """Pre-norm residual block, full sequence.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg)
+    if mixer == "attn":
+        h = attn.attention_train(params["attn"], h, cfg, causal=causal,
+                                 window=window)
+    elif mixer == "mla":
+        h = attn.mla_train(params["attn"], h, cfg, window=window)
+    elif mixer == "ssm":
+        return x + ssm_mod.ssm_train(params["ssm"], h, cfg), aux
+    elif mixer == "rec":
+        h = rglru_mod.rglru_train(params["rec"], h, cfg)
+    x = x + h
+    if enc_out is not None and "cross" in params:
+        h = apply_norm(params["norm_x"], x, cfg)
+        enc_kv = attn.encode_kv(params["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(params["cross"], h, enc_kv, cfg)
+    h = apply_norm(params["norm2"], x, cfg)
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        h = swiglu(params["mlp"], h)
+    return x + h, aux
+
+
+def block_prefill(params, x, cfg: ModelConfig, mixer: str, capacity: int, *,
+                  window=None, enc_out=None, ring=False):
+    """Full-sequence forward that also emits the block's decode cache
+    (padded to ``capacity``; ring layout places position p at slot
+    p % capacity, keeping the trailing window).  Returns (x, cache_slice)."""
+    s = x.shape[1]
+    h = apply_norm(params["norm1"], x, cfg)
+    cache: dict = {}
+
+    def pad_seq(arr):
+        if ring:
+            m = min(s, capacity)
+            tail = arr[:, s - m:]
+            slots = jnp.arange(s - m, s) % capacity
+            out = jnp.zeros(arr.shape[:1] + (capacity,) + arr.shape[2:],
+                            arr.dtype)
+            return out.at[:, slots].set(tail)
+        return jnp.pad(arr, [(0, 0), (0, capacity - s)] +
+                       [(0, 0)] * (arr.ndim - 2))
+
+    if mixer == "attn":
+        h, (k, v) = attn.attention_train(params["attn"], h, cfg,
+                                         window=window, return_kv=True)
+        cache = {"k": pad_seq(k), "v": pad_seq(v)}
+    elif mixer == "mla":
+        h, (c_kv, k_rope) = attn.mla_train(params["attn"], h, cfg,
+                                           window=window, return_latent=True)
+        cache = {"c_kv": pad_seq(c_kv), "k_rope": pad_seq(k_rope)}
+    elif mixer == "ssm":
+        h, (conv_tail, s_final) = ssm_mod.ssm_train(params["ssm"], h, cfg,
+                                                    return_state=True)
+        return x + h, {"conv": conv_tail, "ssm": s_final}
+    elif mixer == "rec":
+        h, (conv_tail, h_last) = rglru_mod.rglru_train(params["rec"], h, cfg,
+                                                       return_state=True)
+        cache = {"conv": conv_tail, "h": h_last}
+    x = x + h
+    if enc_out is not None and "cross" in params:
+        hx = apply_norm(params["norm_x"], x, cfg)
+        enc_kv = attn.encode_kv(params["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(params["cross"], hx, enc_kv, cfg)
+        cache["cross_k"], cache["cross_v"] = enc_kv
+    h = apply_norm(params["norm2"], x, cfg)
+    if cfg.family == "moe":
+        h, _ = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        h = swiglu(params["mlp"], h)
+    return x + h, cache
+
+
+def block_decode(params, x, cfg: ModelConfig, mixer: str, cache: dict, *,
+                 window=None, enc_kv=None, ring=False):
+    """One-token decode through a block.  Returns (x, new_cache)."""
+    h = apply_norm(params["norm1"], x, cfg)
+    if mixer == "attn":
+        h, cache = attn.attention_decode(params["attn"], h, cfg, cache,
+                                         window=window, ring=ring)
+    elif mixer == "mla":
+        h, cache = attn.mla_decode(params["attn"], h, cfg, cache,
+                                   window=window)
+    elif mixer == "ssm":
+        h, cache = ssm_mod.ssm_decode(params["ssm"], h, cfg, cache)
+        return x + h, cache
+    elif mixer == "rec":
+        h, cache = rglru_mod.rglru_decode(params["rec"], h, cfg, cache)
+    x = x + h
+    if enc_kv is not None and "cross" in params:
+        h = apply_norm(params["norm_x"], x, cfg)
+        x = x + attn.cross_attention(params["cross"], h, enc_kv, cfg)
+    h = apply_norm(params["norm2"], x, cfg)
+    if cfg.family == "moe":
+        h, _ = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        h = swiglu(params["mlp"], h)
+    return x + h, cache
+
+
+def stack_init(key, cfg: ModelConfig, mixer: str, n: int, dtype, *,
+               cross: bool = False) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(
+        lambda k: block_init(k, cfg, mixer, dtype, cross=cross)
+    )(keys)
+
+
+def remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn

@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, GenerationResult, ServeConfig
+from repro.serving.gam_head import GamHead

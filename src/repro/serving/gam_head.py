@@ -1,0 +1,88 @@
+"""GAM-accelerated LM head: the paper's technique as a first-class serving
+feature.
+
+At decode time the LM head computes ``hidden . E_v`` for every vocabulary row
+v — exactly the paper's inner-product retrieval problem with N = vocab and
+k = d_model.  GamHead tessellates the (unit-normalised) output-embedding rows
+offline, builds the inverted index once per checkpoint, and per step:
+
+  1. maps the hidden state with phi (Algorithm 2 + parse-tree permutation),
+  2. pulls candidate vocab ids from the inverted index (>= min_overlap
+     pattern intersections),
+  3. computes exact logits ONLY on candidates (gam_score kernel) and returns
+     the top-kappa — every non-candidate row is discarded unscored, the
+     paper's 1/(1-eta) speed-up.
+
+``exact=True`` falls back to the full matmul (used for the accuracy
+comparisons in benchmarks/).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inverted_index import DeviceIndex
+from repro.core.mapping import GamConfig, sparse_map
+from repro.kernels.ops import gam_score
+
+__all__ = ["GamHead"]
+
+
+@dataclasses.dataclass
+class GamHead:
+    cfg: GamConfig
+    index: DeviceIndex
+    embed: jax.Array            # (V, d) unembedding rows (row-normalised copy
+    raw_embed: jax.Array        #  used for the index; raw used for logits)
+    min_overlap: int = 2
+
+    @staticmethod
+    def build(embed: jax.Array, *, scheme: str = "parse_tree",
+              threshold: float = 1.5, min_overlap: int = 2,
+              bucket: int = 512) -> "GamHead":
+        """``embed``: (V, d) output-embedding matrix (lm_head.T or tied).
+
+        ``threshold`` is RMS-relative: a coordinate participates in the
+        sparsity pattern iff |z_j| >= threshold / sqrt(d) on the unit sphere
+        (so the knob is dimension-independent)."""
+        v, d = embed.shape
+        cfg = GamConfig(k=d, scheme=scheme, threshold=threshold / d ** 0.5)
+        rows = np.asarray(embed, np.float32)
+        norm = rows / (np.linalg.norm(rows, axis=1, keepdims=True) + 1e-9)
+        tau, vals = sparse_map(jnp.asarray(norm), cfg)
+        mask = np.asarray(vals) != 0.0
+        index = DeviceIndex.build(np.asarray(tau), cfg.p, bucket, mask=mask)
+        return GamHead(cfg=cfg, index=index,
+                       embed=jnp.asarray(norm),
+                       raw_embed=jnp.asarray(rows),
+                       min_overlap=min_overlap)
+
+    def candidates(self, hidden: jax.Array) -> jax.Array:
+        """hidden: (B, d) -> (B, V) bool candidate masks."""
+        h = hidden.astype(jnp.float32)
+        h = h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-9)
+        tau, vals = sparse_map(h, self.cfg)
+        return self.index.batch_candidate_mask(
+            tau, self.min_overlap, vals != 0.0)
+
+    def topk(self, hidden: jax.Array, kappa: int, *, exact: bool = False):
+        """hidden: (B, d) -> (values (B, kappa) f32, ids (B, kappa) i32).
+
+        Exact scores on the candidate set; discarded rows never scored.
+        """
+        h = hidden.astype(jnp.float32)
+        if exact:
+            logits = h @ self.raw_embed.T
+            vals, ids = jax.lax.top_k(logits, kappa)
+            return vals, ids.astype(jnp.int32), None
+        mask = self.candidates(hidden)
+        scores = gam_score(h, self.raw_embed, mask)
+        vals, ids = jax.lax.top_k(scores, kappa)
+        return vals, ids.astype(jnp.int32), mask
+
+    def discard_fraction(self, hidden: jax.Array) -> jax.Array:
+        mask = self.candidates(hidden)
+        return 1.0 - jnp.mean(mask.astype(jnp.float32), axis=-1)

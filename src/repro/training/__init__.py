@@ -1,0 +1,5 @@
+from repro.training.evaluate import EvalResult, eval_batches
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_schedule,
+    global_norm, sgd_update,
+)

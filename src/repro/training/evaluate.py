@@ -1,0 +1,55 @@
+"""Evaluation harness: held-out perplexity + next-token accuracy.
+
+Used by the trainer (--eval-every) and integration tests; operates on the
+same batch dicts as Model.loss, jit'd once per shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+__all__ = ["eval_batches", "EvalResult"]
+
+
+def _eval_step(model: Model, params, batch):
+    tokens = batch["tokens"]
+    inputs = dict(batch)
+    inputs["tokens"] = tokens[:, :-1]
+    logits, _ = model.forward(params, inputs)
+    labels = tokens[:, 1:]
+    n_prefix = (model.cfg.n_image_tokens
+                if model.cfg.family == "vlm" else 0)
+    logits = logits[:, n_prefix:, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(acc), nll.size
+
+
+class EvalResult(dict):
+    @property
+    def ppl(self):
+        return self["ppl"]
+
+
+def eval_batches(model: Model, params, batches) -> EvalResult:
+    """batches: iterable of batch dicts.  Returns ppl / nll / top-1 acc."""
+    step = jax.jit(partial(_eval_step, model))
+    tot_nll, tot_acc, n = 0.0, 0.0, 0
+    for batch in batches:
+        s_nll, s_acc, cnt = step(params, batch)
+        tot_nll += float(s_nll)
+        tot_acc += float(s_acc)
+        n += int(cnt)
+    nll = tot_nll / max(n, 1)
+    return EvalResult(
+        nll=nll,
+        ppl=float(np.exp(min(nll, 30.0))),
+        top1_acc=tot_acc / max(n, 1),
+        n_tokens=n,
+    )

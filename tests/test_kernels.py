@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.gam_score import gam_score
+from repro.kernels.tess_project import tess_project
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------- gam_score
+
+
+@pytest.mark.parametrize("q,n,k", [(4, 64, 8), (128, 512, 16), (37, 1000, 10),
+                                   (1, 2048, 64), (130, 513, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gam_score_matches_ref(q, n, k, dtype):
+    r = _rng(q * n + k)
+    u = jnp.asarray(r.normal(size=(q, k)), dtype)
+    v = jnp.asarray(r.normal(size=(n, k)), dtype)
+    mask = jnp.asarray(r.random((q, n)) < 0.3)
+    got = gam_score(u, v, mask, bq=32, bn=128, interpret=True)
+    want = ref.gam_score_ref(u, v, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_gam_score_masked_slots_are_neg():
+    r = _rng(0)
+    u = jnp.asarray(r.normal(size=(8, 4)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(16, 4)), jnp.float32)
+    mask = jnp.zeros((8, 16), bool)
+    got = np.asarray(gam_score(u, v, mask, bq=8, bn=16, interpret=True))
+    assert (got <= -1e29).all()
+
+
+# ------------------------------------------------------- decode_attention
+
+
+@pytest.mark.parametrize("b,hkv,g,hd,s", [
+    (1, 1, 1, 32, 64), (2, 2, 4, 64, 128), (3, 1, 8, 64, 100),
+    (2, 4, 2, 128, 257), (1, 2, 16, 64, 1024),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, hkv, g, hd, s, dtype):
+    r = _rng(b * s + hd)
+    q = jnp.asarray(r.normal(size=(b, hkv, g, hd)), dtype)
+    k = jnp.asarray(r.normal(size=(b, s, hkv, hd)), dtype)
+    v = jnp.asarray(r.normal(size=(b, s, hkv, hd)), dtype)
+    length = jnp.asarray(s - 2, jnp.int32)
+    got = decode_attention(q, k, v, length, bs=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_length_mask():
+    """Changing K/V beyond `length` must not change the output."""
+    r = _rng(7)
+    b, hkv, g, hd, s = 2, 1, 2, 32, 96
+    q = jnp.asarray(r.normal(size=(b, hkv, g, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, s, hkv, hd)), jnp.float32)
+    length = jnp.asarray(40, jnp.int32)
+    out1 = decode_attention(q, k, v, length, bs=32, interpret=True)
+    k2 = k.at[:, 41:].set(99.0)
+    v2 = v.at[:, 41:].set(-99.0)
+    out2 = decode_attention(q, k2, v2, length, bs=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------- tess_project
+
+
+@pytest.mark.parametrize("b,k", [(4, 8), (100, 16), (257, 10), (32, 64),
+                                 (1, 12)])
+def test_tess_project_matches_alg2(b, k):
+    r = _rng(b + k)
+    z = jnp.asarray(r.normal(size=(b, k)), jnp.float32)
+    pat, a = tess_project(z, bb=64, interpret=True)
+    pat_ref, a_ref = ref.tess_project_ref(z)
+    np.testing.assert_array_equal(np.asarray(pat), np.asarray(pat_ref))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), atol=1e-5)
+
+
+def test_tess_project_scale_invariant():
+    r = _rng(3)
+    z = jnp.asarray(r.normal(size=(16, 12)), jnp.float32)
+    p1, _ = tess_project(z, interpret=True)
+    p2, _ = tess_project(z * 37.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ----------------------------------------------------------- gam_coarse
+
+
+@pytest.mark.parametrize("b,d,v", [(1, 64, 500), (4, 128, 4096),
+                                   (8, 32, 100), (2, 256, 2049)])
+def test_gam_coarse_matches_ref(b, d, v):
+    from repro.kernels.gam_coarse import gam_coarse
+    r = _rng(b * d + v)
+    h = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    pat = jnp.asarray(r.integers(-1, 2, size=(d, v)), jnp.int8)
+    nnz = jnp.asarray(np.abs(np.asarray(pat)).sum(0), jnp.float32)
+    inv = 1.0 / jnp.sqrt(jnp.maximum(nnz, 1.0))
+    got = gam_coarse(h, pat, inv, bv=512, interpret=True)
+    want = ref.gam_coarse_ref(h, pat, inv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- flash_prefill
+
+
+@pytest.mark.parametrize("b,s,hkv,g,hd", [
+    (1, 64, 1, 1, 32), (2, 128, 2, 4, 64), (1, 96, 1, 8, 64),
+    (2, 256, 4, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_matches_ref(b, s, hkv, g, hd, dtype):
+    from repro.kernels.flash_prefill import flash_prefill
+    r = _rng(b * s + hd + g)
+    q = jnp.asarray(r.normal(size=(b, s, hkv, g, hd)), dtype)
+    k = jnp.asarray(r.normal(size=(b, s, hkv, hd)), dtype)
+    v = jnp.asarray(r.normal(size=(b, s, hkv, hd)), dtype)
+    got = flash_prefill(q, k, v, bq=32, bk=32, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_prefill_is_causal():
+    from repro.kernels.flash_prefill import flash_prefill
+    r = _rng(11)
+    b, s, hkv, g, hd = 1, 64, 1, 2, 32
+    q = jnp.asarray(r.normal(size=(b, s, hkv, g, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, s, hkv, hd)), jnp.float32)
+    out1 = flash_prefill(q, k, v, bq=16, bk=16, interpret=True)
+    # poisoning the future must not change the first half's outputs
+    k2 = k.at[:, 40:].set(77.0)
+    v2 = v.at[:, 40:].set(-77.0)
+    out2 = flash_prefill(q, k2, v2, bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :40]),
+                               np.asarray(out2[:, :40]), atol=1e-6)

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.inverted_index import InvertedIndex
+from repro.core.mapping import GamConfig, densify, sparse_map
+from repro.core.tessellation import ternary_pattern, tess_vector
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1),
+       st.sampled_from(["one_hot", "parse_tree"]))
+def test_phi_is_norm_preserving_injective_placement(k, seed, scheme):
+    """phi is a permutation of the zero-padded factor: norms and multisets of
+    values are preserved, destinations are distinct."""
+    z = np.random.default_rng(seed).normal(size=(4, k)).astype(np.float32)
+    z /= np.linalg.norm(z, axis=1, keepdims=True)
+    cfg = GamConfig(k=k, scheme=scheme)
+    tau, vals = sparse_map(jnp.asarray(z), cfg)
+    tau, vals = np.asarray(tau), np.asarray(vals)
+    for i in range(4):
+        assert len(set(tau[i].tolist())) == k
+        assert tau[i].min() >= 0 and tau[i].max() < cfg.p
+    np.testing.assert_allclose(np.linalg.norm(vals, axis=1), 1.0, atol=1e-5)
+    dense = np.asarray(densify(jnp.asarray(tau), jnp.asarray(vals), cfg.p))
+    np.testing.assert_allclose(np.linalg.norm(dense, axis=1), 1.0, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2**31 - 1))
+def test_self_retrieval_completeness(k, seed):
+    """Every item is always a candidate for its own pattern (min_overlap=1):
+    the index never loses an item entirely."""
+    z = np.random.default_rng(seed).normal(size=(50, k)).astype(np.float32)
+    cfg = GamConfig(k=k, scheme="parse_tree")
+    tau, _ = sparse_map(jnp.asarray(z), cfg)
+    tau = np.asarray(tau)
+    idx = InvertedIndex(tau, cfg.p)
+    for i in (0, 13, 49):
+        ids, ov = idx.query(tau[i])
+        assert i in ids
+        assert ov[list(ids).index(i)] == k  # full self-overlap
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_tessellation_is_idempotent(k, seed):
+    """a_z is a fixed point: tess(tess(z)) == tess(z)."""
+    z = np.random.default_rng(seed).normal(size=(8, k)).astype(np.float32)
+    a1 = np.asarray(tess_vector(jnp.asarray(z)))
+    a2 = np.asarray(tess_vector(jnp.asarray(a1)))
+    np.testing.assert_allclose(a1, a2, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_pattern_negation_antisymmetry(k, seed):
+    """ternary_pattern(-z) == -ternary_pattern(z): tiles are antipodal."""
+    z = np.random.default_rng(seed).normal(size=(8, k)).astype(np.float32)
+    p1 = np.asarray(ternary_pattern(jnp.asarray(z)))
+    p2 = np.asarray(ternary_pattern(jnp.asarray(-z)))
+    np.testing.assert_array_equal(p1, -p2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-4, 1e-1))
+def test_adamw_update_is_bounded(seed, lr):
+    """Per-step parameter movement is bounded by ~lr (Adam's trust-region
+    property) regardless of gradient scale."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=8).astype(np.float32))}
+    grads = {"w": jnp.asarray((rng.normal(size=8) * 1e6).astype(np.float32))}
+    cfg = AdamWConfig(lr=lr, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0, clip_norm=1e30)
+    state = adamw_init(params)
+    new, _, _ = adamw_update(cfg, grads, state, params)
+    delta = np.abs(np.asarray(new["w"]) - np.asarray(params["w"]))
+    # first step: mhat/sqrt(vhat) == g/|g| elementwise => |delta| <= ~lr
+    assert (delta <= 1.01 * lr * 10).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_model_logits_permutation_equivariance(seed):
+    """Permuting batch rows permutes logits identically (no cross-sequence
+    leakage through the stack, incl. MoE dispatch)."""
+    from repro.configs.registry import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config("olmoe-1b-7b").with_(vocab=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, 64, (4, 16))
+    perm = rng.permutation(4)
+    out1, _ = model.forward(params, {"tokens": jnp.asarray(tokens)})
+    out2, _ = model.forward(params, {"tokens": jnp.asarray(tokens[perm])})
+    np.testing.assert_allclose(np.asarray(out1)[perm], np.asarray(out2),
+                               rtol=2e-2, atol=2e-3)

@@ -1,0 +1,74 @@
+"""Unit tests for dry-run/roofline machinery that need no big compiles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.dryrun import collective_bytes
+from repro.launch.roofline import model_flops
+from repro.launch.steps import (
+    decode_text_len, input_specs, shape_adapted_config,
+)
+
+HLO = """
+  %ar = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={}
+  %ag.1 = bf16[16,1024] all-gather(bf16[16,64] %y), dimensions={1}
+  %cp = f32[8] collective-permute(f32[8] %z), source_target_pairs={{0,1}}
+  %a2a = (s32[4,4]) all-to-all(s32[4,4] %w)
+  %dot = f32[128,256] dot(f32[128,64] %a, f32[64,256] %b)
+  %rs = bf16[2,2] reduce-scatter(bf16[4,2] %q), dimensions={0}
+"""
+
+
+def test_collective_bytes_parser():
+    got = collective_bytes(HLO)
+    assert got["all-reduce"] == 128 * 256 * 4
+    assert got["all-gather"] == 16 * 1024 * 2
+    assert got["collective-permute"] == 8 * 4
+    assert got["all-to-all"] == 4 * 4 * 4
+    assert got["reduce-scatter"] == 2 * 2 * 2
+    assert "dot" not in got and len(got) == 5
+
+
+def test_vocab_padding_rule():
+    assert get_config("mamba2-780m").vocab_padded % 512 == 0
+    assert get_config("internvl2-26b").vocab_padded % 512 == 0
+    assert get_config("deepseek-67b").vocab_padded == 102_400  # already /512
+    assert get_config("olmo-1b").vocab_padded == 50_688        # 50304 -> pad
+    small = get_config("olmo-1b").with_(vocab=256)
+    assert small.vocab_padded == 256                          # tiny: no pad
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg = shape_adapted_config(get_config(arch), SHAPES[shape])
+    sh = SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    b = sh.global_batch
+    t = decode_text_len(cfg, sh.seq_len)
+    extra = 1 if sh.kind == "train" else 0
+    assert specs["tokens"].shape == (b, t + extra)
+    assert str(specs["tokens"].dtype) == "int32"
+    if cfg.family == "encdec":
+        assert specs["frames"].shape == (b, sh.seq_len, cfg.d_frontend)
+    if cfg.family == "vlm":
+        assert specs["image_embeds"].shape == (
+            b, cfg.n_image_tokens, cfg.d_frontend)
+    # long_500k must be sub-quadratic for every non-skip arch
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid", "encdec"):
+        assert cfg.attn_kind == "sliding"
+
+
+def test_model_flops_scaling():
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-9
+    assert abs(de - 2 * n * 128) / de < 1e-9
+    # MoE: active < total
+    moe = get_config("olmoe-1b-7b")
+    assert moe.active_param_count() < 0.5 * moe.param_count()
