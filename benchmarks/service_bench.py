@@ -1,0 +1,112 @@
+"""Retrieval-service benchmark: throughput-vs-latency curve, exact vs GAM.
+
+Streams single-user requests through the ``Microbatcher`` front-end at a
+sweep of batch sizes, for both the brute-force (``exact=True``) and the
+GAM candidate-masked service path, and records QPS + p50/p99 per-request
+latency per point to ``BENCH_service.json`` — the service-tier counterpart
+of the paper's retrieval-speedup tables.
+
+Run:  PYTHONPATH=src python benchmarks/service_bench.py [--items N] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.mapping import GamConfig
+from repro.service import GamService, ServiceConfig
+
+
+def run_point(svc: GamService, users: np.ndarray, *, exact: bool) -> dict:
+    """Push every user row through a fresh microbatcher; measure the stream."""
+    from repro.service.metrics import ServiceMetrics
+    from repro.service.microbatch import Microbatcher
+
+    kappa = svc.svc.kappa
+
+    def query_fn(batch_users, n_real=0):
+        ids, scores = svc.query(batch_users, kappa, exact=exact)
+        return ids, scores
+
+    metrics = ServiceMetrics()
+    mb = Microbatcher(query_fn, svc.cfg.k, batch_size=svc.svc.batch_size,
+                      max_delay_s=svc.svc.max_delay_s, metrics=metrics)
+    # warm the jit cache so the curve measures steady state, not compiles
+    query_fn(np.zeros((svc.svc.batch_size, svc.cfg.k), np.float32))
+    metrics.reset()
+
+    t0 = time.perf_counter()
+    for row in users:
+        mb.submit(row)
+        mb.poll()
+    while mb.pending:
+        mb.flush()
+    wall = time.perf_counter() - t0
+    snap = metrics.snapshot()
+    return {
+        "batch_size": svc.svc.batch_size,
+        "mode": "exact" if exact else "gam",
+        "n_requests": int(users.shape[0]),
+        "wall_s": wall,
+        "qps": users.shape[0] / wall,
+        "p50_ms": snap["latency_p50_ms"],
+        "p99_ms": snap["latency_p99_ms"],
+        "occupancy": snap["occupancy_mean"],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=2048)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--kappa", type=int, default=10)
+    ap.add_argument("--batch-sizes", type=int, nargs="+",
+                    default=[1, 4, 8, 16])
+    ap.add_argument("--threshold", type=float, default=0.2)
+    ap.add_argument("--min-overlap", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    users = rng.normal(size=(args.requests, args.dim)).astype(np.float32)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+
+    print("mode,batch_size,qps,p50_ms,p99_ms,occupancy")
+    curves = {"exact": [], "gam": []}
+    discard_mean = None
+    for bs in args.batch_sizes:
+        svc = GamService(np.arange(args.items), items, cfg, ServiceConfig(
+            n_shards=args.shards, min_overlap=args.min_overlap,
+            kappa=args.kappa, batch_size=bs, max_delay_s=5e-3))
+        for exact in (True, False):
+            pt = run_point(svc, users, exact=exact)
+            curves[pt["mode"]].append(pt)
+            print(f"{pt['mode']},{bs},{pt['qps']:.1f},"
+                  f"{pt['p50_ms']:.2f},{pt['p99_ms']:.2f},"
+                  f"{pt['occupancy']:.2f}")
+        svc.query(users[:1], args.kappa)       # discard stat at this config
+        discard_mean = float(svc._last_query_stats["discard"].mean())
+
+    out = {
+        "config": {
+            "items": args.items, "dim": args.dim, "shards": args.shards,
+            "requests": args.requests, "kappa": args.kappa,
+            "threshold": args.threshold, "min_overlap": args.min_overlap,
+        },
+        "discard_mean": discard_mean,
+        "curves": curves,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

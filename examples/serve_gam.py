@@ -41,3 +41,5 @@ print(f"GAM head:   scored {r_gam.n_scored_vocab:.0f} vocab rows/step "
 print(f"greedy next-token agreement with exact decode: {agree:.1%}")
 assert r_gam.discard_frac > 0.05 and agree > 0.5
 print("OK")
+print("(for the sharded streaming retrieval service — live upserts, "
+      "microbatched queries — see examples/serve_stream.py)")

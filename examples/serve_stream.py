@@ -1,0 +1,66 @@
+"""Streaming retrieval service demo: boot a sharded GamService, stream
+delta upserts/deletes into the live catalog, and query continuously through
+the microbatching front-end — verifying along the way that streamed state
+answers exactly like a fresh rebuild (the delta-segment contract).
+
+Run:  PYTHONPATH=src python examples/serve_stream.py
+"""
+import numpy as np
+
+from repro.core.mapping import GamConfig
+from repro.service import GamService, ServiceConfig
+
+rng = np.random.default_rng(0)
+K, N, KAPPA = 16, 600, 10
+items = rng.normal(size=(N, K)).astype(np.float32)
+items /= np.linalg.norm(items, axis=1, keepdims=True)
+cfg = GamConfig(k=K, scheme="parse_tree", threshold=0.2)
+svc_cfg = ServiceConfig(n_shards=2, min_overlap=2, kappa=KAPPA,
+                        batch_size=4, max_delay_s=5e-3)
+
+svc = GamService(np.arange(N), items, cfg, svc_cfg)
+print(f"booted: {svc.n_items} items over {svc_cfg.n_shards} shards")
+
+next_id = N
+for step in range(6):
+    # continuous query traffic through the microbatcher
+    reqs = [svc.batcher.submit(rng.normal(size=K).astype(np.float32))
+            for _ in range(4)]                      # size trigger fires
+    results = [svc.batcher.result(r) for r in reqs]
+    assert all(r is not None for r in results)
+
+    # interleaved catalog mutations: 3 inserts, 1 overwrite, 1 delete
+    ins = np.arange(next_id, next_id + 3)
+    next_id += 3
+    svc.upsert(ins, rng.normal(size=(3, K)).astype(np.float32))
+    svc.upsert([step], rng.normal(size=(1, K)).astype(np.float32))
+    svc.delete([100 + step])
+    print(f"step {step}: catalog={svc.n_items} delta={len(svc.delta)} "
+          f"top-1 of last request: id={results[-1].ids[0]} "
+          f"score={results[-1].scores[0]:.3f}")
+
+# streamed state must answer exactly like a fresh rebuild of the catalog
+users = rng.normal(size=(8, K)).astype(np.float32)
+ids_stream, sc_stream = svc.query(users, KAPPA)
+
+cat_ids = np.sort(np.fromiter(svc.catalog.keys(), np.int64, svc.n_items))
+cat_fac = np.stack([svc.catalog[int(i)] for i in cat_ids])
+fresh = GamService(cat_ids, cat_fac, cfg, svc_cfg)
+ids_fresh, sc_fresh = fresh.query(users, KAPPA)
+assert np.array_equal(ids_stream, ids_fresh)
+assert np.array_equal(sc_stream, sc_fresh)
+print("streamed state == fresh rebuild: exact match")
+
+svc.compact()
+ids_c, sc_c = svc.query(users, KAPPA)
+assert np.array_equal(ids_c, ids_fresh) and np.array_equal(sc_c, sc_fresh)
+print(f"after compact(): identical answers, delta={len(svc.delta)}")
+
+snap = svc.metrics.snapshot()
+print(f"metrics: {snap['n_requests']} requests at {snap['qps']:.1f} QPS, "
+      f"p50={snap['latency_p50_ms']:.2f}ms p99={snap['latency_p99_ms']:.2f}ms, "
+      f"discard={snap['discard_mean']:.1%}, "
+      f"shard balance={snap['shard_balance']:.2f}, "
+      f"{snap['n_upserts']} upserts / {snap['n_deletes']} deletes / "
+      f"{snap['n_compactions']} compaction")
+print("OK")

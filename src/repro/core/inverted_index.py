@@ -21,7 +21,71 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["InvertedIndex", "DeviceIndex"]
+__all__ = ["InvertedIndex", "DeviceIndex", "build_segment",
+           "candidate_mask_from_table"]
+
+
+def candidate_mask_from_table(table: jax.Array, spill: jax.Array,
+                              query_indices: jax.Array, query_mask: jax.Array,
+                              *, sentinel: int, min_overlap: int) -> jax.Array:
+    """(sentinel,) bool candidate mask for ONE query pattern against a
+    dense-bucket posting table.
+
+    The single definition of candidate semantics — ``DeviceIndex`` and the
+    service's sharded index both call this, which is what keeps their
+    results bit-comparable.  ``sentinel`` is both the pad id in ``table``
+    and the mask length (items are ids ``0..sentinel-1``); spill entries
+    are always candidates, pad entries (id == sentinel) drop out of the
+    scatter."""
+    rows = table[query_indices]                 # (k, bucket)
+    valid = (rows < sentinel) & query_mask[:, None]
+    ids = jnp.where(valid, rows, 0)
+    overlap = jnp.zeros(sentinel, jnp.int32).at[ids.ravel()].add(
+        valid.ravel().astype(jnp.int32))
+    mask = overlap >= min_overlap
+    return mask.at[spill].set(True, mode="drop")
+
+
+def build_segment(item_indices: np.ndarray, p: int, bucket: int,
+                  mask: np.ndarray | None = None, sentinel: int | None = None,
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorised scatter build of one dense-bucket posting segment.
+
+    The shared builder behind ``DeviceIndex.build``, the service's index
+    shards, and delta-segment compaction.  Returns ``(table, counts, spill)``:
+
+      table:  (p, bucket) int32, padded with ``sentinel`` (default: n_items).
+      counts: (p,) int32 posting-list lengths clipped to ``bucket``.
+      spill:  sorted int32 ids of items overflowing any bucket.
+
+    Within each posting list entries appear in item order — bit-identical to
+    the sequential per-item build, but O(nnz log nnz) numpy instead of an
+    O(N*k) Python loop (this is the hot path of ``compact()``).
+    """
+    item_indices = np.asarray(item_indices)
+    n, k = item_indices.shape
+    if sentinel is None:
+        sentinel = n
+    if mask is None:
+        mask = np.ones((n, k), bool)
+    mask = np.asarray(mask, bool)
+    flat_slots = item_indices[mask].astype(np.int64)
+    flat_items = np.broadcast_to(
+        np.arange(n, dtype=np.int32)[:, None], (n, k)
+    )[mask]
+    order = np.argsort(flat_slots, kind="stable")
+    slots_sorted = flat_slots[order]
+    items_sorted = flat_items[order]
+    counts_full = np.bincount(slots_sorted, minlength=p)
+    starts = np.zeros(p, np.int64)
+    np.cumsum(counts_full[:-1], out=starts[1:])
+    pos = np.arange(slots_sorted.size, dtype=np.int64) - starts[slots_sorted]
+    table = np.full((p, bucket), sentinel, dtype=np.int32)
+    fit = pos < bucket
+    table[slots_sorted[fit], pos[fit]] = items_sorted[fit]
+    spill = np.unique(items_sorted[~fit]).astype(np.int32)
+    counts = np.minimum(counts_full, bucket).astype(np.int32)
+    return table, counts, spill
 
 
 class InvertedIndex:
@@ -102,26 +166,11 @@ class DeviceIndex:
     def build(item_indices: np.ndarray, p: int, bucket: int = 256,
               mask: np.ndarray | None = None) -> "DeviceIndex":
         item_indices = np.asarray(item_indices)
-        n, k = item_indices.shape
-        if mask is None:
-            mask = np.ones((n, k), bool)
-        mask = np.asarray(mask, bool)
-        table = np.full((p, bucket), n, dtype=np.int32)
-        counts = np.zeros(p, dtype=np.int32)
-        spilled = set()
-        for item in range(n):
-            for slot in item_indices[item][mask[item]]:
-                c = counts[slot]
-                if c < bucket:
-                    table[slot, c] = item
-                    counts[slot] = c + 1
-                else:
-                    spilled.add(item)
-                    counts[slot] = c + 1
-        spill = np.fromiter(sorted(spilled), dtype=np.int32, count=len(spilled))
+        n = item_indices.shape[0]
+        table, counts, spill = build_segment(item_indices, p, bucket, mask)
         return DeviceIndex(
             table=jnp.asarray(table),
-            counts=jnp.asarray(np.minimum(counts, bucket)),
+            counts=jnp.asarray(counts),
             spill=jnp.asarray(spill),
             n_items=n,
             p=p,
@@ -130,18 +179,11 @@ class DeviceIndex:
     def candidate_mask(self, query_indices: jax.Array, min_overlap: int = 1,
                        query_mask: jax.Array | None = None) -> jax.Array:
         """(n_items,) bool — jit-able candidate mask for one query pattern."""
-        rows = self.table[query_indices]            # (k, bucket)
-        valid = rows < self.n_items
-        if query_mask is not None:
-            valid = valid & query_mask[:, None]
-        ids = jnp.where(valid, rows, 0)
-        overlap = jnp.zeros(self.n_items, jnp.int32).at[ids.ravel()].add(
-            valid.ravel().astype(jnp.int32)
-        )
-        mask = overlap >= min_overlap
-        if self.spill.shape[0]:
-            mask = mask.at[self.spill].set(True)
-        return mask
+        if query_mask is None:
+            query_mask = jnp.ones(query_indices.shape, bool)
+        return candidate_mask_from_table(
+            self.table, self.spill, query_indices, query_mask,
+            sentinel=self.n_items, min_overlap=min_overlap)
 
     def batch_candidate_mask(self, query_indices: jax.Array, min_overlap: int = 1,
                              query_mask: jax.Array | None = None) -> jax.Array:

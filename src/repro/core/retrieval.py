@@ -16,8 +16,27 @@ import numpy as np
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex
 from repro.core.mapping import GamConfig, sparse_map
+from repro.kernels.gam_score import NEG
+from repro.kernels.ops import gam_score
 
-__all__ = ["BruteForceRetriever", "GamRetriever", "RetrievalResult", "recovery_accuracy"]
+__all__ = ["BruteForceRetriever", "GamRetriever", "RetrievalResult",
+           "masked_topk", "recovery_accuracy"]
+
+
+def masked_topk(users: jax.Array, items: jax.Array, masks: jax.Array,
+                kappa: int) -> tuple[jax.Array, jax.Array]:
+    """Shared masked top-kappa scoring path.
+
+    ``users``: (Q, k) f32, ``items``: (N, k) f32, ``masks``: (Q, N) bool.
+    Exact inner products via the fused gam_score kernel where the candidate
+    mask is set, NEG elsewhere; ``lax.top_k`` breaks score ties by lowest item
+    row.  The GamRetriever device path, the service's index shards, and the
+    streaming delta segment all score through this one function, so their
+    results are bit-comparable.
+    """
+    scores = gam_score(users, items, masks)
+    vals, ids = jax.lax.top_k(scores, kappa)
+    return vals, ids.astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -74,12 +93,22 @@ class GamRetriever:
         # the paper's inverted index stores only NON-zero coordinates of
         # phi(v); thresholded coordinates never enter the index.
         self.item_mask = np.asarray(vals) != 0.0
-        self.index = InvertedIndex(self.item_tau, cfg.p, mask=self.item_mask)
+        # the CSR index serves the CPU query path only; device=True
+        # retrievers never touch it, so build it on first use
+        self._cpu_index: InvertedIndex | None = None
         self.device_index = (
             DeviceIndex.build(self.item_tau, cfg.p, bucket, mask=self.item_mask)
             if device
             else None
         )
+        self._items_dev = jnp.asarray(self.items) if device else None
+
+    @property
+    def index(self) -> InvertedIndex:
+        if self._cpu_index is None:
+            self._cpu_index = InvertedIndex(self.item_tau, self.cfg.p,
+                                            mask=self.item_mask)
+        return self._cpu_index
 
     def map_queries(self, users: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         users = np.asarray(users, np.float32)
@@ -90,6 +119,8 @@ class GamRetriever:
 
     def query(self, users: np.ndarray, kappa: int) -> RetrievalResult:
         users = np.asarray(users, np.float32)
+        if self.device_index is not None:
+            return self._query_device(users, kappa)
         q_tau, q_mask = self.map_queries(users)
         n = self.items.shape[0]
         q = users.shape[0]
@@ -107,6 +138,29 @@ class GamRetriever:
             ids_out[qi, :kk] = cand[top[order]]
             sc_out[qi, :kk] = scores[top[order]]
             n_scored[qi] = cand.size
+        return RetrievalResult(
+            ids=ids_out,
+            scores=sc_out,
+            n_scored=n_scored,
+            discarded_frac=1.0 - n_scored / n,
+        )
+
+    def _query_device(self, users: np.ndarray, kappa: int) -> RetrievalResult:
+        """Vectorised jit path: one batched candidate-mask pass + one
+        masked_topk over the whole query batch (no per-query Python loop)."""
+        n = self.items.shape[0]
+        q = users.shape[0]
+        masks = self.candidate_masks(users)
+        kk = min(kappa, n)
+        vals, ids = masked_topk(jnp.asarray(users), self._items_dev, masks, kk)
+        vals = np.asarray(vals, np.float32)
+        ids = np.asarray(ids, np.int64)
+        empty = vals <= NEG / 2          # top-k slots holding non-candidates
+        ids_out = np.full((q, kappa), -1, np.int64)
+        sc_out = np.full((q, kappa), -np.inf, np.float32)
+        ids_out[:, :kk] = np.where(empty, -1, ids)
+        sc_out[:, :kk] = np.where(empty, -np.inf, vals)
+        n_scored = np.asarray(jnp.sum(masks, axis=-1), np.int64)
         return RetrievalResult(
             ids=ids_out,
             scores=sc_out,

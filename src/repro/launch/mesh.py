@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "data_axes", "model_axis"]
+__all__ = ["make_production_mesh", "make_index_mesh", "data_axes",
+           "model_axis"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +17,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_index_mesh(n_devices: int | None = None):
+    """1-D mesh over the ``items`` axis for the retrieval service's index
+    shards: posting tables and item factors partition along it, so catalog
+    capacity scales with the device count (single CPU device degrades to a
+    trivial mesh and purely logical shards)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("items",))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

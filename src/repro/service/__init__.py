@@ -1,0 +1,74 @@
+"""Sharded streaming retrieval service over the GAM inverted index.
+
+The paper's deployment object is an inverted index over phi-mapped factors;
+this package is its serving tier — the piece that takes the single-shard,
+static-catalog ``GamRetriever`` to a production shape: partitioned storage,
+live catalog mutation, and a request front-end.
+
+Architecture
+============
+
+::
+
+    requests ──> Microbatcher ──> GamService.query ──┬─> ShardedGamIndex
+       (size/deadline coalescing,                    │   (main segment,
+        fixed-shape padded batches,                  │    item-axis shards,
+        per-request latency)                         │    per-shard masks +
+                                                     │    top-kappa merge)
+    upsert/delete ──> DeltaSegment  <────────────────┴─> merge by
+        (always-queried dense segment;                   (score desc, id asc)
+         compact() folds it into the main shards)
+    ServiceMetrics: QPS, p50/p99 latency, occupancy,
+                    discard fraction, shard balance
+
+Components
+==========
+
+``ShardedGamIndex`` (``sharded_index.py``)
+    The compacted main segment.  The id-sorted catalog is cut into
+    contiguous shards; each shard owns a dense-bucket posting segment
+    (built by the vectorised ``core.inverted_index.build_segment``) over
+    local rows.  Candidate masking is per-shard; exact scoring is one
+    ``gam_score`` kernel call over the flat factor matrix, whose item axis
+    ``sharding.specs.index_shardings`` partitions over
+    ``launch.mesh.make_index_mesh`` — catalog size scales with devices.
+    The cross-shard merge tie-breaks by ascending item id, making a
+    multi-shard query bit-identical to the single-shard device retriever.
+
+``DeltaSegment`` (``delta.py``)
+    Streaming ``upsert``/``delete`` land in a small dense segment that every
+    query also scores (same candidate semantics, same kernel), so queries
+    between compactions return exactly what a fresh rebuild would.
+
+``GamService`` (``service.py``)
+    The facade: catalog of record, base + delta query merge, ``compact()``,
+    metrics.  ``query(..., exact=True)`` is the brute-force reference path
+    through the same kernel.
+
+``Microbatcher`` (``microbatch.py``)
+    Coalesces single-user queries into fixed-size padded batches (size- or
+    deadline-triggered) so one jit-compiled step serves all traffic.
+
+``ServiceMetrics`` (``metrics.py``)
+    QPS, latency percentiles, batch occupancy, discard fraction and
+    shard-balance counters; surfaced by ``launch/serve.py --service`` and
+    ``benchmarks/service_bench.py`` (throughput-vs-latency curve).
+
+Not yet here (see ROADMAP): multi-host serving, shard replication/failover,
+and snapshot/restore of the catalog through ``checkpoint/``.
+"""
+from repro.service.delta import DeltaSegment
+from repro.service.metrics import ServiceMetrics
+from repro.service.microbatch import Microbatcher, QueryResult
+from repro.service.service import GamService, ServiceConfig
+from repro.service.sharded_index import ShardedGamIndex
+
+__all__ = [
+    "DeltaSegment",
+    "GamService",
+    "Microbatcher",
+    "QueryResult",
+    "ServiceConfig",
+    "ServiceMetrics",
+    "ShardedGamIndex",
+]

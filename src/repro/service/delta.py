@@ -1,0 +1,112 @@
+"""Streaming delta segment: in-place upserts/deletes between compactions.
+
+New and re-written items land in a small dense segment that participates in
+EVERY query (it is never behind the compaction horizon), with the same
+candidate-masking + exact-scoring semantics as the main shards: the segment
+keeps its own dense-bucket posting table (rebuilt from scratch on each
+mutation — the vectorised ``build_segment`` makes that O(nnz), cheap at delta
+sizes), and scores through the shared ``masked_topk`` path.  Because
+candidate determination is per-item (pattern overlap against the query, plus
+bucket-spill), a query against base+delta returns exactly what a fresh
+rebuild over the merged catalog would return, provided neither structure
+overflows its buckets (spill only ever ADDS candidates; size buckets to the
+max posting length for strict parity).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inverted_index import DeviceIndex
+from repro.core.mapping import GamConfig, sparse_map
+from repro.core.retrieval import masked_topk
+
+__all__ = ["DeltaSegment"]
+
+
+class DeltaSegment:
+    """Always-queried dense segment of streamed (id, factor) rows."""
+
+    def __init__(self, cfg: GamConfig, min_overlap: int = 1,
+                 bucket: int = 64):
+        self.cfg = cfg
+        self.min_overlap = min_overlap
+        self.bucket = bucket
+        self.ids = np.zeros(0, np.int64)          # sorted ascending
+        self.factors = np.zeros((0, cfg.k), np.float32)
+        self._index: DeviceIndex | None = None
+        self._factors_dev = None
+
+    def __len__(self) -> int:
+        return int(self.ids.size)
+
+    # ---------------------------------------------------------- mutation
+
+    def upsert(self, ids, factors) -> None:
+        ids = np.asarray(ids, np.int64).ravel()
+        factors = np.asarray(factors, np.float32).reshape(ids.size, self.cfg.k)
+        if len(np.unique(ids)) != ids.size:   # duplicate ids: last write wins
+            _, first_rev = np.unique(ids[::-1], return_index=True)
+            sel = np.sort(ids.size - 1 - first_rev)
+            ids, factors = ids[sel], factors[sel]
+        keep = ~np.isin(self.ids, ids)
+        merged_ids = np.concatenate([self.ids[keep], ids])
+        merged_fac = np.concatenate([self.factors[keep], factors])
+        order = np.argsort(merged_ids)
+        self.ids, self.factors = merged_ids[order], merged_fac[order]
+        self._rebuild()
+
+    def delete(self, ids) -> None:
+        keep = ~np.isin(self.ids, np.asarray(ids, np.int64).ravel())
+        self.ids, self.factors = self.ids[keep], self.factors[keep]
+        self._rebuild()
+
+    def clear(self) -> None:
+        self.ids = np.zeros(0, np.int64)
+        self.factors = np.zeros((0, self.cfg.k), np.float32)
+        self._index = None
+        self._factors_dev = None
+
+    def _rebuild(self) -> None:
+        if not len(self):
+            self._index = None
+            self._factors_dev = None
+            return
+        tau, vals = sparse_map(jnp.asarray(self.factors), self.cfg)
+        self._index = DeviceIndex.build(
+            np.asarray(tau), self.cfg.p, self.bucket,
+            mask=np.asarray(vals) != 0.0)
+        # factor rows pad to the next power of two so the jit'd scoring path
+        # keeps a stable shape across consecutive upserts (mutating the
+        # catalog must not force an XLA recompile on the next query)
+        cap = 1 << (len(self) - 1).bit_length()
+        padded = np.zeros((cap, self.cfg.k), np.float32)
+        padded[: len(self)] = self.factors
+        self._factors_dev = jnp.asarray(padded)
+
+    # ---------------------------------------------------------- query
+
+    def query(self, users, q_tau, q_mask, kappa: int, *,
+              exact: bool = False):
+        """-> (scores (Q, kk) f32 with NEG pads, catalog ids (Q, kk) int64)
+        over the delta rows only; kk = min(kappa, len(self))."""
+        if not len(self):
+            q = np.asarray(users).shape[0]
+            return (np.zeros((q, 0), np.float32), np.zeros((q, 0), np.int64),
+                    np.zeros(q, np.int64))
+        kk = min(kappa, len(self))
+        if exact:
+            masks = jnp.ones((users.shape[0], len(self)), bool)
+        else:
+            masks = self._index.batch_candidate_mask(
+                q_tau, self.min_overlap, q_mask)
+        # pad the candidate axis to the factor capacity (padded rows are
+        # never candidates, so they score NEG and the merge drops them)
+        cap = self._factors_dev.shape[0]
+        masks = jnp.pad(masks, ((0, 0), (0, cap - len(self))))
+        vals, local = masked_topk(users, self._factors_dev, masks, kk)
+        n_cand = np.asarray(jnp.sum(masks, axis=-1), np.int64)
+        # NEG slots may point at pad rows; clip before the id gather (the
+        # caller replaces their ids via the NEG-score filter anyway)
+        local = np.minimum(np.asarray(local, np.int64), len(self) - 1)
+        return (np.asarray(vals, np.float32), self.ids[local], n_cand)

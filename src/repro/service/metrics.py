@@ -1,0 +1,102 @@
+"""Service observability: QPS, latency percentiles, occupancy, discard and
+shard-balance counters.
+
+Pure-Python accumulation (no jax) so it can be updated from the request path
+without touching device state; ``snapshot()`` renders the dict that
+``launch/serve.py --service`` prints and ``benchmarks/service_bench.py``
+records.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["ServiceMetrics"]
+
+
+class ServiceMetrics:
+    def __init__(self, clock=time.monotonic, max_samples: int = 65536):
+        self._clock = clock
+        self.max_samples = max_samples         # per-sample lists are windowed
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every counter and restart the QPS clock (e.g. after jit
+        warm-up, so steady-state numbers exclude build/compile time)."""
+        self._t0 = self._clock()
+        self.n_requests = 0
+        self.n_batches = 0
+        self.n_upserts = 0
+        self.n_deletes = 0
+        self.n_compactions = 0
+        self._occupancy: list[float] = []      # real / padded per batch
+        self._latencies: list[float] = []      # seconds, per request
+        self._discards: list[float] = []       # fraction, per request
+        self._shard_cand = None                # (S,) accumulated candidates
+
+    def _trim(self) -> None:
+        # long-running service: percentiles over a recent window, O(1) memory
+        for name in ("_occupancy", "_latencies", "_discards"):
+            buf = getattr(self, name)
+            if len(buf) > self.max_samples:
+                setattr(self, name, buf[-self.max_samples:])
+
+    # ---------------------------------------------------------- recording
+
+    def record_batch(self, n_real: int, batch_size: int,
+                     latencies_s) -> None:
+        self.n_requests += n_real
+        self.n_batches += 1
+        self._occupancy.append(n_real / max(batch_size, 1))
+        self._latencies.extend(float(t) for t in latencies_s)
+        self._trim()
+
+    def record_query_stats(self, discard_fracs=None,
+                           shard_candidates=None) -> None:
+        if discard_fracs is not None:
+            self._discards.extend(float(d) for d in discard_fracs)
+            self._trim()
+        if shard_candidates is not None:
+            sc = np.asarray(shard_candidates, np.float64)
+            if sc.ndim == 2:                   # (Q, S) -> per-shard totals
+                sc = sc.sum(axis=0)
+            self._shard_cand = (sc if self._shard_cand is None
+                                else self._shard_cand + sc)
+
+    def record_upsert(self, n: int) -> None:
+        self.n_upserts += int(n)
+
+    def record_delete(self, n: int) -> None:
+        self.n_deletes += int(n)
+
+    def record_compact(self) -> None:
+        self.n_compactions += 1
+
+    # ---------------------------------------------------------- reporting
+
+    def snapshot(self) -> dict:
+        elapsed = max(self._clock() - self._t0, 1e-9)
+        lat = np.asarray(self._latencies) if self._latencies else None
+        shard_balance = None
+        if self._shard_cand is not None and self._shard_cand.sum() > 0:
+            mean = self._shard_cand.mean()
+            shard_balance = float(self._shard_cand.max() / max(mean, 1e-9))
+        return {
+            "elapsed_s": float(elapsed),
+            "n_requests": self.n_requests,
+            "n_batches": self.n_batches,
+            "qps": self.n_requests / elapsed,
+            "latency_p50_ms": (float(np.percentile(lat, 50)) * 1e3
+                               if lat is not None else None),
+            "latency_p99_ms": (float(np.percentile(lat, 99)) * 1e3
+                               if lat is not None else None),
+            "occupancy_mean": (float(np.mean(self._occupancy))
+                               if self._occupancy else None),
+            "discard_mean": (float(np.mean(self._discards))
+                             if self._discards else None),
+            "shard_balance": shard_balance,    # max/mean candidate load
+            "n_upserts": self.n_upserts,
+            "n_deletes": self.n_deletes,
+            "n_compactions": self.n_compactions,
+        }

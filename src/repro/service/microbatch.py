@@ -1,0 +1,120 @@
+"""Dynamic microbatching front-end.
+
+Single-user queries arrive one at a time; the device wants fixed-size padded
+batches through one jit'd query step.  ``Microbatcher`` coalesces: a request
+enqueues and the batch fires when either (a) ``batch_size`` requests are
+waiting — size trigger — or (b) the oldest request has waited
+``max_delay_s`` — deadline trigger, checked by ``poll()``.  Short batches pad
+with zero factor rows (discarded on the way out), so every launch reuses the
+same compiled computation.
+
+The design is synchronous and single-threaded on purpose: deterministic to
+test (the clock is injectable) and trivial to pump from any event loop; the
+concurrency story lives in the driver, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.service.metrics import ServiceMetrics
+
+__all__ = ["Microbatcher", "QueryResult"]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    ids: np.ndarray         # (kappa,) catalog ids, -1 pads
+    scores: np.ndarray      # (kappa,) f32, -inf pads
+    latency_s: float
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    user: np.ndarray
+    t_submit: float
+
+
+class Microbatcher:
+    """Coalesces single-row queries into fixed-size device batches.
+
+    ``query_fn``: (users (B, k) f32, n_real int) -> (ids (B, kappa),
+    scores (B, kappa)) — called with a FIXED leading dim B so the underlying
+    jit step compiles once; rows past ``n_real`` are zero padding (the
+    callee must not fold them into its statistics).  Results are keyed by
+    the request id ``submit`` returned.
+    """
+
+    def __init__(self, query_fn: Callable, dim: int, *, batch_size: int = 8,
+                 max_delay_s: float = 2e-3, clock=time.monotonic,
+                 metrics: ServiceMetrics | None = None,
+                 max_results: int = 65536):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.query_fn = query_fn
+        self.dim = dim
+        self.batch_size = batch_size
+        self.max_delay_s = max_delay_s
+        self.clock = clock
+        self.metrics = metrics
+        self.max_results = max_results     # uncollected results are evicted
+        self._queue: list[_Pending] = []
+        self._results: dict[int, QueryResult] = {}
+        self._next_id = 0
+
+    # ---------------------------------------------------------- intake
+
+    def submit(self, user: np.ndarray) -> int:
+        """Enqueue one query row; fires the batch on the size trigger."""
+        user = np.asarray(user, np.float32).reshape(self.dim)
+        req_id = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(req_id, user, self.clock()))
+        if len(self._queue) >= self.batch_size:
+            self.flush()
+        return req_id
+
+    def poll(self) -> bool:
+        """Deadline trigger: flush iff the oldest request has waited past
+        ``max_delay_s``.  Returns True if a batch fired."""
+        if self._queue and (self.clock() - self._queue[0].t_submit
+                            >= self.max_delay_s):
+            self.flush()
+            return True
+        return False
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ---------------------------------------------------------- firing
+
+    def flush(self) -> None:
+        """Fire the current queue as one padded fixed-size batch."""
+        if not self._queue:
+            return
+        batch, self._queue = self._queue[: self.batch_size], \
+            self._queue[self.batch_size:]
+        users = np.zeros((self.batch_size, self.dim), np.float32)
+        for i, p in enumerate(batch):
+            users[i] = p.user
+        ids, scores = self.query_fn(users, len(batch))
+        t_done = self.clock()
+        lats = [t_done - p.t_submit for p in batch]
+        for i, p in enumerate(batch):
+            self._results[p.req_id] = QueryResult(
+                ids=np.asarray(ids[i]), scores=np.asarray(scores[i]),
+                latency_s=lats[i])
+        # bound memory when clients never collect: evict oldest-first
+        while len(self._results) > self.max_results:
+            self._results.pop(next(iter(self._results)))
+        if self.metrics is not None:
+            self.metrics.record_batch(len(batch), self.batch_size, lats)
+
+    def result(self, req_id: int) -> QueryResult | None:
+        """Pop the result for a request id (None while still queued)."""
+        return self._results.pop(req_id, None)

@@ -1,0 +1,215 @@
+"""Item-axis sharded GAM index: the service's main (compacted) segment.
+
+The catalog is sorted by item id and partitioned contiguously into
+``n_shards`` equal slices of ``shard_cap`` rows (the last slice zero-padded).
+Each shard owns a dense-bucket posting segment over LOCAL row ids (built with
+``core.inverted_index.build_segment``), so candidate masking is an
+embarrassingly parallel per-shard scatter.  Exact scoring then runs as ONE
+``gam_score`` kernel call over the flat ``(n_shards * shard_cap, k)`` factor
+matrix — which is precisely the layout ``sharding.specs.index_shardings``
+partitions over the ``launch.mesh.make_index_mesh`` item axis, so XLA SPMD
+splits the scoring matmul and the top-kappa reduction across devices.
+
+Merge semantics: per-shard top-kappa, then a stable merge whose tie-break is
+ascending global row (== ascending item id, because rows are id-sorted).
+That is exactly ``lax.top_k``'s tie-break over the unsharded score matrix, so
+a multi-shard query is bit-identical to the single-shard
+``GamRetriever(device=True)`` path on the same catalog.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inverted_index import build_segment, candidate_mask_from_table
+from repro.core.mapping import GamConfig, sparse_map
+from repro.kernels.gam_score import NEG
+from repro.kernels.ops import gam_score
+
+__all__ = ["ShardedGamIndex", "ShardTopK"]
+
+
+@partial(jax.jit, static_argnames=("min_overlap", "cap"))
+def _shard_masks(tables: jax.Array, spills: jax.Array, q_tau: jax.Array,
+                 q_mask: jax.Array, *, min_overlap: int, cap: int) -> jax.Array:
+    """(S, p, bucket) tables + (Q, k) query patterns -> (Q, S*cap) bool."""
+
+    def one(table, spill, tau, qm):
+        # shared candidate semantics (core.inverted_index) with the shard's
+        # local-row sentinel; spill-list pads carry id == cap and drop out
+        return candidate_mask_from_table(table, spill, tau, qm,
+                                         sentinel=cap,
+                                         min_overlap=min_overlap)
+
+    per_q = jax.vmap(one, in_axes=(None, None, 0, 0))      # over queries
+    per_s = jax.vmap(per_q, in_axes=(0, 0, None, None))    # over shards
+    masks = per_s(tables, spills, q_tau, q_mask)           # (S, Q, cap)
+    return jnp.moveaxis(masks, 0, 1).reshape(q_tau.shape[0], -1)
+
+
+@partial(jax.jit, static_argnames=("kappa", "n_shards", "cap"))
+def _score_and_merge(users: jax.Array, factors: jax.Array, masks: jax.Array,
+                     *, kappa: int, n_shards: int, cap: int):
+    """Per-shard top-kappa + stable cross-shard merge.
+
+    Returns (vals (Q, kappa'), rows (Q, kappa') global row ids,
+    shard_cand (Q, S) candidate counts) with kappa' = min(kappa, S*kk)."""
+    q = users.shape[0]
+    scores = gam_score(users, factors, masks)              # (Q, S*cap)
+    s3 = scores.reshape(q, n_shards, cap)
+    kk = min(kappa, cap)
+    vals, loc = jax.lax.top_k(s3, kk)                      # (Q, S, kk)
+    rows = loc + (jnp.arange(n_shards) * cap)[None, :, None]
+    cat_vals = vals.reshape(q, n_shards * kk)
+    cat_rows = rows.reshape(q, n_shards * kk)
+    # stable sort on -score: ties resolve by concat position, which is shard
+    # order then within-shard top_k order — i.e. ascending global row.  This
+    # reproduces lax.top_k's tie-break over the full score matrix.
+    order = jnp.argsort(-cat_vals, axis=-1, stable=True)[:, :kappa]
+    merged_vals = jnp.take_along_axis(cat_vals, order, axis=-1)
+    merged_rows = jnp.take_along_axis(cat_rows, order, axis=-1)
+    shard_cand = masks.reshape(q, n_shards, cap).sum(-1)
+    return merged_vals, merged_rows.astype(jnp.int32), shard_cand
+
+
+@dataclasses.dataclass
+class ShardTopK:
+    """Result of a sharded query, still in global-row coordinates."""
+    scores: jax.Array       # (Q, kappa) f32, NEG in empty slots
+    rows: jax.Array         # (Q, kappa) int32 global rows (id-sorted order)
+    shard_candidates: jax.Array  # (Q, S) int32 per-shard candidate counts
+
+
+class ShardedGamIndex:
+    """Partitioned phi-index + factor store over the item axis."""
+
+    def __init__(self, cfg: GamConfig, item_ids: np.ndarray,
+                 tables: jax.Array, counts: jax.Array, spills: jax.Array,
+                 factors: jax.Array, alive: np.ndarray,
+                 n_shards: int, shard_cap: int, min_overlap: int,
+                 bucket: int, mesh=None):
+        self.cfg = cfg
+        self.item_ids = item_ids          # (N,) int64 sorted catalog ids
+        self.tables = tables              # (S, p, bucket) int32
+        self.counts = counts              # (S, p) int32
+        self.spills = spills              # (S, W) int32, padded with shard_cap
+        self.factors = factors            # (S*cap, k) f32, pad rows zero
+        self._alive_host = alive          # (S*cap,) bool numpy mirror
+        self.alive = jnp.asarray(alive)
+        self.n_shards = n_shards
+        self.shard_cap = shard_cap
+        self.min_overlap = min_overlap
+        self.bucket = bucket
+        self.mesh = mesh
+        self._row_of = {int(i): r for r, i in enumerate(item_ids)}
+
+    # ------------------------------------------------------------- build
+
+    @staticmethod
+    def build(factors: np.ndarray, cfg: GamConfig, *,
+              item_ids: np.ndarray | None = None, n_shards: int = 1,
+              min_overlap: int = 1, bucket: int = 256,
+              mesh=None) -> "ShardedGamIndex":
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        factors = np.asarray(factors, np.float32)
+        n, k = factors.shape
+        if item_ids is None:
+            item_ids = np.arange(n, dtype=np.int64)
+        item_ids = np.asarray(item_ids, np.int64)
+        if len(np.unique(item_ids)) != n:
+            raise ValueError("item_ids must be unique")
+        order = np.argsort(item_ids)
+        item_ids, factors = item_ids[order], factors[order]
+
+        tau, vals = sparse_map(jnp.asarray(factors), cfg)
+        tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+
+        cap = -(-n // n_shards) if n else 1
+        tables, counts, spills = [], [], []
+        for s in range(n_shards):
+            lo, hi = s * cap, min((s + 1) * cap, n)
+            t, c, sp = build_segment(tau[lo:hi], cfg.p, bucket,
+                                     mask[lo:hi], sentinel=cap)
+            tables.append(t)
+            counts.append(c)
+            spills.append(sp)
+        width = max((sp.size for sp in spills), default=0)
+        spills = np.stack([
+            np.concatenate([sp, np.full(width - sp.size, cap, np.int32)])
+            for sp in spills
+        ]) if width else np.full((n_shards, 0), cap, np.int32)
+
+        flat = np.zeros((n_shards * cap, k), np.float32)
+        flat[:n] = factors
+        alive = np.zeros(n_shards * cap, bool)
+        alive[:n] = True
+
+        tables_j = jnp.asarray(np.stack(tables))
+        counts_j = jnp.asarray(np.stack(counts))
+        spills_j = jnp.asarray(spills)
+        factors_j = jnp.asarray(flat)
+        if mesh is not None:
+            from repro.sharding.specs import index_shardings
+            arrs = {"tables": tables_j, "counts": counts_j,
+                    "spills": spills_j, "factors": factors_j}
+            arrs = jax.device_put(arrs, index_shardings(mesh, arrs))
+            tables_j, counts_j = arrs["tables"], arrs["counts"]
+            spills_j, factors_j = arrs["spills"], arrs["factors"]
+        return ShardedGamIndex(cfg, item_ids, tables_j, counts_j, spills_j,
+                               factors_j, alive, n_shards, cap, min_overlap,
+                               bucket, mesh)
+
+    # ------------------------------------------------------------- state
+
+    @property
+    def n_live(self) -> int:
+        return int(self._alive_host.sum())
+
+    def kill(self, ids) -> None:
+        """Tombstone catalog ids (deleted or superseded by a delta upsert).
+        O(batch) scatter on device — never re-uploads the full alive array."""
+        rows = [r for i in np.asarray(ids).ravel()
+                if (r := self._row_of.get(int(i))) is not None]
+        if not rows:
+            return
+        self._alive_host[rows] = False
+        self.alive = self.alive.at[jnp.asarray(rows, jnp.int32)].set(False)
+
+    def posting_load(self) -> np.ndarray:
+        """(S,) total posting entries per shard — the balance statistic."""
+        return np.asarray(jnp.sum(self.counts, axis=-1))
+
+    # ------------------------------------------------------------- query
+
+    def query(self, users: jax.Array, q_tau: jax.Array, q_mask: jax.Array,
+              kappa: int, *, exact: bool = False) -> ShardTopK:
+        """users (Q, k) f32 + mapped query patterns -> merged top-kappa.
+
+        ``exact=True`` bypasses candidate masking (scores every live row) —
+        the brute-force reference path through the same kernel."""
+        if exact:
+            masks = jnp.broadcast_to(self.alive[None, :],
+                                     (users.shape[0], self.alive.shape[0]))
+        else:
+            masks = _shard_masks(self.tables, self.spills, q_tau, q_mask,
+                                 min_overlap=self.min_overlap,
+                                 cap=self.shard_cap)
+            masks = masks & self.alive[None, :]
+        vals, rows, shard_cand = _score_and_merge(
+            users, self.factors, masks, kappa=kappa,
+            n_shards=self.n_shards, cap=self.shard_cap)
+        return ShardTopK(scores=vals, rows=rows, shard_candidates=shard_cand)
+
+    def rows_to_ids(self, rows: np.ndarray, scores: np.ndarray) -> np.ndarray:
+        """Global rows -> catalog ids; empty (NEG-scored) slots -> -1."""
+        rows = np.asarray(rows, np.int64)
+        padded_ids = np.full(self.n_shards * self.shard_cap, -1, np.int64)
+        padded_ids[: len(self.item_ids)] = self.item_ids
+        out = padded_ids[rows]
+        out[np.asarray(scores) <= NEG / 2] = -1
+        return out

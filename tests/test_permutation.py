@@ -4,8 +4,6 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import permutation as perm
 
@@ -117,12 +115,19 @@ def test_parse_tree_no_accidental_overlap():
             assert hist(pats[i], pos) == hist(pats[j], pos)
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.integers(2, 32), st.integers(0, 2**31 - 1), st.integers(1, 4))
-def test_dary_one_hot_in_range_and_injective(k, seed, d):
-    rng = np.random.default_rng(seed)
-    h = rng.integers(-d, d + 1, size=(8, k))
-    tau = np.asarray(perm.one_hot_dary_tau(jnp.asarray(h), d))
-    assert tau.min() >= 0 and tau.max() < perm.one_hot_dary_dim(k, d)
-    for row in tau:
-        assert len(set(row.tolist())) == k
+def test_dary_one_hot_in_range_and_injective():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, 32), st.integers(0, 2**31 - 1), st.integers(1, 4))
+    def check(k, seed, d):
+        rng = np.random.default_rng(seed)
+        h = rng.integers(-d, d + 1, size=(8, k))
+        tau = np.asarray(perm.one_hot_dary_tau(jnp.asarray(h), d))
+        assert tau.min() >= 0 and tau.max() < perm.one_hot_dary_dim(k, d)
+        for row in tau:
+            assert len(set(row.tolist())) == k
+
+    check()

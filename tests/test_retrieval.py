@@ -2,8 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex
 from repro.core.mapping import GamConfig, densify, pattern_overlap, sparse_map
@@ -52,35 +50,42 @@ def test_close_factors_overlap_far_factors_conflict():
     assert ov_near > 4 * max(ov_far, 0.5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(4, 24), st.integers(0, 2**31 - 1))
-def test_overlap_decreases_with_angle_property(k, seed):
-    cfg = GamConfig(k=k, scheme="parse_tree")
-    rng = np.random.default_rng(seed)
-    z = rng.normal(size=(k,)).astype(np.float32)
-    z /= np.linalg.norm(z)
-    orth = rng.normal(size=(k,)).astype(np.float32)
-    orth -= (orth @ z) * z
-    orth /= np.linalg.norm(orth)
-    angles = np.linspace(0, np.pi, 9)
-    pts = np.stack([np.cos(a) * z + np.sin(a) * orth for a in angles])
-    tau, _ = sparse_map(jnp.asarray(pts), cfg)
-    tau0, _ = sparse_map(jnp.asarray(z[None]), cfg)
-    ov = np.asarray(pattern_overlap(tau0, tau))
-    # overlap at angle 0 is full; at pi the support signs are mirrored so only
-    # matching zero-runs may still share slots — strictly less than full
-    assert ov[0] == k
-    assert ov[-1] < k
-    # support coordinates (nonzero pattern) never overlap at angle pi
-    from repro.core.tessellation import ternary_pattern
-    p0 = np.asarray(ternary_pattern(jnp.asarray(z[None])))[0]
-    ppi = np.asarray(ternary_pattern(jnp.asarray(pts[-1:])))[0]
-    t0, tpi = np.asarray(tau0)[0], np.asarray(tau)[-1]
-    sup_slots0 = set(t0[p0 != 0].tolist())
-    sup_slots_pi = set(tpi[ppi != 0].tolist())
-    assert not (sup_slots0 & sup_slots_pi)
-    # loose monotonicity: first half >= second half on average
-    assert ov[:4].mean() >= ov[5:].mean()
+def test_overlap_decreases_with_angle_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(4, 24), st.integers(0, 2**31 - 1))
+    def check(k, seed):
+        cfg = GamConfig(k=k, scheme="parse_tree")
+        rng = np.random.default_rng(seed)
+        z = rng.normal(size=(k,)).astype(np.float32)
+        z /= np.linalg.norm(z)
+        orth = rng.normal(size=(k,)).astype(np.float32)
+        orth -= (orth @ z) * z
+        orth /= np.linalg.norm(orth)
+        angles = np.linspace(0, np.pi, 9)
+        pts = np.stack([np.cos(a) * z + np.sin(a) * orth for a in angles])
+        tau, _ = sparse_map(jnp.asarray(pts), cfg)
+        tau0, _ = sparse_map(jnp.asarray(z[None]), cfg)
+        ov = np.asarray(pattern_overlap(tau0, tau))
+        # overlap at angle 0 is full; at pi the support signs are mirrored so
+        # only matching zero-runs may still share slots — less than full
+        assert ov[0] == k
+        assert ov[-1] < k
+        # support coordinates (nonzero pattern) never overlap at angle pi
+        from repro.core.tessellation import ternary_pattern
+        p0 = np.asarray(ternary_pattern(jnp.asarray(z[None])))[0]
+        ppi = np.asarray(ternary_pattern(jnp.asarray(pts[-1:])))[0]
+        t0, tpi = np.asarray(tau0)[0], np.asarray(tau)[-1]
+        sup_slots0 = set(t0[p0 != 0].tolist())
+        sup_slots_pi = set(tpi[ppi != 0].tolist())
+        assert not (sup_slots0 & sup_slots_pi)
+        # loose monotonicity: first half >= second half on average
+        assert ov[:4].mean() >= ov[5:].mean()
+
+    check()
 
 
 # ---------------------------------------------------------------- index

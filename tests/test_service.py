@@ -1,0 +1,358 @@
+"""Sharded streaming retrieval service: parity, streaming, microbatching
+(tests for src/repro/service/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inverted_index import DeviceIndex, InvertedIndex, build_segment
+from repro.core.mapping import GamConfig, sparse_map
+from repro.core.retrieval import BruteForceRetriever, GamRetriever
+from repro.service import (
+    DeltaSegment,
+    GamService,
+    Microbatcher,
+    ServiceConfig,
+    ServiceMetrics,
+    ShardedGamIndex,
+)
+
+
+def _factors(n, k, seed):
+    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+
+CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
+
+
+def _fresh_service(svc: GamService) -> GamService:
+    """A service built from scratch over svc's current catalog."""
+    ids = np.sort(np.fromiter(svc.catalog.keys(), np.int64, svc.n_items))
+    fac = np.stack([svc.catalog[int(i)] for i in ids])
+    return GamService(ids, fac, svc.cfg, svc.svc)
+
+
+# ------------------------------------------------------- vectorised build
+
+
+def _build_segment_reference(item_indices, p, bucket, mask):
+    """The original sequential O(N*k) build, kept as the test oracle."""
+    n = item_indices.shape[0]
+    table = np.full((p, bucket), n, dtype=np.int32)
+    counts = np.zeros(p, dtype=np.int32)
+    spilled = set()
+    for item in range(n):
+        for slot in item_indices[item][mask[item]]:
+            c = counts[slot]
+            if c < bucket:
+                table[slot, c] = item
+            else:
+                spilled.add(item)
+            counts[slot] = c + 1
+    spill = np.fromiter(sorted(spilled), dtype=np.int32, count=len(spilled))
+    return table, np.minimum(counts, bucket).astype(np.int32), spill
+
+
+@pytest.mark.parametrize("bucket", [4, 64])
+def test_vectorised_segment_build_matches_sequential(bucket):
+    items = _factors(300, 16, 0)
+    tau, vals = sparse_map(jnp.asarray(items), CFG)
+    tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+    t_ref, c_ref, s_ref = _build_segment_reference(tau, CFG.p, bucket, mask)
+    t_vec, c_vec, s_vec = build_segment(tau, CFG.p, bucket, mask)
+    np.testing.assert_array_equal(t_vec, t_ref)
+    np.testing.assert_array_equal(c_vec, c_ref)
+    np.testing.assert_array_equal(s_vec, s_ref)
+
+
+# ------------------------------------------------- vectorised device query
+
+
+def test_gam_retriever_device_query_is_batched_and_consistent():
+    """The device=True query path (one masked_topk over the batch) agrees
+    with the per-query CPU path: identical candidate counts, and identical
+    top-kappa up to float summation order in the scores."""
+    items = _factors(400, 16, 1)
+    users = _factors(20, 16, 2)
+    cpu = GamRetriever(items, CFG, min_overlap=2)
+    dev = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    r_cpu = cpu.query(users, 10)
+    r_dev = dev.query(users, 10)
+    np.testing.assert_array_equal(r_dev.n_scored, r_cpu.n_scored)
+    for qi in range(20):
+        c = set(r_cpu.ids[qi][r_cpu.ids[qi] >= 0].tolist())
+        d = set(r_dev.ids[qi][r_dev.ids[qi] >= 0].tolist())
+        assert len(c & d) >= 0.9 * len(c), (qi, c, d)
+        for slot, iid in enumerate(r_dev.ids[qi]):
+            if iid >= 0:
+                np.testing.assert_allclose(
+                    r_dev.scores[qi, slot], users[qi] @ items[iid], rtol=1e-4)
+
+
+# ------------------------------------------------------- sharded parity
+
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_index_bit_identical_to_single_shard(n_shards):
+    """Acceptance: multi-shard query returns bit-identical top-kappa ids
+    (and scores) to the single-shard device retriever on a fixed catalog.
+    n=350 is deliberately not divisible by 3 (pad-row handling)."""
+    items = _factors(350, 16, 3)
+    users = _factors(16, 16, 4)
+    single = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    r1 = single.query(users, 10)
+    svc = GamService(np.arange(350), items, CFG, ServiceConfig(
+        n_shards=n_shards, min_overlap=2, kappa=10, bucket=512))
+    ids, scores = svc.query(users, 10)
+    np.testing.assert_array_equal(ids, r1.ids)
+    finite = np.isfinite(r1.scores)
+    np.testing.assert_array_equal(finite, np.isfinite(scores))
+    np.testing.assert_array_equal(scores[finite], r1.scores[finite])
+
+
+def test_sharded_exact_path_matches_brute_force():
+    items = _factors(200, 16, 5)
+    users = _factors(8, 16, 6)
+    svc = GamService(np.arange(200), items, CFG,
+                     ServiceConfig(n_shards=2, kappa=7))
+    ids, _ = svc.query(users, 7, exact=True)
+    brute = BruteForceRetriever(items).query(users, 7)
+    np.testing.assert_array_equal(ids, brute.ids)
+
+
+def test_sharded_spill_preserves_recall():
+    """Tiny buckets force spill in every shard; spill rows stay candidates,
+    so exact-match items are never lost."""
+    items = _factors(300, 16, 7)
+    svc = GamService(np.arange(300), items, CFG, ServiceConfig(
+        n_shards=2, min_overlap=1, kappa=1, bucket=4))
+    ids, _ = svc.query(items[:32], 1)       # query each item with itself
+    assert (ids[:, 0] == np.arange(32)).all()
+
+
+def test_shard_balance_and_posting_load():
+    items = _factors(256, 16, 8)
+    idx = ShardedGamIndex.build(items, CFG, n_shards=4, min_overlap=1)
+    load = idx.posting_load()
+    assert load.shape == (4,)
+    assert load.sum() > 0
+    # random catalog, contiguous partition: shards within 2x of each other
+    assert load.max() <= 2 * max(load.min(), 1)
+
+
+# ------------------------------------------------------- streaming delta
+
+
+def test_upsert_then_query_matches_fresh_rebuild():
+    """Acceptance: upsert-then-query == fresh-rebuild-then-query, exactly,
+    both before and after compact()."""
+    items = _factors(250, 16, 9)
+    users = _factors(12, 16, 10)
+    svc = GamService(np.arange(250), items, CFG, ServiceConfig(
+        n_shards=2, min_overlap=2, kappa=10, bucket=512))
+    rng = np.random.default_rng(11)
+    # inserts, overwrites, deletes — interleaved
+    svc.upsert([250, 251, 252], _factors(3, 16, 12))
+    svc.delete([17, 99])
+    svc.upsert([5, 250], _factors(2, 16, 13))    # overwrite base + delta rows
+    ids_a, sc_a = svc.query(users, 10)
+
+    fresh = _fresh_service(svc)
+    ids_f, sc_f = fresh.query(users, 10)
+    np.testing.assert_array_equal(ids_a, ids_f)
+    np.testing.assert_array_equal(sc_a, sc_f)
+
+    svc.compact()
+    assert len(svc.delta) == 0
+    ids_c, sc_c = svc.query(users, 10)
+    np.testing.assert_array_equal(ids_c, ids_f)
+    np.testing.assert_array_equal(sc_c, sc_f)
+
+
+def test_delete_then_query_matches_fresh_rebuild():
+    items = _factors(150, 16, 14)
+    users = _factors(6, 16, 15)
+    svc = GamService(np.arange(150), items, CFG, ServiceConfig(
+        n_shards=3, min_overlap=1, kappa=8, bucket=512))
+    svc.delete(np.arange(0, 150, 7))
+    ids_a, sc_a = svc.query(users, 8)
+    fresh = _fresh_service(svc)
+    ids_f, sc_f = fresh.query(users, 8)
+    np.testing.assert_array_equal(ids_a, ids_f)
+    np.testing.assert_array_equal(sc_a, sc_f)
+    # deleted ids never appear
+    assert not np.isin(ids_a, np.arange(0, 150, 7)).any()
+
+
+def test_deleted_items_not_returned_even_as_self_query():
+    items = _factors(60, 16, 16)
+    svc = GamService(np.arange(60), items, CFG,
+                     ServiceConfig(min_overlap=1, kappa=60))
+    svc.delete([3])
+    ids, _ = svc.query(items[3:4], 60)
+    assert 3 not in set(ids.ravel().tolist())
+
+
+def test_upsert_duplicate_ids_in_one_batch_last_wins():
+    items = _factors(30, 16, 23)
+    svc = GamService(np.arange(30), items, CFG,
+                     ServiceConfig(n_shards=2, min_overlap=1, kappa=31))
+    f = _factors(2, 16, 24)
+    svc.upsert([40, 40], f)
+    assert len(svc.delta) == 1
+    np.testing.assert_array_equal(svc.delta.factors[0], f[1])
+    ids, _ = svc.query(f[1:2], 31)
+    assert (ids == 40).sum() == 1             # never returned twice
+    ids_f, _ = _fresh_service(svc).query(f[1:2], 31)
+    np.testing.assert_array_equal(ids, ids_f)
+
+
+def test_delta_segment_rewrites_in_place():
+    d = DeltaSegment(CFG, min_overlap=1)
+    f1, f2 = _factors(2, 16, 17)
+    d.upsert([7], f1[None])
+    d.upsert([7], f2[None])                   # overwrite, not append
+    assert len(d) == 1
+    np.testing.assert_array_equal(d.factors[0], f2)
+    d.delete([7])
+    assert len(d) == 0
+
+
+def test_delta_factor_capacity_is_shape_stable():
+    """Consecutive upserts keep the device factor array in power-of-two
+    capacity bands, so the jit'd scoring path doesn't recompile per
+    mutation."""
+    d = DeltaSegment(CFG, min_overlap=1)
+    d.upsert([0, 1, 2], _factors(3, 16, 25))
+    assert d._factors_dev.shape[0] == 4
+    d.upsert([3], _factors(1, 16, 26))
+    assert d._factors_dev.shape[0] == 4       # same shape: no recompile
+    d.upsert([4], _factors(1, 16, 27))
+    assert d._factors_dev.shape[0] == 8
+
+
+# ------------------------------------------------------- microbatcher
+
+
+def _manual_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    return t, clock
+
+
+def test_microbatcher_size_trigger_ordering_and_padding():
+    """Short + full batches: every request gets ITS result (ordering) and
+    pad rows never leak (padding)."""
+    items = _factors(120, 16, 18)
+    users = _factors(7, 16, 19)               # 7 requests, batch of 4
+    t, clock = _manual_clock()
+    svc = GamService(np.arange(120), items, CFG, ServiceConfig(
+        n_shards=2, min_overlap=1, kappa=5, batch_size=4, max_delay_s=0.01),
+        clock=clock)
+    ref_ids, ref_sc = svc.query(users, 5)
+
+    reqs = []
+    for i in range(7):
+        t[0] += 0.001
+        reqs.append(svc.batcher.submit(users[i]))
+    assert svc.batcher.pending == 3           # size trigger fired at 4
+    assert not svc.batcher.poll()             # deadline not reached yet
+    t[0] += 0.02
+    assert svc.batcher.poll()                 # deadline trigger
+    assert svc.batcher.pending == 0
+    for i, rid in enumerate(reqs):
+        res = svc.batcher.result(rid)
+        assert res is not None
+        np.testing.assert_array_equal(res.ids, ref_ids[i])
+        np.testing.assert_array_equal(res.scores, ref_sc[i])
+        assert res.latency_s >= 0.0
+    assert svc.batcher.result(reqs[0]) is None    # popped exactly once
+    # pad rows never pollute per-request stats: 7 requests -> 7 samples
+    assert len(svc.metrics._discards) == 7
+
+
+def test_microbatcher_latency_and_occupancy_metrics():
+    t, clock = _manual_clock()
+    metrics = ServiceMetrics(clock)
+
+    def query_fn(users, n_real):
+        t[0] += 0.004                          # 4ms of "device time"
+        assert n_real == 1                     # pad rows flagged to callee
+        b = users.shape[0]
+        return np.zeros((b, 3), np.int64), np.zeros((b, 3), np.float32)
+
+    mb = Microbatcher(query_fn, dim=4, batch_size=4, max_delay_s=0.01,
+                      clock=clock, metrics=metrics)
+    mb.submit(np.zeros(4))
+    t[0] += 0.02
+    mb.poll()
+    snap = metrics.snapshot()
+    assert snap["n_requests"] == 1 and snap["n_batches"] == 1
+    assert snap["occupancy_mean"] == 0.25      # 1 of 4 slots
+    np.testing.assert_allclose(snap["latency_p50_ms"], 24.0)  # 20ms wait + 4
+
+
+# ------------------------------------------------------- property test
+
+
+def test_delta_items_never_silently_dropped_property():
+    """Property (hypothesis): after any upsert stream, every live item
+    queried by its own factor is returned (the index never loses a delta
+    item) and every deleted item is not."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    items = _factors(40, 16, 20)
+    base = GamService(np.arange(40), items, CFG, ServiceConfig(
+        n_shards=2, min_overlap=1, kappa=48, bucket=512))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 47), st.integers(0, 2**31 - 1),
+                              st.booleans()),
+                    min_size=1, max_size=6))
+    def check(ops):
+        svc = GamService(np.arange(40), items, CFG, ServiceConfig(
+            n_shards=2, min_overlap=1, kappa=48, bucket=512))
+        for iid, seed, is_delete in ops:
+            if is_delete:
+                svc.delete([iid])
+            else:
+                svc.upsert([iid], _factors(1, 16, seed))
+        live = sorted(svc.catalog)
+        fac = np.stack([svc.catalog[i] for i in live])
+        ids, _ = svc.query(fac, 48)
+        for row, iid in enumerate(live):
+            assert iid in set(ids[row].tolist()), (iid, ids[row])
+        dead = set(range(48)) - set(live)
+        assert not (np.isin(ids, sorted(dead))).any()
+
+    check()
+
+
+# ------------------------------------------------------- device placement
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (XLA_FLAGS host platform count)")
+def test_index_mesh_places_shards_on_devices():
+    from repro.launch.mesh import make_index_mesh
+
+    mesh = make_index_mesh(2)
+    items = _factors(128, 16, 21)
+    idx = ShardedGamIndex.build(items, CFG, n_shards=2, min_overlap=1,
+                                mesh=mesh)
+    # stacked posting tables are partitioned over the item axis
+    assert not idx.tables.sharding.is_fully_replicated
+    # and the sharded query still matches the single-shard retriever
+    users = _factors(4, 16, 22)
+    svc = GamService(np.arange(128), items, CFG,
+                     ServiceConfig(n_shards=2, min_overlap=2, bucket=512),
+                     mesh=mesh)
+    single = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    ids, _ = svc.query(users, 10)
+    np.testing.assert_array_equal(ids, single.query(users, 10).ids)

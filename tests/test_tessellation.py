@@ -3,8 +3,6 @@ eps-bound, scale invariance (paper §5)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.tessellation import (
     dary_pattern,
@@ -76,33 +74,47 @@ def test_dary_pattern_no_zero_vector():
     assert (np.abs(h).sum(1) >= 1).all()
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    st.integers(2, 12),
-    st.integers(0, 2**31 - 1),
-    st.floats(0.1, 100.0),
-)
-def test_scale_invariance_property(k, seed, scale):
+def test_scale_invariance_property():
     """Paper §5: Alg 2 is scale invariant in z."""
-    z = np.random.default_rng(seed).normal(size=(4, k)).astype(np.float32)
-    a1 = np.asarray(ternary_pattern(jnp.asarray(z)))
-    a2 = np.asarray(ternary_pattern(jnp.asarray(z * scale)))
-    np.testing.assert_array_equal(a1, a2)
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.integers(2, 12),
+        st.integers(0, 2**31 - 1),
+        st.floats(0.1, 100.0),
+    )
+    def check(k, seed, scale):
+        z = np.random.default_rng(seed).normal(size=(4, k)).astype(np.float32)
+        a1 = np.asarray(ternary_pattern(jnp.asarray(z)))
+        a2 = np.asarray(ternary_pattern(jnp.asarray(z * scale)))
+        np.testing.assert_array_equal(a1, a2)
+
+    check()
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 10), st.integers(0, 2**31 - 1))
-def test_alg2_is_argmax_over_support_sizes(k, seed):
+def test_alg2_is_argmax_over_support_sizes():
     """Directly check optimality: Alg 2's inner product beats every
     (sign-matched, top-t) alternative, which Lemma 1's proof shows is the
     only family containing the optimum."""
-    z = np.random.default_rng(seed).normal(size=(k,)).astype(np.float32)
-    zn = z / np.linalg.norm(z)
-    a = np.asarray(tess_vector(jnp.asarray(z))).astype(np.float64)
-    best = a @ zn
-    order = np.argsort(-np.abs(zn))
-    for t in range(1, k + 1):
-        cand = np.zeros(k)
-        cand[order[:t]] = np.sign(zn[order[:t]])
-        cand /= np.sqrt(t)
-        assert best >= cand @ zn - 1e-5
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 10), st.integers(0, 2**31 - 1))
+    def check(k, seed):
+        z = np.random.default_rng(seed).normal(size=(k,)).astype(np.float32)
+        zn = z / np.linalg.norm(z)
+        a = np.asarray(tess_vector(jnp.asarray(z))).astype(np.float64)
+        best = a @ zn
+        order = np.argsort(-np.abs(zn))
+        for t in range(1, k + 1):
+            cand = np.zeros(k)
+            cand[order[:t]] = np.sign(zn[order[:t]])
+            cand /= np.sqrt(t)
+            assert best >= cand @ zn - 1e-5
+
+    check()
