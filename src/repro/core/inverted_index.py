@@ -122,18 +122,25 @@ class InvertedIndex:
         """Candidates for one query: ids whose pattern shares >= min_overlap
         slots with the query's pattern.  Returns (candidate_ids, overlaps).
 
-        Overlap counting is a per-slot vectorised scatter-add into a dense
-        (n_items,) counter — an item appears at most once per posting list,
-        so plain fancy-index increments are exact, and this is ~10x faster
-        than sort/unique over the concatenated hits."""
+        Fully vectorised: the query's posting slices are gathered with one
+        arange-offset trick and accumulated with a single ``np.add.at`` into
+        a dense (n_items,) counter — no per-slot Python loop, which is what
+        the paper-faithful retrieval-speedup benchmarks time."""
         q = np.asarray(query_indices)
         if mask is not None:
             q = q[np.asarray(mask, bool)]
         if q.size == 0:
             return np.empty(0, np.int32), np.empty(0, np.int64)
+        starts = self.offsets[q]
+        lens = self.offsets[q + 1] - starts
+        total = int(lens.sum())
+        # concatenated posting slices: arange over the total hit count,
+        # rebased per slot from its cumulative start to its CSR start
+        shift = np.cumsum(lens) - lens
+        pos = np.arange(total, dtype=np.int64) + np.repeat(starts - shift,
+                                                           lens)
         counts = np.zeros(self.n_items, np.int16)
-        for s in q:
-            counts[self.posting_list(int(s))] += 1
+        np.add.at(counts, self.postings[pos], 1)
         ids = np.nonzero(counts >= min_overlap)[0].astype(np.int32)
         return ids, counts[ids].astype(np.int64)
 

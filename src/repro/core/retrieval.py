@@ -16,8 +16,9 @@ import numpy as np
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex
 from repro.core.mapping import GamConfig, sparse_map
+from repro.kernels.gam_retrieve import build_retrieval_meta
 from repro.kernels.gam_score import NEG
-from repro.kernels.ops import gam_score
+from repro.kernels.ops import gam_retrieve, gam_score
 
 __all__ = ["BruteForceRetriever", "GamRetriever", "RetrievalResult",
            "masked_topk", "recovery_accuracy"]
@@ -25,14 +26,15 @@ __all__ = ["BruteForceRetriever", "GamRetriever", "RetrievalResult",
 
 def masked_topk(users: jax.Array, items: jax.Array, masks: jax.Array,
                 kappa: int) -> tuple[jax.Array, jax.Array]:
-    """Shared masked top-kappa scoring path.
+    """Dense masked top-kappa reference path.
 
     ``users``: (Q, k) f32, ``items``: (N, k) f32, ``masks``: (Q, N) bool.
-    Exact inner products via the fused gam_score kernel where the candidate
-    mask is set, NEG elsewhere; ``lax.top_k`` breaks score ties by lowest item
-    row.  The GamRetriever device path, the service's index shards, and the
-    streaming delta segment all score through this one function, so their
-    results are bit-comparable.
+    Exact inner products via the gam_score kernel where the candidate mask is
+    set, NEG elsewhere; ``lax.top_k`` breaks score ties by lowest item row.
+    Serving no longer goes through here — the fused ``gam_retrieve`` kernel
+    realises the identical (score desc, row asc) order without ever
+    materialising the (Q, N) mask/score tensors — but this stays as the
+    bit-exact oracle the fused path is tested and benchmarked against.
     """
     scores = gam_score(users, items, masks)
     vals, ids = jax.lax.top_k(scores, kappa)
@@ -102,6 +104,17 @@ class GamRetriever:
             else None
         )
         self._items_dev = jnp.asarray(self.items) if device else None
+        # block metadata for the fused streaming kernel: pattern bitsets,
+        # per-block unions (skip prepass) and the bucket-spill flags that
+        # keep its candidate set bit-identical to the posting-table path
+        self._retrieve_meta = (
+            build_retrieval_meta(
+                self.item_tau, self.item_mask, cfg.p,
+                spill_rows=np.asarray(self.device_index.spill),
+                bn=min(512, -(-max(len(self.items), 1) // 128) * 128))
+            if device
+            else None
+        )
 
     @property
     def index(self) -> InvertedIndex:
@@ -146,21 +159,26 @@ class GamRetriever:
         )
 
     def _query_device(self, users: np.ndarray, kappa: int) -> RetrievalResult:
-        """Vectorised jit path: one batched candidate-mask pass + one
-        masked_topk over the whole query batch (no per-query Python loop)."""
+        """Streaming jit path: one fused gam_retrieve call over the query
+        batch — candidate pruning, exact scoring and the top-kappa reduction
+        happen on chip, so nothing of size (Q, N) ever reaches HBM.
+        ``n_scored`` comes from the kernel's per-block candidate counts."""
         n = self.items.shape[0]
         q = users.shape[0]
-        masks = self.candidate_masks(users)
+        q_tau, q_mask = self.map_queries(users)
         kk = min(kappa, n)
-        vals, ids = masked_topk(jnp.asarray(users), self._items_dev, masks, kk)
-        vals = np.asarray(vals, np.float32)
-        ids = np.asarray(ids, np.int64)
-        empty = vals <= NEG / 2          # top-k slots holding non-candidates
+        res = gam_retrieve(jnp.asarray(users), self._items_dev,
+                           jnp.asarray(q_tau), jnp.asarray(q_mask),
+                           self._retrieve_meta, kk,
+                           min_overlap=self.min_overlap)
+        vals = np.asarray(res.vals, np.float32)
+        rows = np.asarray(res.rows, np.int64)
+        empty = vals <= NEG / 2          # slots no candidate could fill
         ids_out = np.full((q, kappa), -1, np.int64)
         sc_out = np.full((q, kappa), -np.inf, np.float32)
-        ids_out[:, :kk] = np.where(empty, -1, ids)
+        ids_out[:, :kk] = np.where(empty, -1, rows)
         sc_out[:, :kk] = np.where(empty, -np.inf, vals)
-        n_scored = np.asarray(jnp.sum(masks, axis=-1), np.int64)
+        n_scored = np.asarray(res.blk_counts, np.int64).sum(axis=1)
         return RetrievalResult(
             ids=ids_out,
             scores=sc_out,
@@ -178,10 +196,15 @@ class GamRetriever:
 
 
 def recovery_accuracy(retrieved_ids: np.ndarray, true_ids: np.ndarray) -> np.ndarray:
-    """Fraction of the true top-kappa recovered, per query (paper §6 metric)."""
-    out = np.zeros(len(true_ids))
-    for i, (ret, true) in enumerate(zip(retrieved_ids, true_ids)):
-        t = set(int(x) for x in true if x >= 0)
-        r = set(int(x) for x in ret if x >= 0)
-        out[i] = len(t & r) / max(len(t), 1)
-    return out
+    """Fraction of the true top-kappa recovered, per query (paper §6 metric).
+
+    Vectorised numpy membership over the (Q, kappa) id arrays; ``-1`` pads on
+    either side never count (ids within a row are unique, so the pairwise
+    equality reduction is exactly the per-row set intersection size)."""
+    ret = np.asarray(retrieved_ids)
+    true = np.asarray(true_ids)
+    hit = (true[:, :, None] == ret[:, None, :]) & (true >= 0)[:, :, None]
+    hit &= (ret >= 0)[:, None, :]
+    inter = hit.any(axis=-1).sum(axis=-1)
+    denom = np.maximum((true >= 0).sum(axis=-1), 1)
+    return inter / denom

@@ -1,2 +1,8 @@
-"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
-from repro.kernels.ops import decode_attention, gam_score, tess_project
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
+
+Retrieval executes through ``gam_retrieve`` — a streaming kernel that prunes,
+scores and top-kappa-reduces candidate blocks on chip (O(Q*kappa) HBM output);
+``gam_score`` is the dense masked-scoring kernel kept as its bit-exact
+reference path."""
+from repro.kernels.ops import (decode_attention, gam_retrieve, gam_score,
+                               tess_project)

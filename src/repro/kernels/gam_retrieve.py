@@ -1,0 +1,333 @@
+"""Fused streaming retrieval kernel: block-skipping candidate scoring with
+on-chip top-kappa (the GAM serving hot loop).
+
+The dense path (``candidate_mask_from_table`` + ``gam_score`` + ``lax.top_k``)
+materialises a (Q, N) bool mask and a (Q, N) score tensor in HBM even though
+the paper's whole point is that retrieval cost should be proportional to the
+*candidate* set.  This kernel fuses all three stages into one streaming pass
+over item blocks so HBM output shrinks to O(Q * kappa):
+
+  * **Candidate overlap on the fly** — each row's sparsity pattern (the tau
+    destinations of phi with non-zero value) is packed into ceil(p/32) uint32
+    words; pattern overlap is ``popcount(q_bits & item_bits)``, which equals
+    the posting-table overlap count exactly (tau destinations are unique per
+    row, and bucket overflow only ever *removes* table counts for items that
+    are then spill-listed — spill rows are unconditional candidates here as
+    in the table path, so the candidate set is bit-identical).
+
+  * **Block skipping** — a prepass intersects each query's bits with the
+    per-block *union* pattern (posting-derived block metadata built at index
+    time).  The union popcount upper-bounds every member item's overlap, so a
+    (Q_blk, N_blk) tile whose bound is below ``min_overlap`` (and holds no
+    spill row) provably has zero candidates and is skipped under ``pl.when``:
+    no MXU work, no accumulator merge, no HBM writes for the discarded block.
+
+  * **On-chip top-kappa** — a flash-attention-style running accumulator of
+    (score, global row) pairs lives in the revisited output block (VMEM
+    resident across the item-block grid axis).  The merge implements the
+    total order (score desc, row asc) — exactly ``lax.top_k``'s tie-break
+    over the full masked score row — so results are bit-identical to the
+    dense ``masked_topk`` path after empty-slot normalisation.
+
+Grid: (Q / bq, N / bn) with the item axis innermost; queries, query bits and
+the accumulator stay resident in VMEM while item blocks stream through.
+
+Empty-slot contract: slots with no candidate return ``(NEG, -1)``; callers
+never see a fabricated row id for a non-candidate (the dense path instead
+returns an arbitrary ``lax.top_k`` index that every consumer immediately
+filters on ``score <= NEG / 2`` — both paths are identical post-filter).
+
+Interpret mode (CPU) runs the same candidate/skip semantics but may use a
+``lax.top_k``-based merge (``loop_merge=False``); the Mosaic path uses a
+kappa-step selection loop since sort primitives do not lower to TPU.  Both
+merges realise the same total order and are cross-checked in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gam_score import NEG
+
+__all__ = ["RetrievalMeta", "GamRetrieveResult", "build_retrieval_meta",
+           "gam_retrieve", "pack_patterns"]
+
+# Row sentinel for non-candidate tile entries: larger than any real global row
+# (catalogs < 2^30 rows) so the (score desc, row asc) tie-break at NEG always
+# prefers an accumulator "empty" slot (negative row) over a discarded item.
+_NO_ROW = np.int32(1 << 30)
+
+
+# --------------------------------------------------------------- metadata
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalMeta:
+    """Posting-derived block metadata the fused kernel streams against.
+
+    Built once at index time by :func:`build_retrieval_meta`; the per-item
+    pattern bitsets replace the (p, bucket) posting table on the query path,
+    and the per-block unions drive the zero-candidate tile skip.
+    """
+
+    item_bits_t: jax.Array   # (words, n_pad) uint32 — packed patterns, transposed
+    block_union: jax.Array   # (n_blocks, words) uint32 — OR of member patterns
+    block_spill: jax.Array   # (n_blocks,) bool — block holds a spill row
+    spill8: jax.Array        # (1, n_pad) int8 — per-row unconditional-candidate flag
+    p: int                   # pattern-space dimensionality
+    words: int               # ceil(p / 32)
+    bn: int                  # item-block width (grid tile on the item axis)
+    n_rows: int              # structural rows of the factor array served
+    n_pad: int               # n_rows rounded up to a multiple of bn
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_pad // self.bn
+
+
+def pack_patterns(tau: np.ndarray, mask: np.ndarray, p: int) -> np.ndarray:
+    """(n, k) tau destinations + non-zero mask -> (n, ceil(p/32)) uint32 bitsets."""
+    tau = np.asarray(tau)
+    mask = np.asarray(mask, bool)
+    n, _ = tau.shape
+    words = -(-p // 32)
+    bits = np.zeros((n, words), np.uint32)
+    rows = np.broadcast_to(np.arange(n)[:, None], tau.shape)
+    vals = np.uint32(1) << (tau % 32).astype(np.uint32)
+    np.bitwise_or.at(bits, (rows[mask], (tau // 32)[mask]), vals[mask])
+    return bits
+
+
+def _pack_patterns_jnp(tau: jax.Array, mask: jax.Array, words: int) -> jax.Array:
+    """Query-side packing, jit-traceable (tau destinations unique per row, so
+    scatter-add of distinct powers of two equals bitwise OR)."""
+    q, k = tau.shape
+    word = tau.astype(jnp.int32) // 32
+    bit = (tau % 32).astype(jnp.uint32)
+    vals = jnp.where(mask, jnp.left_shift(jnp.uint32(1), bit), jnp.uint32(0))
+    rows = jnp.broadcast_to(jnp.arange(q)[:, None], (q, k))
+    return jnp.zeros((q, words), jnp.uint32).at[rows, word].add(vals)
+
+
+def build_retrieval_meta(tau: np.ndarray, mask: np.ndarray, p: int, *,
+                         n_rows: int | None = None,
+                         spill_rows: np.ndarray | None = None,
+                         bn: int = 256) -> RetrievalMeta:
+    """Build the kernel's block metadata for ``n_rows`` structural rows.
+
+    ``tau``/``mask``: (n, k) patterns of the *real* rows, which must occupy
+    rows 0..n-1 of the served factor array (structural pad rows n..n_rows-1
+    carry empty patterns and can only become candidates via ``min_overlap=0``
+    + an ``alive`` mask, which callers with pad rows must supply).
+    ``spill_rows``: global row ids that are unconditional candidates (posting
+    bucket overflow — same recall-preserving semantics as ``DeviceIndex``).
+    """
+    tau = np.asarray(tau)
+    mask = np.asarray(mask, bool)
+    n = tau.shape[0]
+    n_rows = n if n_rows is None else int(n_rows)
+    if n_rows < n:
+        raise ValueError(f"n_rows={n_rows} < {n} pattern rows")
+    words = -(-p // 32)
+    bn = max(8, min(int(bn), -(-max(n_rows, 1) // 8) * 8))
+    n_blocks = -(-max(n_rows, 1) // bn)
+    n_pad = n_blocks * bn
+    bits = np.zeros((n_pad, words), np.uint32)
+    if n:
+        bits[:n] = pack_patterns(tau, mask, p)
+    spill = np.zeros(n_pad, bool)
+    if spill_rows is not None and np.asarray(spill_rows).size:
+        spill[np.asarray(spill_rows, np.int64)] = True
+    union = np.bitwise_or.reduce(bits.reshape(n_blocks, bn, words), axis=1)
+    return RetrievalMeta(
+        item_bits_t=jnp.asarray(np.ascontiguousarray(bits.T)),
+        block_union=jnp.asarray(union),
+        block_spill=jnp.asarray(spill.reshape(n_blocks, bn).any(axis=1)),
+        spill8=jnp.asarray(spill.astype(np.int8)[None, :]),
+        p=int(p), words=words, bn=bn, n_rows=n_rows, n_pad=n_pad,
+    )
+
+
+# ----------------------------------------------------------------- kernel
+
+
+def _overlap(qb, ibT, *, words, fused_words):
+    """Pattern-set intersection sizes: (bq, words) x (words, bn) -> (bq, bn)."""
+    if fused_words:
+        # one vectorised op over all words (interpret / XLA-friendly)
+        inter = qb[:, None, :] & jnp.transpose(ibT)[None, :, :]
+        return jnp.sum(jax.lax.population_count(inter).astype(jnp.int32),
+                       axis=-1)
+    # word-at-a-time 2D ops (Mosaic-friendly layouts)
+    ov = jnp.zeros((qb.shape[0], ibT.shape[1]), jnp.int32)
+    for w in range(words):
+        ov = ov + jax.lax.population_count(
+            qb[:, w:w + 1] & ibT[w:w + 1, :]).astype(jnp.int32)
+    return ov
+
+
+def _merge_topk(acc_s, acc_r, tile_s, tile_r, *, kappa, loop_merge):
+    """Running top-kappa merge under the total order (score desc, row asc).
+
+    Accumulator invariant (maintained by both merges): entries sorted by that
+    order, rows pairwise distinct, NEG "empty" slots carry negative rows that
+    beat the _NO_ROW sentinels of discarded items on score ties.
+    """
+    cat_s = jnp.concatenate([acc_s, tile_s], axis=1)
+    cat_r = jnp.concatenate([acc_r, tile_r], axis=1)
+    if not loop_merge:
+        # lax.top_k breaks score ties by position; accumulator entries precede
+        # the tile and hold strictly smaller rows on ties (earlier blocks),
+        # and tile columns are ascending-row — so position order == row order.
+        new_s, idx = jax.lax.top_k(cat_s, kappa)
+        return new_s, jnp.take_along_axis(cat_r, idx, axis=1)
+    # Mosaic path: kappa-step argmax selection (sort ops don't lower to TPU).
+    # Rows are pairwise distinct, so removing by row erases exactly one entry.
+    sel_s, sel_r = [], []
+    for _ in range(kappa):
+        best = jnp.max(cat_s, axis=1, keepdims=True)
+        row = jnp.min(jnp.where(cat_s == best, cat_r, _NO_ROW + jnp.int32(1)),
+                      axis=1, keepdims=True)
+        sel_s.append(best)
+        sel_r.append(row)
+        cat_s = jnp.where(cat_r == row, -jnp.inf, cat_s)
+    return jnp.concatenate(sel_s, axis=1), jnp.concatenate(sel_r, axis=1)
+
+
+def _kernel(skip_ref, u_ref, qb_ref, v_ref, ib_ref, sp_ref, al_ref,
+            vals_ref, rows_ref, cnt_ref, *,
+            kappa, min_overlap, bn, words, loop_merge, fused_words):
+    j = pl.program_id(1)
+    bq = u_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full((bq, kappa), NEG, jnp.float32)
+        # distinct negative sentinel rows: deterministic NEG-tie resolution
+        rows_ref[...] = -1 - jax.lax.broadcasted_iota(jnp.int32, (bq, kappa), 1)
+
+    cnt_ref[...] = jnp.zeros((bq, 1), jnp.int32)
+
+    @pl.when(skip_ref[0, 0] == 0)
+    def _tile():
+        ov = _overlap(qb_ref[...], ib_ref[...], words=words,
+                      fused_words=fused_words)
+        cand = ((ov >= min_overlap) | (sp_ref[...] != 0)) & (al_ref[...] != 0)
+        cnt_ref[...] = jnp.sum(cand.astype(jnp.int32), axis=1, keepdims=True)
+        scores = jax.lax.dot_general(
+            u_ref[...], v_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        col = jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+        tile_s = jnp.where(cand, scores, NEG)
+        tile_r = jnp.where(cand, j * bn + col, _NO_ROW + col)
+        new_s, new_r = _merge_topk(vals_ref[...], rows_ref[...], tile_s,
+                                   tile_r, kappa=kappa, loop_merge=loop_merge)
+        vals_ref[...] = new_s
+        rows_ref[...] = new_r
+
+
+class GamRetrieveResult(NamedTuple):
+    vals: jax.Array        # (Q, kappa) f32 exact scores, NEG in empty slots
+    rows: jax.Array        # (Q, kappa) int32 global rows, -1 in empty slots
+    blk_counts: jax.Array  # (Q, n_blocks) int32 candidates per item block
+    skipped: jax.Array     # (q_blocks, n_blocks) bool — tiles never scored
+
+
+@partial(jax.jit, static_argnames=("kappa", "min_overlap", "bq", "bn",
+                                   "words", "n_pad", "interpret",
+                                   "loop_merge"))
+def _gam_retrieve(users, factors, q_tau, q_mask, alive, ibT, union, bspill,
+                  spill8, *, kappa, min_overlap, bq, bn, words, n_pad,
+                  interpret, loop_merge):
+    q, k = users.shape
+    bq = max(8, min(bq, -(-q // 8) * 8))
+    qp = -(-q // bq) * bq
+    nb = n_pad // bn
+
+    q_bits = _pack_patterns_jnp(q_tau, q_mask, words)
+
+    # ---- block prepass: union popcount upper-bounds member overlap --------
+    ub = jnp.sum(jax.lax.population_count(
+        q_bits[:, None, :] & union[None, :, :]).astype(jnp.int32), axis=-1)
+    possible = (ub >= min_overlap) | bspill[None, :]            # (q, nb)
+    possible = jnp.pad(possible, ((0, qp - q), (0, 0)))
+    skip = jnp.logical_not(
+        possible.reshape(qp // bq, bq, nb).any(axis=1)).astype(jnp.int32)
+
+    up = jnp.pad(users.astype(jnp.float32), ((0, qp - q), (0, 0)))
+    qbp = jnp.pad(q_bits, ((0, qp - q), (0, 0)))
+    fp = jnp.pad(factors.astype(jnp.float32),
+                 ((0, n_pad - factors.shape[0]), (0, 0)))
+    al8 = jnp.pad(alive.astype(jnp.int8), (0, n_pad - alive.shape[0]))[None, :]
+
+    vals, rows, cnt = pl.pallas_call(
+        partial(_kernel, kappa=kappa, min_overlap=min_overlap, bn=bn,
+                words=words, loop_merge=loop_merge, fused_words=interpret),
+        grid=(qp // bq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, words), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((words, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, kappa), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, kappa), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qp, kappa), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kappa), jnp.int32),
+            jax.ShapeDtypeStruct((qp, nb), jnp.int32),
+        ),
+        interpret=interpret,
+    )(skip, up, qbp, fp, ibT, spill8, al8)
+
+    vals = vals[:q]
+    rows = jnp.where(vals <= NEG / 2, -1, rows[:q])
+    return GamRetrieveResult(vals, rows, cnt[:q], skip == 1)
+
+
+def gam_retrieve(users: jax.Array, factors: jax.Array, q_tau: jax.Array,
+                 q_mask: jax.Array, meta: RetrievalMeta, kappa: int, *,
+                 min_overlap: int = 1, alive: jax.Array | None = None,
+                 bq: int = 32, interpret: bool = False,
+                 loop_merge: bool | None = None) -> GamRetrieveResult:
+    """Fused candidate-pruned top-kappa MIPS over ``meta.n_rows`` items.
+
+    ``users``: (Q, k) f32 query factors; ``factors``: (n_rows, k) f32 item
+    factors (structural pad rows zero); ``q_tau``/``q_mask``: (Q, k) mapped
+    query patterns; ``alive``: optional (n_rows,) bool (dead rows are never
+    candidates); ``min_overlap=0`` makes every alive row a candidate (the
+    exact/brute-force path through the same kernel).  ``loop_merge`` forces
+    the Mosaic selection-loop merge (defaults to the faster ``lax.top_k``
+    merge under ``interpret``); both realise the identical total order.
+    """
+    factors = jnp.asarray(factors)
+    if factors.shape[0] != meta.n_rows:
+        raise ValueError(
+            f"factors rows {factors.shape[0]} != meta.n_rows {meta.n_rows}")
+    if alive is None:
+        alive = jnp.ones((meta.n_rows,), bool)
+    if loop_merge is None:
+        loop_merge = not interpret
+    return _gam_retrieve(
+        jnp.asarray(users), factors, jnp.asarray(q_tau),
+        jnp.asarray(q_mask, bool), jnp.asarray(alive), meta.item_bits_t,
+        meta.block_union, meta.block_spill, meta.spill8,
+        kappa=int(kappa), min_overlap=int(min_overlap), bq=int(bq),
+        bn=meta.bn, words=meta.words, n_pad=meta.n_pad,
+        interpret=bool(interpret), loop_merge=bool(loop_merge))

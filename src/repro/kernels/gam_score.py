@@ -1,10 +1,16 @@
-"""Pallas TPU kernel: fused masked MIPS scoring (the GAM retrieval hot loop).
+"""Pallas TPU kernel: dense masked MIPS scoring (reference path).
 
 After the inverted index produces a candidate mask, exact scores are needed
 only where the mask is set.  The kernel fuses the (Q_blk x k) @ (k x N_blk)
 MXU matmul with the candidate masking so the (Q, N) score tensor is written
 to HBM exactly once with -inf in discarded slots — no second masking pass,
 and the downstream top-k consumes it directly.
+
+The serving hot loop no longer runs this: ``gam_retrieve`` streams item
+blocks through an on-chip top-kappa accumulator, skips zero-candidate blocks
+outright, and writes only O(Q * kappa) to HBM.  This kernel remains the
+bit-exact dense oracle (mask + full score matrix + ``lax.top_k``) that the
+streaming path is tested and benchmarked against.
 
 Grid: (Q/BQ, N/BN); the full factor dim k rides along in VMEM (k <= a few
 thousand in every paper setting; the serving LM-head path blocks the vocab

@@ -9,10 +9,11 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.gam_retrieve import gam_retrieve as _gam_retrieve
 from repro.kernels.gam_score import gam_score as _gam_score
 from repro.kernels.tess_project import tess_project as _tess_project
 
-__all__ = ["gam_score", "decode_attention", "tess_project"]
+__all__ = ["gam_score", "gam_retrieve", "decode_attention", "tess_project"]
 
 
 def _on_cpu() -> bool:
@@ -22,6 +23,14 @@ def _on_cpu() -> bool:
 def gam_score(u, v, mask, **kw):
     kw.setdefault("interpret", _on_cpu())
     return _gam_score(u, v, mask, **kw)
+
+
+def gam_retrieve(users, factors, q_tau, q_mask, meta, kappa, **kw):
+    """Fused block-skipping candidate scoring + on-chip top-kappa (the
+    serving hot loop).  Interpret-mode fallback on CPU uses the lax.top_k
+    merge; compiled TPU uses the Mosaic selection-loop merge."""
+    kw.setdefault("interpret", _on_cpu())
+    return _gam_retrieve(users, factors, q_tau, q_mask, meta, kappa, **kw)
 
 
 def decode_attention(q, k, v, length, **kw):

@@ -6,12 +6,40 @@ import jax.numpy as jnp
 
 from repro.core.tessellation import ternary_pattern, tess_vector
 
-__all__ = ["gam_score_ref", "decode_attention_ref", "tess_project_ref"]
+__all__ = ["gam_score_ref", "gam_retrieve_ref", "decode_attention_ref",
+           "tess_project_ref"]
 
 
 def gam_score_ref(u, v, mask):
     scores = u.astype(jnp.float32) @ v.astype(jnp.float32).T
     return jnp.where(mask != 0, scores, -1e30)
+
+
+def gam_retrieve_ref(users, factors, q_tau, q_mask, item_tau, item_mask,
+                     kappa, *, min_overlap=1, spill=None, alive=None):
+    """Dense oracle for the fused retrieval kernel, straight from patterns.
+
+    Overlap is the O(k^2) pairwise destination match (``pattern_overlap``
+    restricted to non-zero slots); candidates are ``overlap >= min_overlap``
+    or spill-listed, intersected with ``alive``.  Returns (vals, rows) with
+    the kernel's empty-slot contract: (NEG, -1) where no candidate fills the
+    slot."""
+    users = jnp.asarray(users, jnp.float32)
+    factors = jnp.asarray(factors, jnp.float32)
+    eq = (jnp.asarray(q_tau)[:, None, :, None]
+          == jnp.asarray(item_tau)[None, :, None, :])
+    eq &= jnp.asarray(q_mask, bool)[:, None, :, None]
+    eq &= jnp.asarray(item_mask, bool)[None, :, None, :]
+    overlap = eq.sum((-2, -1))                       # (Q, N)
+    cand = overlap >= min_overlap
+    if spill is not None:
+        cand |= jnp.asarray(spill, bool)[None, :]
+    if alive is not None:
+        cand &= jnp.asarray(alive, bool)[None, :]
+    scores = jnp.where(cand, users @ factors.T, -1e30)
+    vals, rows = jax.lax.top_k(scores, kappa)
+    rows = jnp.where(vals <= -5e29, -1, rows.astype(jnp.int32))
+    return vals, rows
 
 
 def decode_attention_ref(q, k, v, length):

@@ -2,15 +2,16 @@
 
 New and re-written items land in a small dense segment that participates in
 EVERY query (it is never behind the compaction horizon), with the same
-candidate-masking + exact-scoring semantics as the main shards: the segment
-keeps its own dense-bucket posting table (rebuilt from scratch on each
-mutation — the vectorised ``build_segment`` makes that O(nnz), cheap at delta
-sizes), and scores through the shared ``masked_topk`` path.  Because
-candidate determination is per-item (pattern overlap against the query, plus
-bucket-spill), a query against base+delta returns exactly what a fresh
-rebuild over the merged catalog would return, provided neither structure
-overflows its buckets (spill only ever ADDS candidates; size buckets to the
-max posting length for strict parity).
+candidate + exact-scoring semantics as the main shards: the segment keeps its
+own dense-bucket posting table (rebuilt from scratch on each mutation — the
+vectorised ``build_segment`` makes that O(nnz), cheap at delta sizes) for the
+spill flags, and queries stream through the same fused ``gam_retrieve``
+kernel as the main segment — no (Q, n_delta) mask is ever materialised.
+Because candidate determination is per-item (pattern overlap against the
+query, plus bucket-spill), a query against base+delta returns exactly what a
+fresh rebuild over the merged catalog would return, provided neither
+structure overflows its buckets (spill only ever ADDS candidates; size
+buckets to the max posting length for strict parity).
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ import numpy as np
 
 from repro.core.inverted_index import DeviceIndex
 from repro.core.mapping import GamConfig, sparse_map
-from repro.core.retrieval import masked_topk
+from repro.kernels.gam_retrieve import build_retrieval_meta
+from repro.kernels.ops import gam_retrieve
 
 __all__ = ["DeltaSegment"]
 
@@ -36,6 +38,8 @@ class DeltaSegment:
         self.factors = np.zeros((0, cfg.k), np.float32)
         self._index: DeviceIndex | None = None
         self._factors_dev = None
+        self._meta = None                 # fused-kernel block metadata
+        self._alive = None                # (cap,) bool: real vs pad rows
 
     def __len__(self) -> int:
         return int(self.ids.size)
@@ -66,16 +70,20 @@ class DeltaSegment:
         self.factors = np.zeros((0, self.cfg.k), np.float32)
         self._index = None
         self._factors_dev = None
+        self._meta = None
+        self._alive = None
 
     def _rebuild(self) -> None:
         if not len(self):
             self._index = None
             self._factors_dev = None
+            self._meta = None
+            self._alive = None
             return
         tau, vals = sparse_map(jnp.asarray(self.factors), self.cfg)
-        self._index = DeviceIndex.build(
-            np.asarray(tau), self.cfg.p, self.bucket,
-            mask=np.asarray(vals) != 0.0)
+        tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+        self._index = DeviceIndex.build(tau, self.cfg.p, self.bucket,
+                                        mask=mask)
         # factor rows pad to the next power of two so the jit'd scoring path
         # keeps a stable shape across consecutive upserts (mutating the
         # catalog must not force an XLA recompile on the next query)
@@ -83,6 +91,11 @@ class DeltaSegment:
         padded = np.zeros((cap, self.cfg.k), np.float32)
         padded[: len(self)] = self.factors
         self._factors_dev = jnp.asarray(padded)
+        self._meta = build_retrieval_meta(
+            tau, mask, self.cfg.p, n_rows=cap,
+            spill_rows=np.asarray(self._index.spill),
+            bn=min(256, cap))
+        self._alive = jnp.asarray(np.arange(cap) < len(self))
 
     # ---------------------------------------------------------- query
 
@@ -95,18 +108,15 @@ class DeltaSegment:
             return (np.zeros((q, 0), np.float32), np.zeros((q, 0), np.int64),
                     np.zeros(q, np.int64))
         kk = min(kappa, len(self))
-        if exact:
-            masks = jnp.ones((users.shape[0], len(self)), bool)
-        else:
-            masks = self._index.batch_candidate_mask(
-                q_tau, self.min_overlap, q_mask)
-        # pad the candidate axis to the factor capacity (padded rows are
-        # never candidates, so they score NEG and the merge drops them)
-        cap = self._factors_dev.shape[0]
-        masks = jnp.pad(masks, ((0, 0), (0, cap - len(self))))
-        vals, local = masked_topk(users, self._factors_dev, masks, kk)
-        n_cand = np.asarray(jnp.sum(masks, axis=-1), np.int64)
-        # NEG slots may point at pad rows; clip before the id gather (the
-        # caller replaces their ids via the NEG-score filter anyway)
-        local = np.minimum(np.asarray(local, np.int64), len(self) - 1)
-        return (np.asarray(vals, np.float32), self.ids[local], n_cand)
+        # same fused streaming kernel as the main shards: pad rows are dead
+        # via ``alive`` and carry empty patterns, so they are never
+        # candidates on either the pruned or the exact (min_overlap=0) path
+        res = gam_retrieve(users, self._factors_dev, q_tau, q_mask,
+                           self._meta, kk,
+                           min_overlap=0 if exact else self.min_overlap,
+                           alive=self._alive)
+        n_cand = np.asarray(res.blk_counts, np.int64).sum(axis=1)
+        # empty (NEG-scored) slots carry row -1; clip before the id gather
+        # (the caller replaces their ids via the NEG-score filter anyway)
+        local = np.clip(np.asarray(res.rows, np.int64), 0, len(self) - 1)
+        return (np.asarray(res.vals, np.float32), self.ids[local], n_cand)

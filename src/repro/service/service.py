@@ -9,11 +9,12 @@ Owns the three storage tiers and the request plumbing:
 
 plus ``ServiceMetrics`` and an optional ``Microbatcher`` front-end.
 
-Query = map the user batch with phi once, run base + delta through the shared
-masked-top-kappa path, then a deterministic merge ordered by
-(score desc, catalog id asc) — the same total order a fresh rebuild's
-``lax.top_k`` induces, which is what makes upsert-then-query ==
-rebuild-then-query testable to the bit.
+Query = map the user batch with phi once, stream base + delta through the
+fused ``gam_retrieve`` kernel (candidate pruning, exact scoring and the
+top-kappa reduction fused on chip — no (Q, N) mask or score tensor ever
+reaches HBM), then a deterministic merge ordered by (score desc, catalog id
+asc) — the same total order a fresh rebuild's ``lax.top_k`` induces, which is
+what makes upsert-then-query == rebuild-then-query testable to the bit.
 """
 from __future__ import annotations
 
@@ -154,6 +155,7 @@ class GamService:
         self._last_query_stats = {
             "discard": discard,
             "shard_candidates": np.asarray(base_res.shard_candidates),
+            "tiles_skipped_frac": base_res.tiles_skipped_frac,
         }
         return ids_out, sc_out
 

@@ -1,20 +1,25 @@
 """Item-axis sharded GAM index: the service's main (compacted) segment.
 
 The catalog is sorted by item id and partitioned contiguously into
-``n_shards`` equal slices of ``shard_cap`` rows (the last slice zero-padded).
-Each shard owns a dense-bucket posting segment over LOCAL row ids (built with
-``core.inverted_index.build_segment``), so candidate masking is an
-embarrassingly parallel per-shard scatter.  Exact scoring then runs as ONE
-``gam_score`` kernel call over the flat ``(n_shards * shard_cap, k)`` factor
-matrix — which is precisely the layout ``sharding.specs.index_shardings``
-partitions over the ``launch.mesh.make_index_mesh`` item axis, so XLA SPMD
-splits the scoring matmul and the top-kappa reduction across devices.
+``n_shards`` equal slices of ``shard_cap`` rows (``shard_cap`` rounded up to
+a whole number of kernel item blocks; trailing rows zero-padded).  Each shard
+owns a dense-bucket posting segment over LOCAL row ids (built with
+``core.inverted_index.build_segment``) — kept for posting-load stats and as
+the source of the bucket-spill flags — while the query path streams the flat
+``(n_shards * shard_cap, k)`` factor matrix through the fused
+``kernels.gam_retrieve`` kernel: per-tile candidate overlap from packed
+pattern bitsets, zero-candidate blocks skipped via the block-union prepass,
+and an on-chip running top-kappa, so no (Q, N) mask or score tensor is ever
+materialised.  The flat layout is precisely what ``sharding.specs
+.index_shardings`` partitions over the ``launch.mesh.make_index_mesh`` item
+axis.
 
-Merge semantics: per-shard top-kappa, then a stable merge whose tie-break is
-ascending global row (== ascending item id, because rows are id-sorted).
-That is exactly ``lax.top_k``'s tie-break over the unsharded score matrix, so
-a multi-shard query is bit-identical to the single-shard
-``GamRetriever(device=True)`` path on the same catalog.
+Merge semantics: the kernel's accumulator realises the total order
+(score desc, global row asc); global row == catalog rank because rows are
+id-sorted, so a multi-shard query is bit-identical to the single-shard
+``GamRetriever(device=True)`` path — and to ``lax.top_k`` over the dense
+masked score matrix, which the retained ``_shard_masks``/``_score_and_merge``
+reference path still computes for parity tests.
 """
 from __future__ import annotations
 
@@ -27,8 +32,9 @@ import numpy as np
 
 from repro.core.inverted_index import build_segment, candidate_mask_from_table
 from repro.core.mapping import GamConfig, sparse_map
+from repro.kernels.gam_retrieve import build_retrieval_meta
 from repro.kernels.gam_score import NEG
-from repro.kernels.ops import gam_score
+from repro.kernels.ops import gam_retrieve, gam_score
 
 __all__ = ["ShardedGamIndex", "ShardTopK"]
 
@@ -36,7 +42,11 @@ __all__ = ["ShardedGamIndex", "ShardTopK"]
 @partial(jax.jit, static_argnames=("min_overlap", "cap"))
 def _shard_masks(tables: jax.Array, spills: jax.Array, q_tau: jax.Array,
                  q_mask: jax.Array, *, min_overlap: int, cap: int) -> jax.Array:
-    """(S, p, bucket) tables + (Q, k) query patterns -> (Q, S*cap) bool."""
+    """(S, p, bucket) tables + (Q, k) query patterns -> (Q, S*cap) bool.
+
+    Dense-mask REFERENCE path (with ``_score_and_merge``): serving streams
+    through the fused kernel instead; tests/benchmarks use this pair to pin
+    the fused results bit-for-bit."""
 
     def one(table, spill, tau, qm):
         # shared candidate semantics (core.inverted_index) with the shard's
@@ -54,7 +64,7 @@ def _shard_masks(tables: jax.Array, spills: jax.Array, q_tau: jax.Array,
 @partial(jax.jit, static_argnames=("kappa", "n_shards", "cap"))
 def _score_and_merge(users: jax.Array, factors: jax.Array, masks: jax.Array,
                      *, kappa: int, n_shards: int, cap: int):
-    """Per-shard top-kappa + stable cross-shard merge.
+    """Per-shard top-kappa + stable cross-shard merge (dense reference).
 
     Returns (vals (Q, kappa'), rows (Q, kappa') global row ids,
     shard_cand (Q, S) candidate counts) with kappa' = min(kappa, S*kk)."""
@@ -80,8 +90,9 @@ def _score_and_merge(users: jax.Array, factors: jax.Array, masks: jax.Array,
 class ShardTopK:
     """Result of a sharded query, still in global-row coordinates."""
     scores: jax.Array       # (Q, kappa) f32, NEG in empty slots
-    rows: jax.Array         # (Q, kappa) int32 global rows (id-sorted order)
+    rows: jax.Array         # (Q, kappa) int32 global rows, -1 in empty slots
     shard_candidates: jax.Array  # (Q, S) int32 per-shard candidate counts
+    tiles_skipped_frac: float = 0.0  # fraction of (Q_blk, N_blk) tiles pruned
 
 
 class ShardedGamIndex:
@@ -91,7 +102,7 @@ class ShardedGamIndex:
                  tables: jax.Array, counts: jax.Array, spills: jax.Array,
                  factors: jax.Array, alive: np.ndarray,
                  n_shards: int, shard_cap: int, min_overlap: int,
-                 bucket: int, mesh=None):
+                 bucket: int, mesh=None, meta=None):
         self.cfg = cfg
         self.item_ids = item_ids          # (N,) int64 sorted catalog ids
         self.tables = tables              # (S, p, bucket) int32
@@ -105,6 +116,7 @@ class ShardedGamIndex:
         self.min_overlap = min_overlap
         self.bucket = bucket
         self.mesh = mesh
+        self.meta = meta                  # fused-kernel block metadata
         self._row_of = {int(i): r for r, i in enumerate(item_ids)}
 
     # ------------------------------------------------------------- build
@@ -129,7 +141,13 @@ class ShardedGamIndex:
         tau, vals = sparse_map(jnp.asarray(factors), cfg)
         tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
 
-        cap = -(-n // n_shards) if n else 1
+        # shard_cap rounds up to a whole number of kernel item blocks so the
+        # fused kernel's per-block candidate counts fold exactly into
+        # per-shard counts (rows stay globally contiguous: partition
+        # boundaries move, results don't)
+        cap0 = -(-n // n_shards) if n else 1
+        bn = min(256, -(-cap0 // 8) * 8)
+        cap = -(-cap0 // bn) * bn
         tables, counts, spills = [], [], []
         for s in range(n_shards):
             lo, hi = s * cap, min((s + 1) * cap, n)
@@ -138,6 +156,12 @@ class ShardedGamIndex:
             tables.append(t)
             counts.append(c)
             spills.append(sp)
+        spill_global = np.concatenate(
+            [s * cap + sp for s, sp in enumerate(spills)] or
+            [np.zeros(0, np.int64)]).astype(np.int64)
+        meta = build_retrieval_meta(tau, mask, cfg.p,
+                                    n_rows=n_shards * cap,
+                                    spill_rows=spill_global, bn=bn)
         width = max((sp.size for sp in spills), default=0)
         spills = np.stack([
             np.concatenate([sp, np.full(width - sp.size, cap, np.int32)])
@@ -162,7 +186,7 @@ class ShardedGamIndex:
             spills_j, factors_j = arrs["spills"], arrs["factors"]
         return ShardedGamIndex(cfg, item_ids, tables_j, counts_j, spills_j,
                                factors_j, alive, n_shards, cap, min_overlap,
-                               bucket, mesh)
+                               bucket, mesh, meta)
 
     # ------------------------------------------------------------- state
 
@@ -190,8 +214,25 @@ class ShardedGamIndex:
               kappa: int, *, exact: bool = False) -> ShardTopK:
         """users (Q, k) f32 + mapped query patterns -> merged top-kappa.
 
-        ``exact=True`` bypasses candidate masking (scores every live row) —
-        the brute-force reference path through the same kernel."""
+        One fused gam_retrieve pass over the flat factor matrix: candidate
+        pruning, scoring and the cross-shard top-kappa merge all happen on
+        chip (zero-candidate item blocks are skipped outright).
+        ``exact=True`` scores every live row through the same kernel
+        (``min_overlap=0``) — the brute-force reference path."""
+        res = gam_retrieve(users, self.factors, q_tau, q_mask, self.meta,
+                           kappa, min_overlap=0 if exact else self.min_overlap,
+                           alive=self.alive)
+        shard_cand = res.blk_counts.reshape(
+            users.shape[0], self.n_shards, self.shard_cap // self.meta.bn
+        ).sum(axis=-1)
+        return ShardTopK(scores=res.vals, rows=res.rows,
+                         shard_candidates=shard_cand,
+                         tiles_skipped_frac=float(res.skipped.mean()))
+
+    def query_dense_reference(self, users: jax.Array, q_tau: jax.Array,
+                              q_mask: jax.Array, kappa: int, *,
+                              exact: bool = False) -> ShardTopK:
+        """The superseded (Q, N)-mask path, kept as the parity oracle."""
         if exact:
             masks = jnp.broadcast_to(self.alive[None, :],
                                      (users.shape[0], self.alive.shape[0]))
@@ -203,6 +244,10 @@ class ShardedGamIndex:
         vals, rows, shard_cand = _score_and_merge(
             users, self.factors, masks, kappa=kappa,
             n_shards=self.n_shards, cap=self.shard_cap)
+        # normalise lax.top_k's arbitrary filler rows in NEG-scored slots to
+        # the -1 empty-slot contract ShardTopK documents (the fused path
+        # emits -1 natively)
+        rows = jnp.where(vals <= NEG / 2, -1, rows)
         return ShardTopK(scores=vals, rows=rows, shard_candidates=shard_cand)
 
     def rows_to_ids(self, rows: np.ndarray, scores: np.ndarray) -> np.ndarray:

@@ -1,0 +1,242 @@
+"""Fused streaming retrieval kernel: bit-parity with the dense masked path.
+
+Every case runs in interpret mode so tier-1 stays CPU-only.  The contract
+under test: ``gam_retrieve`` returns bit-identical (ids, scores) to
+``masked_topk`` over ``DeviceIndex`` candidate masks — including score
+tie-breaks, spill-list candidates and empty-candidate padding — after the
+NEG-slot normalisation every consumer applies (fused empties are (NEG, -1);
+the dense path parks arbitrary ``lax.top_k`` indices there).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inverted_index import DeviceIndex
+from repro.core.mapping import GamConfig, sparse_map
+from repro.core.retrieval import GamRetriever, masked_topk
+from repro.kernels import ref
+from repro.kernels.gam_retrieve import (build_retrieval_meta, gam_retrieve,
+                                        pack_patterns)
+from repro.kernels.gam_score import NEG
+
+CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
+
+
+def _factors(n, k, seed):
+    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+
+def _mapped(factors, cfg=CFG):
+    tau, vals = sparse_map(jnp.asarray(factors), cfg)
+    return np.asarray(tau), np.asarray(vals) != 0.0
+
+
+def _dense_reference(users, items, tau, mask, q_tau, q_mask, kappa, mo,
+                     bucket, cfg=CFG):
+    """masked_topk over DeviceIndex masks, NEG slots normalised to -1."""
+    dev = DeviceIndex.build(tau, cfg.p, bucket, mask=mask)
+    masks = dev.batch_candidate_mask(jnp.asarray(q_tau), mo,
+                                     jnp.asarray(q_mask))
+    vals, ids = masked_topk(jnp.asarray(users), jnp.asarray(items), masks,
+                            kappa)
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    return np.where(vals <= NEG / 2, -1, ids), vals, dev, masks
+
+
+def _assert_bit_identical(res, ref_ids, ref_vals):
+    empty = ref_vals <= NEG / 2
+    np.testing.assert_array_equal(np.asarray(res.rows), ref_ids)
+    got = np.asarray(res.vals)
+    np.testing.assert_array_equal(got <= NEG / 2, empty)
+    np.testing.assert_array_equal(got[~empty], ref_vals[~empty])
+    # fused empty slots are exactly NEG (never a fabricated score)
+    assert (got[empty] == NEG).all()
+
+
+@pytest.mark.parametrize("n,q,kappa,mo,bucket,bn,bq", [
+    (350, 16, 10, 2, 512, 128, 32),    # plain randomized catalog
+    (300, 7, 5, 1, 4, 64, 8),          # tiny bucket forces spill candidates
+    (123, 3, 50, 3, 256, 32, 8),       # kappa > candidates, ragged shapes
+    (513, 11, 17, 2, 8, 96, 8),        # spill + non-divisible Q and N blocks
+])
+@pytest.mark.parametrize("loop_merge", [False, True])
+def test_fused_bit_identical_to_masked_topk(n, q, kappa, mo, bucket, bn, bq,
+                                            loop_merge):
+    items = _factors(n, 16, n)
+    users = _factors(q, 16, n + 1)
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    kk = min(kappa, n)
+    ref_ids, ref_vals, dev, masks = _dense_reference(
+        users, items, tau, mask, q_tau, q_mask, kk, mo, bucket)
+    meta = build_retrieval_meta(tau, mask, CFG.p,
+                                spill_rows=np.asarray(dev.spill), bn=bn)
+    res = gam_retrieve(users, items, q_tau, q_mask, meta, kk,
+                       min_overlap=mo, bq=bq, interpret=True,
+                       loop_merge=loop_merge)
+    _assert_bit_identical(res, ref_ids, ref_vals)
+    # n_scored comes from the block prepass counts and must equal the dense
+    # mask's candidate count exactly
+    np.testing.assert_array_equal(np.asarray(res.blk_counts).sum(1),
+                                  np.asarray(masks).sum(1))
+
+
+def test_score_ties_break_by_lowest_row():
+    """Duplicate factor rows produce exact score ties; the on-chip merge must
+    resolve them like lax.top_k (lowest row first), across block boundaries."""
+    base = _factors(8, 16, 0)
+    items = np.concatenate([base] * 8)            # rows i, i+8, i+16, ... tie
+    users = base[:4]
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    ref_ids, ref_vals, dev, _ = _dense_reference(
+        users, items, tau, mask, q_tau, q_mask, 12, 1, 512)
+    meta = build_retrieval_meta(tau, mask, CFG.p,
+                                spill_rows=np.asarray(dev.spill), bn=16)
+    for loop_merge in (False, True):
+        res = gam_retrieve(users, items, q_tau, q_mask, meta, 12,
+                           min_overlap=1, bq=8, interpret=True,
+                           loop_merge=loop_merge)
+        _assert_bit_identical(res, ref_ids, ref_vals)
+
+
+def test_all_empty_candidate_rows():
+    """min_overlap beyond any possible pattern overlap, no spill: every slot
+    must come back as the (NEG, -1) empty pad, and nothing is scored."""
+    items = _factors(200, 16, 5)
+    users = _factors(6, 16, 6)
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    meta = build_retrieval_meta(tau, mask, CFG.p, bn=64)
+    res = gam_retrieve(users, items, q_tau, q_mask, meta, 10,
+                       min_overlap=17, interpret=True)
+    assert (np.asarray(res.rows) == -1).all()
+    assert (np.asarray(res.vals) == NEG).all()
+    assert (np.asarray(res.blk_counts) == 0).all()
+    # the block prepass proves emptiness, so every tile is skipped
+    assert np.asarray(res.skipped).all()
+
+
+def test_block_skipping_prunes_tiles_without_changing_results():
+    """Cluster-sorted catalog: far blocks fail the union-popcount bound and
+    are skipped outright, yet results stay bit-identical to the dense path."""
+    rng = np.random.default_rng(2)
+    centers = _factors(8, 16, 7)
+    items = np.repeat(centers, 64, axis=0) + \
+        0.04 * rng.normal(size=(512, 16)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    users = centers[:2] + 0.04 * rng.normal(size=(2, 16)).astype(np.float32)
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    bucket = 4096                      # no spill: discard reflects pruning
+    ref_ids, ref_vals, dev, masks = _dense_reference(
+        users, items, tau, mask, q_tau, q_mask, 10, 4, bucket)
+    meta = build_retrieval_meta(tau, mask, CFG.p,
+                                spill_rows=np.asarray(dev.spill), bn=64)
+    res = gam_retrieve(users, items, q_tau, q_mask, meta, 10,
+                       min_overlap=4, bq=8, interpret=True)
+    _assert_bit_identical(res, ref_ids, ref_vals)
+    assert np.asarray(res.skipped).mean() > 0.2, "no tiles were pruned"
+    # skipped tiles truly had zero candidates (skip is never lossy)
+    blk = np.asarray(res.blk_counts)
+    assert blk[:, np.asarray(res.skipped)[0]].sum() == 0
+
+
+def test_matches_pattern_oracle():
+    """Independent O(k^2) pattern-overlap oracle (no bit-packing, no posting
+    table) agrees with the kernel."""
+    items = _factors(150, 16, 9)
+    users = _factors(5, 16, 10)
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    meta = build_retrieval_meta(tau, mask, CFG.p, bn=64)
+    res = gam_retrieve(users, items, q_tau, q_mask, meta, 7,
+                       min_overlap=2, interpret=True)
+    vals, rows = ref.gam_retrieve_ref(users, items, q_tau, q_mask, tau, mask,
+                                      7, min_overlap=2)
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(rows))
+    real = np.asarray(vals) > NEG / 2
+    np.testing.assert_array_equal(np.asarray(res.vals)[real],
+                                  np.asarray(vals)[real])
+
+
+def test_pack_patterns_roundtrip():
+    tau, mask = _mapped(_factors(64, 16, 11))
+    bits = pack_patterns(tau, mask, CFG.p)
+    assert bits.shape == (64, -(-CFG.p // 32))
+    pop = np.unpackbits(bits.view(np.uint8), axis=1).sum(1)
+    np.testing.assert_array_equal(pop, mask.sum(1))
+    # set bits are exactly the masked destinations
+    for i in (0, 17, 63):
+        got = {w * 32 + b for w in range(bits.shape[1]) for b in range(32)
+               if bits[i, w] >> np.uint32(b) & np.uint32(1)}
+        assert got == set(tau[i][mask[i]].tolist())
+
+
+def test_alive_mask_and_exact_path():
+    """min_overlap=0 + alive == brute force over live rows (the service's
+    exact reference path through the same kernel)."""
+    items = _factors(100, 16, 12)
+    users = _factors(4, 16, 13)
+    tau, mask = _mapped(items)
+    q_tau, q_mask = _mapped(users)
+    meta = build_retrieval_meta(tau, mask, CFG.p, bn=32)
+    alive = np.ones(100, bool)
+    alive[::3] = False
+    res = gam_retrieve(users, items, q_tau, q_mask, meta, 10,
+                       min_overlap=0, alive=alive, interpret=True)
+    scores = users @ items.T
+    scores[:, ~alive] = -np.inf
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :10]
+    np.testing.assert_array_equal(np.asarray(res.rows), order)
+    np.testing.assert_array_equal(np.asarray(res.blk_counts).sum(1),
+                                  np.full(4, int(alive.sum())))
+
+
+def test_device_retriever_equals_dense_reference_end_to_end():
+    """GamRetriever(device=True) — now streaming — reproduces the dense
+    masked path it replaced, including n_scored."""
+    items = _factors(400, 16, 14)
+    users = _factors(20, 16, 15)
+    gam = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    res = gam.query(users, 10)
+    q_tau, q_mask = gam.map_queries(users)
+    masks = gam.device_index.batch_candidate_mask(
+        jnp.asarray(q_tau), 2, jnp.asarray(q_mask))
+    vals, ids = masked_topk(jnp.asarray(users), jnp.asarray(items), masks, 10)
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    empty = vals <= NEG / 2
+    np.testing.assert_array_equal(res.ids, np.where(empty, -1, ids))
+    np.testing.assert_array_equal(res.scores[~empty], vals[~empty])
+    np.testing.assert_array_equal(res.n_scored, np.asarray(masks).sum(1))
+
+
+def test_sharded_merge_equals_dense_reference():
+    """The service's fused sharded query == the retained dense-mask
+    reference (_shard_masks + _score_and_merge), bit for bit, including
+    per-shard candidate counts and tombstoned rows."""
+    from repro.service import GamService, ServiceConfig
+
+    items = _factors(350, 16, 16)
+    users = _factors(9, 16, 17)
+    svc = GamService(np.arange(350), items, CFG, ServiceConfig(
+        n_shards=3, min_overlap=2, kappa=10, bucket=512))
+    svc.delete([5, 170, 349])          # exercise the alive mask
+    base = svc.base
+    tau, vals_ = sparse_map(jnp.asarray(users.astype(np.float32)), CFG)
+    q_mask = np.asarray(vals_) != 0.0
+    got = base.query(jnp.asarray(users), tau, jnp.asarray(q_mask), 10)
+    want = base.query_dense_reference(jnp.asarray(users), tau,
+                                      jnp.asarray(q_mask), 10)
+    w_vals = np.asarray(want.scores)
+    w_rows = np.where(w_vals <= NEG / 2, -1, np.asarray(want.rows))
+    kk = w_rows.shape[1]
+    g_vals = np.asarray(got.scores)[:, :kk]
+    np.testing.assert_array_equal(np.asarray(got.rows)[:, :kk], w_rows)
+    real = w_vals > NEG / 2
+    np.testing.assert_array_equal(g_vals[real], w_vals[real])
+    # anything past the reference's kappa' columns is empty padding
+    assert (np.asarray(got.scores)[:, kk:] <= NEG / 2).all()
+    np.testing.assert_array_equal(np.asarray(got.shard_candidates),
+                                  np.asarray(want.shard_candidates))
