@@ -10,26 +10,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import KAPPA
+from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig
-from repro.core.retrieval import (
-    BruteForceRetriever,
-    GamRetriever,
-    recovery_accuracy,
-)
+from repro.core.retrieval import recovery_accuracy
 from repro.data import synthetic_ratings
+from repro.retriever import RetrieverSpec, open_retriever
 
 
 def run(n_users: int = 100, n_items: int = 10_000, k: int = 10,
         seed: int = 0) -> list[dict]:
     u, v, _ = synthetic_ratings(n_users, n_items, k, seed=seed)
-    brute = BruteForceRetriever(v).query(u, KAPPA)
+    brute = brute_oracle(v).query(u, KAPPA)
     rows = []
     for scheme, d in (("one_hot", 1), ("parse_tree", 1),
                       ("one_hot_dary", 2), ("one_hot_dary", 4)):
         for mo in (2, 3):
             cfg = GamConfig(k=k, scheme=scheme, d=d, threshold=0.45)
-            res = GamRetriever(v, cfg, min_overlap=mo).query(u, KAPPA)
+            res = open_retriever(
+                RetrieverSpec(cfg=cfg, backend="gam", min_overlap=mo),
+                items=v).query(u, KAPPA)
             rows.append({
                 "scheme": f"{scheme}(d={d})" if d > 1 else scheme,
                 "p": cfg.p, "min_overlap": mo,

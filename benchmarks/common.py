@@ -1,21 +1,31 @@
-"""Shared benchmark machinery: method zoo, metrics, timing."""
+"""Shared benchmark machinery: method zoo, metrics, timing.
+
+The whole §6 line-up is expressed as unified-API specs
+(``repro.retriever``): GAM and every baseline resolve through the same
+string-keyed backend registry, so adding a method to the benchmarks is one
+more ``RetrieverSpec`` in the dict.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core.baselines import CroHash, PcaTree, SrpLsh, SuperBitLsh
 from repro.core.mapping import GamConfig
-from repro.core.retrieval import (
-    BruteForceRetriever,
-    GamRetriever,
-    recovery_accuracy,
-)
+from repro.core.retrieval import recovery_accuracy
+from repro.retriever import RetrieverSpec, open_retriever
 
-__all__ = ["build_methods", "evaluate", "time_method", "KAPPA"]
+__all__ = ["brute_oracle", "build_methods", "evaluate", "time_method",
+           "KAPPA"]
 
 KAPPA = 10
+
+
+def brute_oracle(items: np.ndarray):
+    """Exact reference retriever over ``items`` (the ``brute`` backend)."""
+    return open_retriever(
+        RetrieverSpec(cfg=GamConfig(k=items.shape[1]), backend="brute"),
+        items=items)
 
 
 def build_methods(items: np.ndarray, k: int, *, gam_threshold: float = 0.2,
@@ -24,28 +34,37 @@ def build_methods(items: np.ndarray, k: int, *, gam_threshold: float = 0.2,
     """The paper's §6 line-up: GAM (ternary + parse-tree) vs 4 baselines,
     parameters chosen so discard rates are comparable (the paper matches
     sparsity levels when comparing accuracy)."""
-    return {
-        "gam": GamRetriever(
-            items, GamConfig(k=k, scheme="parse_tree",
-                             threshold=gam_threshold),
-            min_overlap=gam_min_overlap),
-        "gam-sparse": GamRetriever(      # the paper's headline-discard point
-            items, GamConfig(k=k, scheme="parse_tree",
-                             threshold=sparse_threshold),
-            min_overlap=sparse_min_overlap),
-        "srp-lsh": SrpLsh(items, n_bits=max(4, k // 2), n_tables=4, seed=seed),
-        "superbit-lsh": SuperBitLsh(items, n_bits=max(4, k // 2), n_tables=4,
-                                    seed=seed),
-        "cro": CroHash(items, n_proj=2 * k, top_l=2, n_tables=4, seed=seed),
-        "pca-tree": PcaTree(items, depth=max(3, int(np.log2(len(items))) - 4)),
+    plain = GamConfig(k=k)
+    specs = {
+        "gam": RetrieverSpec(
+            cfg=GamConfig(k=k, scheme="parse_tree", threshold=gam_threshold),
+            backend="gam", min_overlap=gam_min_overlap),
+        "gam-sparse": RetrieverSpec(   # the paper's headline-discard point
+            cfg=GamConfig(k=k, scheme="parse_tree",
+                          threshold=sparse_threshold),
+            backend="gam", min_overlap=sparse_min_overlap),
+        "srp-lsh": RetrieverSpec(
+            cfg=plain, backend="srp-lsh", seed=seed,
+            options=(("n_bits", max(4, k // 2)), ("n_tables", 4))),
+        "superbit-lsh": RetrieverSpec(
+            cfg=plain, backend="superbit-lsh", seed=seed,
+            options=(("n_bits", max(4, k // 2)), ("n_tables", 4))),
+        "cro": RetrieverSpec(
+            cfg=plain, backend="cro", seed=seed,
+            options=(("n_proj", 2 * k), ("top_l", 2), ("n_tables", 4))),
+        "pca-tree": RetrieverSpec(
+            cfg=plain, backend="pca-tree",
+            options=(("depth", max(3, int(np.log2(len(items))) - 4)),)),
     }
+    return {name: open_retriever(spec, items=items)
+            for name, spec in specs.items()}
 
 
 def evaluate(methods: dict, items: np.ndarray, users: np.ndarray,
              kappa: int = KAPPA) -> dict:
     """Per-method: recovery accuracy vs exact top-kappa, % discarded
     (distribution over users), implied speed-up."""
-    brute = BruteForceRetriever(items).query(users, kappa)
+    brute = brute_oracle(items).query(users, kappa)
     out = {}
     for name, method in methods.items():
         res = method.query(users, kappa)

@@ -4,26 +4,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import KAPPA
+from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig
-from repro.core.retrieval import (
-    BruteForceRetriever,
-    GamRetriever,
-    recovery_accuracy,
-)
+from repro.core.retrieval import recovery_accuracy
 from repro.data import synthetic_ratings
+from repro.retriever import RetrieverSpec, open_retriever
 
 
 def run(n_users: int = 150, n_items: int = 1500, k: int = 10,
         seed: int = 0) -> list[dict]:
     u, v, _ = synthetic_ratings(n_users, n_items, k, seed=seed)
-    brute = BruteForceRetriever(v).query(u, KAPPA)
+    brute = brute_oracle(v).query(u, KAPPA)
     rows = []
     for thr in (0.0, 0.15, 0.25, 0.35, 0.45):
         for mo in (1, 2, 3):
-            gam = GamRetriever(
-                v, GamConfig(k=k, scheme="parse_tree", threshold=thr),
-                min_overlap=mo)
+            gam = open_retriever(
+                RetrieverSpec(
+                    cfg=GamConfig(k=k, scheme="parse_tree", threshold=thr),
+                    backend="gam", min_overlap=mo),
+                items=v)
             res = gam.query(u, KAPPA)
             rows.append({
                 "threshold": thr, "min_overlap": mo,

@@ -30,12 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inverted_index import DeviceIndex
 from repro.core.mapping import GamConfig, sparse_map
 from repro.core.retrieval import masked_topk
-from repro.kernels.gam_retrieve import build_retrieval_meta
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
+from repro.retriever import RetrieverSpec, open_retriever
 
 
 def clustered_catalog(n: int, k: int, n_clusters: int, sigma: float,
@@ -81,9 +80,15 @@ def run_point(items: np.ndarray, users: np.ndarray, cfg: GamConfig, *,
     q_tau, q_mask = np.asarray(q_tau), np.asarray(q_vals) != 0.0
     # bucket = longest posting list: zero spill, discard == true pruning
     bucket = int(np.bincount(tau[mask].ravel(), minlength=cfg.p).max())
-    dev = DeviceIndex.build(tau, cfg.p, bucket, mask=mask)
-    meta = build_retrieval_meta(tau, mask, cfg.p,
-                                spill_rows=np.asarray(dev.spill), bn=bn)
+    # the unified API owns index + kernel metadata construction; the timed
+    # closures below call the kernel directly against the backend's state so
+    # the measurement stays query-mapping-free on both paths
+    retriever = open_retriever(
+        RetrieverSpec(cfg=cfg, backend="gam-device", min_overlap=min_overlap,
+                      bucket=bucket, bn=bn, bq=bq),
+        items=items)
+    dev = retriever.device_index
+    meta = retriever._retrieve_meta
     users_j, items_j = jnp.asarray(users), jnp.asarray(items)
     q_tau_j, q_mask_j = jnp.asarray(q_tau), jnp.asarray(q_mask)
 

@@ -2,9 +2,10 @@
 
 Streams single-user requests through the ``Microbatcher`` front-end at a
 sweep of batch sizes, for both the brute-force (``exact=True``) and the
-GAM candidate-masked service path, and records QPS + p50/p99 per-request
-latency per point to ``BENCH_service.json`` — the service-tier counterpart
-of the paper's retrieval-speedup tables.
+GAM candidate-masked service path of a unified-API ``sharded`` retriever,
+and records QPS + p50/p99 per-request latency per point to
+``BENCH_service.json`` — the service-tier counterpart of the paper's
+retrieval-speedup tables.
 
 Run:  PYTHONPATH=src python benchmarks/service_bench.py [--items N] [--out F]
 """
@@ -17,25 +18,25 @@ import time
 import numpy as np
 
 from repro.core.mapping import GamConfig
-from repro.service import GamService, ServiceConfig
+from repro.retriever import Retriever, RetrieverSpec, open_retriever
 
 
-def run_point(svc: GamService, users: np.ndarray, *, exact: bool) -> dict:
+def run_point(svc: Retriever, users: np.ndarray, *, exact: bool) -> dict:
     """Push every user row through a fresh microbatcher; measure the stream."""
     from repro.service.metrics import ServiceMetrics
     from repro.service.microbatch import Microbatcher
 
-    kappa = svc.svc.kappa
+    spec = svc.spec
 
     def query_fn(batch_users, n_real=0):
-        ids, scores = svc.query(batch_users, kappa, exact=exact)
-        return ids, scores
+        res = svc.query(batch_users, spec.kappa, exact=exact)
+        return res.ids, res.scores
 
     metrics = ServiceMetrics()
-    mb = Microbatcher(query_fn, svc.cfg.k, batch_size=svc.svc.batch_size,
-                      max_delay_s=svc.svc.max_delay_s, metrics=metrics)
+    mb = Microbatcher(query_fn, spec.cfg.k, batch_size=spec.batch_size,
+                      max_delay_s=spec.max_delay_s, metrics=metrics)
     # warm the jit cache so the curve measures steady state, not compiles
-    query_fn(np.zeros((svc.svc.batch_size, svc.cfg.k), np.float32))
+    query_fn(np.zeros((spec.batch_size, spec.cfg.k), np.float32))
     metrics.reset()
 
     t0 = time.perf_counter()
@@ -47,7 +48,7 @@ def run_point(svc: GamService, users: np.ndarray, *, exact: bool) -> dict:
     wall = time.perf_counter() - t0
     snap = metrics.snapshot()
     return {
-        "batch_size": svc.svc.batch_size,
+        "batch_size": spec.batch_size,
         "mode": "exact" if exact else "gam",
         "n_requests": int(users.shape[0]),
         "wall_s": wall,
@@ -82,17 +83,19 @@ def main(argv=None) -> None:
     curves = {"exact": [], "gam": []}
     discard_mean = None
     for bs in args.batch_sizes:
-        svc = GamService(np.arange(args.items), items, cfg, ServiceConfig(
-            n_shards=args.shards, min_overlap=args.min_overlap,
-            kappa=args.kappa, batch_size=bs, max_delay_s=5e-3))
+        svc = open_retriever(
+            RetrieverSpec(cfg=cfg, backend="sharded", n_shards=args.shards,
+                          min_overlap=args.min_overlap, kappa=args.kappa,
+                          batch_size=bs, max_delay_s=5e-3),
+            items=items)
         for exact in (True, False):
             pt = run_point(svc, users, exact=exact)
             curves[pt["mode"]].append(pt)
             print(f"{pt['mode']},{bs},{pt['qps']:.1f},"
                   f"{pt['p50_ms']:.2f},{pt['p99_ms']:.2f},"
                   f"{pt['occupancy']:.2f}")
-        svc.query(users[:1], args.kappa)       # discard stat at this config
-        discard_mean = float(svc._last_query_stats["discard"].mean())
+        res = svc.query(users[:1], args.kappa)  # discard stat at this config
+        discard_mean = float(res.discarded_frac.mean())
 
     out = {
         "config": {

@@ -13,10 +13,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import KAPPA
+from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig
-from repro.core.retrieval import BruteForceRetriever, GamRetriever
 from repro.data import synthetic_ratings
+from repro.retriever import RetrieverSpec, open_retriever
 
 
 def _time(method, u):
@@ -31,10 +31,12 @@ def run(n_users: int = 100, n_items: int = 100_000,
     rows = []
     for k, thr, mo in ((10, 0.45, 3), (64, 1.2, 3)):
         u, v, _ = synthetic_ratings(n_users, n_items, k, seed=seed)
-        brute = BruteForceRetriever(v)
-        gam = GamRetriever(
-            v, GamConfig(k=k, scheme="parse_tree", threshold=thr),
-            min_overlap=mo)
+        brute = brute_oracle(v)
+        gam = open_retriever(
+            RetrieverSpec(
+                cfg=GamConfig(k=k, scheme="parse_tree", threshold=thr),
+                backend="gam", min_overlap=mo),
+            items=v)
         t_brute, _ = _time(brute, u)
         t_gam, res = _time(gam, u)
         rows.append({

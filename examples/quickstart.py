@@ -1,39 +1,45 @@
-"""Quickstart: the paper's pipeline in 40 lines.
+"""Quickstart: the paper's pipeline through the unified retriever API.
 
-Generate factors, build the geometry-aware sparse mapping + inverted index,
-answer top-10 queries while discarding most of the item set, and compare
-against brute force.
+Generate factors, open a GAM retriever from one spec (geometry-aware sparse
+mapping + inverted index), answer top-10 queries while discarding most of
+the item set, compare against the brute-force backend, and round-trip the
+index through snapshot/restore.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (
-    BruteForceRetriever,
-    GamConfig,
-    GamRetriever,
-    recovery_accuracy,
-)
+from repro.core import GamConfig, recovery_accuracy
 from repro.data import synthetic_ratings
+from repro.retriever import RetrieverSpec, open_retriever
 
 K, N_ITEMS, N_USERS, KAPPA = 10, 20_000, 50, 10
 
 # 1. factors (paper §6.1: U, V ~ N(0,1); compatibility = inner product)
 users, items, _ = synthetic_ratings(N_USERS, N_ITEMS, K, seed=0)
 
-# 2. the geometry-aware schema: ternary directional tessellation (Alg 2)
-#    + parse-tree permutation (supplement B.2), factors thresholded at 0.45
-cfg = GamConfig(k=K, scheme="parse_tree", threshold=0.45)
+# 2. one spec describes the whole deployment object: the geometry-aware
+#    schema (ternary directional tessellation, Alg 2 + parse-tree
+#    permutation, supplement B.2; factors thresholded at 0.45) plus the
+#    backend choice — swap "gam" for "gam-device" (fused kernel) or
+#    "sharded" (streaming service) without touching anything below
+spec = RetrieverSpec(
+    cfg=GamConfig(k=K, scheme="parse_tree", threshold=0.45),
+    backend="gam", min_overlap=3)
 
-# 3. map items with phi, build the inverted index over sparsity patterns
-gam = GamRetriever(items, cfg, min_overlap=3)
+# 3. build: map items with phi, index the sparsity patterns
+gam = open_retriever(spec, items=items)
 
 # 4. answer queries: candidates from pattern overlap, exact scores only there
 res = gam.query(users, KAPPA)
 
-# 5. compare with brute force
-exact = BruteForceRetriever(items).query(users, KAPPA)
-acc = recovery_accuracy(res.ids, exact.ids)
+# 5. compare with the brute-force backend (same API, zero pruning)
+exact = open_retriever(
+    RetrieverSpec(cfg=spec.cfg, backend="brute"), items=items)
+acc = recovery_accuracy(res.ids, exact.query(users, KAPPA).ids)
 
 print(f"items discarded per user: {res.discarded_frac.mean():.1%} "
       f"(+- {res.discarded_frac.std():.1%})")
@@ -41,4 +47,16 @@ print(f"implied retrieval speed-up: "
       f"x{1 / (1 - res.discarded_frac.mean()):.1f}")
 print(f"recovery accuracy of true top-{KAPPA}: {acc.mean():.1%}")
 assert acc.mean() > 0.75 and res.discarded_frac.mean() > 0.7
+
+# 6. persistence: snapshot the index (posting lists, patterns) through
+#    repro.checkpoint and restore it — answers are bit-identical
+with tempfile.TemporaryDirectory() as tmp:
+    path = os.path.join(tmp, "gam_index.npz")
+    gam.snapshot(path)
+    restored = open_retriever(spec, snapshot=path)
+    res2 = restored.query(users, KAPPA)
+assert np.array_equal(res.ids, res2.ids)
+assert np.array_equal(res.scores, res2.scores)
+print(f"snapshot/restore round trip: {restored.n_items} items, "
+      "bit-identical answers")
 print("OK")

@@ -1,5 +1,7 @@
 """Serve a small LM with batched requests, comparing the exact LM head with
 the GAM-accelerated head (the paper's technique applied to vocab retrieval).
+``GamHead`` is a thin adapter over a unified-API ``gam-device`` retriever
+(``repro.retriever``) built on the unembedding rows.
 
 Run:  PYTHONPATH=src python examples/serve_gam.py
 """
@@ -42,4 +44,5 @@ print(f"greedy next-token agreement with exact decode: {agree:.1%}")
 assert r_gam.discard_frac > 0.05 and agree > 0.5
 print("OK")
 print("(for the sharded streaming retrieval service — live upserts, "
-      "microbatched queries — see examples/serve_stream.py)")
+      "microbatched queries, snapshot/restore — see "
+      "examples/serve_stream.py)")

@@ -1,25 +1,31 @@
-"""Streaming retrieval service demo: boot a sharded GamService, stream
-delta upserts/deletes into the live catalog, and query continuously through
-the microbatching front-end — verifying along the way that streamed state
-answers exactly like a fresh rebuild (the delta-segment contract).
+"""Streaming retrieval service demo through the unified retriever API: open
+a ``sharded`` backend, stream delta upserts/deletes into the live catalog,
+query continuously through the microbatching front-end, and snapshot the
+catalog MID-STREAM (non-empty delta) — verifying that streamed state answers
+exactly like a fresh rebuild, and that a restore answers exactly like the
+snapshot (the delta-segment and snapshot contracts).
 
 Run:  PYTHONPATH=src python examples/serve_stream.py
 """
+import os
+import tempfile
+
 import numpy as np
 
 from repro.core.mapping import GamConfig
-from repro.service import GamService, ServiceConfig
+from repro.retriever import RetrieverSpec, open_retriever
 
 rng = np.random.default_rng(0)
 K, N, KAPPA = 16, 600, 10
 items = rng.normal(size=(N, K)).astype(np.float32)
 items /= np.linalg.norm(items, axis=1, keepdims=True)
-cfg = GamConfig(k=K, scheme="parse_tree", threshold=0.2)
-svc_cfg = ServiceConfig(n_shards=2, min_overlap=2, kappa=KAPPA,
-                        batch_size=4, max_delay_s=5e-3)
+spec = RetrieverSpec(
+    cfg=GamConfig(k=K, scheme="parse_tree", threshold=0.2),
+    backend="sharded", n_shards=2, min_overlap=2, kappa=KAPPA,
+    batch_size=4, max_delay_s=5e-3)
 
-svc = GamService(np.arange(N), items, cfg, svc_cfg)
-print(f"booted: {svc.n_items} items over {svc_cfg.n_shards} shards")
+svc = open_retriever(spec, items=items)
+print(f"booted: {svc.n_items} items over {spec.n_shards} shards")
 
 next_id = N
 for step in range(6):
@@ -41,19 +47,33 @@ for step in range(6):
 
 # streamed state must answer exactly like a fresh rebuild of the catalog
 users = rng.normal(size=(8, K)).astype(np.float32)
-ids_stream, sc_stream = svc.query(users, KAPPA)
+res_stream = svc.query(users, KAPPA)
 
 cat_ids = np.sort(np.fromiter(svc.catalog.keys(), np.int64, svc.n_items))
 cat_fac = np.stack([svc.catalog[int(i)] for i in cat_ids])
-fresh = GamService(cat_ids, cat_fac, cfg, svc_cfg)
-ids_fresh, sc_fresh = fresh.query(users, KAPPA)
-assert np.array_equal(ids_stream, ids_fresh)
-assert np.array_equal(sc_stream, sc_fresh)
+fresh = open_retriever(spec, items=cat_fac, ids=cat_ids)
+res_fresh = fresh.query(users, KAPPA)
+assert np.array_equal(res_stream.ids, res_fresh.ids)
+assert np.array_equal(res_stream.scores, res_fresh.scores)
 print("streamed state == fresh rebuild: exact match")
 
+# snapshot mid-stream: tombstones + a live delta segment all round-trip
+# through repro.checkpoint; the restored service answers bit-identically
+with tempfile.TemporaryDirectory() as tmp:
+    path = os.path.join(tmp, "catalog.npz")
+    svc.snapshot(path)
+    restored = open_retriever(spec, snapshot=path)
+    assert len(restored.delta) == len(svc.delta) > 0
+    res_restored = restored.query(users, KAPPA)
+assert np.array_equal(res_restored.ids, res_stream.ids)
+assert np.array_equal(res_restored.scores, res_stream.scores)
+print(f"snapshot -> restore with live delta ({len(svc.delta)} rows): "
+      "bit-identical answers")
+
 svc.compact()
-ids_c, sc_c = svc.query(users, KAPPA)
-assert np.array_equal(ids_c, ids_fresh) and np.array_equal(sc_c, sc_fresh)
+res_c = svc.query(users, KAPPA)
+assert np.array_equal(res_c.ids, res_fresh.ids)
+assert np.array_equal(res_c.scores, res_fresh.scores)
 print(f"after compact(): identical answers, delta={len(svc.delta)}")
 
 snap = svc.metrics.snapshot()

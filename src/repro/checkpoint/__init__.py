@@ -1,1 +1,10 @@
-from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint, tree_paths
+from repro.checkpoint.checkpoint import (
+    load_arrays,
+    restore_checkpoint,
+    save_arrays,
+    save_checkpoint,
+    tree_paths,
+)
+
+__all__ = ["load_arrays", "restore_checkpoint", "save_arrays",
+           "save_checkpoint", "tree_paths"]

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "tree_paths"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "tree_paths",
+           "save_arrays", "load_arrays"]
 
 _SEP = "//"
 
@@ -43,6 +44,47 @@ def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
             json.dumps(meta).encode(), dtype=np.uint8
         ), **arrays)
     os.replace(tmp, path)
+
+
+def save_arrays(path: str, arrays: dict[str, np.ndarray],
+                extra: dict | None = None) -> None:
+    """Donor-free variant of :func:`save_checkpoint` for catalog snapshots.
+
+    ``arrays`` is a flat name -> array mapping (names are the restore keys,
+    so they must be stable across versions); ``extra`` is a JSON-serialisable
+    metadata dict stored alongside.  Unlike the pytree checkpoint, restore
+    needs no ``like`` donor — the retriever snapshot/restore path is built on
+    this pair.
+    """
+    out = {}
+    meta: dict = {"keys": [], "dtypes": [], "extra": extra or {}}
+    for i, (name, leaf) in enumerate(arrays.items()):
+        arr = np.asarray(jax.device_get(leaf))
+        meta["keys"].append(name)
+        meta["dtypes"].append(str(arr.dtype))
+        if arr.dtype == jnp.bfloat16:  # npz can't round-trip ml_dtypes
+            arr = arr.view(np.uint16)
+        out[f"a{i}"] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8
+        ), **out)
+    os.replace(tmp, path)
+
+
+def load_arrays(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Restore a :func:`save_arrays` file -> (name -> host array, extra)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode())
+        arrays = {}
+        for i, (name, dt) in enumerate(zip(meta["keys"], meta["dtypes"])):
+            arr = data[f"a{i}"]
+            if dt == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            arrays[name] = arr
+    return arrays, meta.get("extra", {})
 
 
 def restore_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:

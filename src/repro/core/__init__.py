@@ -1,9 +1,18 @@
-"""Core GAM library: the paper's contribution as composable JAX modules."""
+"""Core GAM library: the paper's contribution as composable JAX modules.
+
+Canonical exports: ``pattern_overlap`` (and the rest of the mapping/
+tessellation toolkit) live HERE; the retrieval lifecycle moved to
+``repro.retriever`` (one spec, pluggable backends, snapshot/restore) —
+``RetrievalResult`` is re-exported from there for the legacy spelling, and
+``BruteForceRetriever``/``GamRetriever`` are deprecation shims over the
+``brute``/``gam``/``gam-device`` backends.
+"""
 from repro.core.mapping import GamConfig, densify, pattern_overlap, sparse_map
 from repro.core.retrieval import (
     BruteForceRetriever,
     GamRetriever,
     RetrievalResult,
+    masked_topk,
     recovery_accuracy,
 )
 from repro.core.tessellation import (
@@ -22,6 +31,7 @@ __all__ = [
     "BruteForceRetriever",
     "GamRetriever",
     "RetrievalResult",
+    "masked_topk",
     "recovery_accuracy",
     "dary_pattern",
     "exhaustive_tess_vector",

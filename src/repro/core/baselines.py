@@ -18,7 +18,7 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.retrieval import RetrievalResult
+from repro.retriever.types import RetrievalResult
 
 __all__ = ["SrpLsh", "SuperBitLsh", "CroHash", "PcaTree"]
 

@@ -1,24 +1,26 @@
-"""End-to-end GAM retrieval (the paper's deployment object).
+"""Legacy retrieval entry points + shared retrieval metrics.
 
-``GamRetriever`` ties the pieces together: map item factors with phi, build the
-inverted index, and answer top-kappa MIPS queries by scoring only candidates.
-``BruteForceRetriever`` is the exact baseline the paper compares runtime
-against.  Both expose the same interface so benchmarks and serving can swap
-them.
+The retriever implementations moved behind the unified API in
+``repro.retriever`` (one spec, one lifecycle, pluggable backends, snapshot/
+restore).  ``GamRetriever`` and ``BruteForceRetriever`` remain here as thin
+deprecation shims for one release — they emit ``DeprecationWarning`` naming
+the new spelling and delegate everything to the equivalent backend.
+
+Still canonical here: :func:`masked_topk` (the dense bit-exact oracle the
+fused kernel is tested against) and :func:`recovery_accuracy` (the paper's
+§6 metric).  :class:`RetrievalResult` is re-exported from its new home,
+``repro.retriever``.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inverted_index import DeviceIndex, InvertedIndex
-from repro.core.mapping import GamConfig, sparse_map
-from repro.kernels.gam_retrieve import build_retrieval_meta
-from repro.kernels.gam_score import NEG
-from repro.kernels.ops import gam_retrieve, gam_score
+from repro.kernels.ops import gam_score
+from repro.retriever.types import RetrievalResult
 
 __all__ = ["BruteForceRetriever", "GamRetriever", "RetrievalResult",
            "masked_topk", "recovery_accuracy"]
@@ -41,158 +43,60 @@ def masked_topk(users: jax.Array, items: jax.Array, masks: jax.Array,
     return vals, ids.astype(jnp.int32)
 
 
-@dataclasses.dataclass
-class RetrievalResult:
-    ids: np.ndarray        # (Q, kappa) retrieved item ids (-1 pad)
-    scores: np.ndarray     # (Q, kappa) inner products (-inf pad)
-    n_scored: np.ndarray   # (Q,) how many items were actually scored
-    discarded_frac: np.ndarray  # (Q,) fraction of the item set never scored
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} "
+                  "(see repro.retriever — removed after one release)",
+                  DeprecationWarning, stacklevel=3)
 
 
 class BruteForceRetriever:
-    """Exact top-kappa by scoring every item (the paper's baseline cost)."""
+    """DEPRECATED shim — use ``open_retriever(RetrieverSpec(cfg=...,
+    backend='brute'))``.  Exact top-kappa by scoring every item."""
 
     def __init__(self, items: np.ndarray):
-        self.items = np.asarray(items, np.float32)
+        _deprecated("core.retrieval.BruteForceRetriever(items)",
+                    "repro.retriever.open_retriever(RetrieverSpec("
+                    "cfg=GamConfig(k=...), backend='brute'), items=items)")
+        from repro.retriever import RetrieverSpec, open_retriever
+        items = np.asarray(items, np.float32)
+        spec = RetrieverSpec(
+            cfg=_plain_cfg(items.shape[1]), backend="brute")
+        self._impl = open_retriever(spec, items=items)
 
-    def query(self, users: np.ndarray, kappa: int) -> RetrievalResult:
-        users = np.asarray(users, np.float32)
-        scores = users @ self.items.T
-        kappa = min(kappa, self.items.shape[0])
-        top = np.argpartition(-scores, kappa - 1, axis=1)[:, :kappa]
-        top_scores = np.take_along_axis(scores, top, axis=1)
-        order = np.argsort(-top_scores, axis=1)
-        n = self.items.shape[0]
-        q = users.shape[0]
-        return RetrievalResult(
-            ids=np.take_along_axis(top, order, axis=1),
-            scores=np.take_along_axis(top_scores, order, axis=1),
-            n_scored=np.full(q, n),
-            discarded_frac=np.zeros(q),
-        )
+    def __getattr__(self, name):
+        if name == "_impl":      # not set yet (e.g. unpickling a bare shell)
+            raise AttributeError(name)
+        return getattr(self._impl, name)
 
 
 class GamRetriever:
-    """Paper's method: phi-map items once, inverted index, candidate-only scoring."""
+    """DEPRECATED shim — use ``open_retriever(RetrieverSpec(cfg=cfg,
+    backend='gam'|'gam-device', ...))``.  Paper's method: phi-map items
+    once, inverted index, candidate-only scoring."""
 
-    def __init__(self, items: np.ndarray, cfg: GamConfig, min_overlap: int = 1,
+    def __init__(self, items: np.ndarray, cfg, min_overlap: int = 1,
                  device: bool = False, bucket: int = 256,
                  whiten: bool = False):
-        """``whiten=True`` maps factors through a per-coordinate 1/std
-        rescaling before tessellating — the concrete realisation of the
-        paper's §5/supplement-B.1 suggestion of non-uniform tessellation for
-        clustered/anisotropic factors (equalises tile occupancy without
-        changing the exact scores, which always use the raw factors)."""
-        self.items = np.asarray(items, np.float32)
-        self.cfg = cfg
-        self.min_overlap = min_overlap
-        self._scale = (
-            1.0 / (self.items.std(axis=0) + 1e-9) if whiten else None
-        )
-        mapped = self.items * self._scale if whiten else self.items
-        tau, vals = sparse_map(jnp.asarray(mapped), cfg)
-        self.item_tau = np.asarray(tau)
-        # the paper's inverted index stores only NON-zero coordinates of
-        # phi(v); thresholded coordinates never enter the index.
-        self.item_mask = np.asarray(vals) != 0.0
-        # the CSR index serves the CPU query path only; device=True
-        # retrievers never touch it, so build it on first use
-        self._cpu_index: InvertedIndex | None = None
-        self.device_index = (
-            DeviceIndex.build(self.item_tau, cfg.p, bucket, mask=self.item_mask)
-            if device
-            else None
-        )
-        self._items_dev = jnp.asarray(self.items) if device else None
-        # block metadata for the fused streaming kernel: pattern bitsets,
-        # per-block unions (skip prepass) and the bucket-spill flags that
-        # keep its candidate set bit-identical to the posting-table path
-        self._retrieve_meta = (
-            build_retrieval_meta(
-                self.item_tau, self.item_mask, cfg.p,
-                spill_rows=np.asarray(self.device_index.spill),
-                bn=min(512, -(-max(len(self.items), 1) // 128) * 128))
-            if device
-            else None
-        )
+        backend = "gam-device" if device else "gam"
+        _deprecated("core.retrieval.GamRetriever(items, cfg, ...)",
+                    f"repro.retriever.open_retriever(RetrieverSpec(cfg=cfg, "
+                    f"backend={backend!r}, min_overlap=..., bucket=..., "
+                    f"whiten=...), items=items)")
+        from repro.retriever import RetrieverSpec, open_retriever
+        spec = RetrieverSpec(cfg=cfg, backend=backend,
+                             min_overlap=min_overlap, bucket=bucket,
+                             whiten=whiten)
+        self._impl = open_retriever(spec, items=items)
 
-    @property
-    def index(self) -> InvertedIndex:
-        if self._cpu_index is None:
-            self._cpu_index = InvertedIndex(self.item_tau, self.cfg.p,
-                                            mask=self.item_mask)
-        return self._cpu_index
+    def __getattr__(self, name):
+        if name == "_impl":      # not set yet (e.g. unpickling a bare shell)
+            raise AttributeError(name)
+        return getattr(self._impl, name)
 
-    def map_queries(self, users: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        users = np.asarray(users, np.float32)
-        if self._scale is not None:
-            users = users * self._scale
-        tau, vals = sparse_map(jnp.asarray(users), self.cfg)
-        return np.asarray(tau), np.asarray(vals) != 0.0
 
-    def query(self, users: np.ndarray, kappa: int) -> RetrievalResult:
-        users = np.asarray(users, np.float32)
-        if self.device_index is not None:
-            return self._query_device(users, kappa)
-        q_tau, q_mask = self.map_queries(users)
-        n = self.items.shape[0]
-        q = users.shape[0]
-        ids_out = np.full((q, kappa), -1, np.int64)
-        sc_out = np.full((q, kappa), -np.inf, np.float32)
-        n_scored = np.zeros(q, np.int64)
-        for qi in range(q):
-            cand, _ = self.index.query(q_tau[qi], self.min_overlap, q_mask[qi])
-            if cand.size == 0:
-                continue
-            scores = self.items[cand] @ users[qi]
-            kk = min(kappa, cand.size)
-            top = np.argpartition(-scores, kk - 1)[:kk]
-            order = np.argsort(-scores[top])
-            ids_out[qi, :kk] = cand[top[order]]
-            sc_out[qi, :kk] = scores[top[order]]
-            n_scored[qi] = cand.size
-        return RetrievalResult(
-            ids=ids_out,
-            scores=sc_out,
-            n_scored=n_scored,
-            discarded_frac=1.0 - n_scored / n,
-        )
-
-    def _query_device(self, users: np.ndarray, kappa: int) -> RetrievalResult:
-        """Streaming jit path: one fused gam_retrieve call over the query
-        batch — candidate pruning, exact scoring and the top-kappa reduction
-        happen on chip, so nothing of size (Q, N) ever reaches HBM.
-        ``n_scored`` comes from the kernel's per-block candidate counts."""
-        n = self.items.shape[0]
-        q = users.shape[0]
-        q_tau, q_mask = self.map_queries(users)
-        kk = min(kappa, n)
-        res = gam_retrieve(jnp.asarray(users), self._items_dev,
-                           jnp.asarray(q_tau), jnp.asarray(q_mask),
-                           self._retrieve_meta, kk,
-                           min_overlap=self.min_overlap)
-        vals = np.asarray(res.vals, np.float32)
-        rows = np.asarray(res.rows, np.int64)
-        empty = vals <= NEG / 2          # slots no candidate could fill
-        ids_out = np.full((q, kappa), -1, np.int64)
-        sc_out = np.full((q, kappa), -np.inf, np.float32)
-        ids_out[:, :kk] = np.where(empty, -1, rows)
-        sc_out[:, :kk] = np.where(empty, -np.inf, vals)
-        n_scored = np.asarray(res.blk_counts, np.int64).sum(axis=1)
-        return RetrievalResult(
-            ids=ids_out,
-            scores=sc_out,
-            n_scored=n_scored,
-            discarded_frac=1.0 - n_scored / n,
-        )
-
-    def candidate_masks(self, users: np.ndarray) -> jax.Array:
-        """Jit path (serving): (Q, N) bool candidate masks on device."""
-        assert self.device_index is not None, "build with device=True"
-        q_tau, q_mask = self.map_queries(users)
-        return self.device_index.batch_candidate_mask(
-            jnp.asarray(q_tau), self.min_overlap, jnp.asarray(q_mask)
-        )
+def _plain_cfg(k: int):
+    from repro.core.mapping import GamConfig
+    return GamConfig(k=k)
 
 
 def recovery_accuracy(retrieved_ids: np.ndarray, true_ids: np.ndarray) -> np.ndarray:

@@ -23,21 +23,23 @@ from repro.serving import Engine, ServeConfig
 
 
 def serve_retrieval(args):
-    """Boot the GamService, stream upserts + microbatched queries, print the
+    """Open a unified-API retriever (default backend: the sharded streaming
+    service), stream upserts + microbatched queries, print the
     ServiceMetrics snapshot (QPS, p50/p99 latency, occupancy, discard,
-    shard balance)."""
+    shard balance), and optionally snapshot/restore the catalog."""
     from repro.core.mapping import GamConfig
-    from repro.service import GamService, ServiceConfig
+    from repro.retriever import RetrieverSpec, open_retriever
 
     rng = np.random.default_rng(0)
     items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
     items /= np.linalg.norm(items, axis=1, keepdims=True)
     cfg = GamConfig(k=args.dim, scheme="parse_tree",
                     threshold=args.gam_item_threshold)
-    svc = GamService(np.arange(args.items), items, cfg, ServiceConfig(
-        n_shards=args.shards, min_overlap=args.gam_min_overlap,
-        kappa=args.kappa, batch_size=args.service_batch,
-        max_delay_s=args.max_delay_ms * 1e-3))
+    spec = RetrieverSpec(
+        cfg=cfg, backend="sharded", n_shards=args.shards,
+        min_overlap=args.gam_min_overlap, kappa=args.kappa,
+        batch_size=args.service_batch, max_delay_s=args.max_delay_ms * 1e-3)
+    svc = open_retriever(spec, items=items)
 
     # warm the base-path jit cache, then restart the clock: index build and
     # base compile time are excluded from QPS/latency.  Delta-path shapes
@@ -71,6 +73,17 @@ def serve_retrieval(args):
     print(f"discard={snap['discard_mean']:.1%}  "
           f"shard balance (max/mean candidates)={snap['shard_balance']:.2f}")
 
+    if args.snapshot:
+        svc.snapshot(args.snapshot)
+        restored = open_retriever(spec, snapshot=args.snapshot)
+        probe = rng.normal(size=(4, args.dim)).astype(np.float32)
+        a, b = svc.query(probe), restored.query(probe)
+        assert (np.array_equal(a.ids, b.ids)
+                and np.array_equal(a.scores, b.scores))
+        print(f"snapshot -> {args.snapshot}  "
+              f"(restored {restored.n_items} items, delta="
+              f"{len(restored.delta)}; probe queries bit-identical)")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -96,6 +109,9 @@ def main():
     ap.add_argument("--service-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--gam-item-threshold", type=float, default=0.2)
+    ap.add_argument("--snapshot", metavar="PATH",
+                    help="after serving, snapshot the catalog there and "
+                         "verify a restore answers bit-identically")
     args = ap.parse_args()
 
     if args.service:

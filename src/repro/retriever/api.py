@@ -1,0 +1,190 @@
+"""Spec, protocol and backend registry of the unified retriever API.
+
+One frozen :class:`RetrieverSpec` describes *what* to serve (the GAM schema
+plus backend choice and sharding/bucket/overlap/microbatch knobs); a
+string-keyed registry — same importlib pattern as ``configs/registry.py`` —
+resolves ``spec.backend`` to a :class:`Retriever` implementation.  Every
+consumer (launchers, serving engine, benchmarks, examples) goes through
+:func:`open_retriever`; backends that cannot honour part of the lifecycle
+raise :class:`~repro.retriever.types.UnsupportedOp` instead of silently
+diverging.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.mapping import GamConfig
+from repro.retriever.types import RetrievalResult, UnsupportedOp
+
+__all__ = ["BACKEND_IDS", "Retriever", "RetrieverSpec", "available_backends",
+           "open_retriever", "register_backend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrieverSpec:
+    """Everything needed to (re)construct a retriever, in one frozen value.
+
+    ``cfg`` is the paper's mapping schema; the rest are deployment knobs.
+    Backends read only the fields they understand (e.g. ``n_shards`` and the
+    microbatch knobs matter to ``sharded`` only; ``bn``/``bq`` tile the fused
+    kernel of the device-backed paths).  ``options`` is an escape hatch of
+    (name, value) pairs for backend-specific knobs — the LSH/tree baseline
+    backends take their table counts from it.
+    """
+
+    cfg: GamConfig
+    backend: str = "gam"          # key into the backend registry
+    min_overlap: int = 1          # candidate = pattern overlap >= this
+    kappa: int = 10               # default top-kappa when query() gets None
+    bucket: int = 256             # posting-table bucket width
+    whiten: bool = False          # per-coordinate 1/std rescale before phi
+    n_shards: int = 1             # item-axis shards (sharded backend)
+    delta_bucket: int | None = None   # delta-segment bucket (None = bucket)
+    batch_size: int = 8           # microbatch size (fixed jit shape)
+    max_delay_s: float = 2e-3     # microbatch deadline trigger
+    bn: int | None = None         # fused-kernel item-block width (None=auto)
+    bq: int = 32                  # fused-kernel query-block height
+    seed: int = 0                 # randomised backends (LSH baselines)
+    options: tuple[tuple[str, Any], ...] = ()   # backend-specific extras
+
+    def opt(self, name: str, default: Any = None) -> Any:
+        for key, val in self.options:
+            if key == name:
+                return val
+        return default
+
+
+class Retriever(abc.ABC):
+    """The single lifecycle contract every backend implements.
+
+    ``build -> (upsert|delete)* -> query/stats -> snapshot`` on one side,
+    ``open_retriever(spec, snapshot=...)`` / ``restore`` on the other.  The
+    default implementations raise :class:`UnsupportedOp`; backends override
+    what they genuinely support (the four first-class backends support the
+    whole surface; the LSH/tree baselines are build+query only).
+    """
+
+    def __init__(self, spec: RetrieverSpec):
+        self.spec = spec
+
+    # ------------------------------------------------------------ lifecycle
+
+    @abc.abstractmethod
+    def build(self, items: np.ndarray,
+              ids: np.ndarray | None = None) -> "Retriever":
+        """(Re)build from an (N, k) factor matrix (+ optional catalog ids,
+        default ``arange(N)``).  Returns self for chaining."""
+
+    def upsert(self, ids, factors) -> None:
+        """Insert or overwrite catalog rows; visible to the next query."""
+        raise UnsupportedOp(self.spec.backend, "upsert")
+
+    def delete(self, ids) -> None:
+        raise UnsupportedOp(self.spec.backend, "delete")
+
+    def compact(self) -> None:
+        """Fold streamed mutations into the main structure (no-op when the
+        backend has no delta tier)."""
+        raise UnsupportedOp(self.spec.backend, "compact")
+
+    # ------------------------------------------------------------ queries
+
+    @abc.abstractmethod
+    def query(self, users: np.ndarray, kappa: int | None = None, *,
+              exact: bool = False) -> RetrievalResult:
+        """(Q, k) user factors -> :class:`RetrievalResult` in catalog-id
+        space.  ``exact=True`` scores every live item (the brute-force
+        reference path, supported by every backend)."""
+
+    def candidate_masks(self, users) -> Any:
+        """(Q, N) dense candidate masks on device (jit-traceable).  Only
+        index-backed device backends can materialise this."""
+        raise UnsupportedOp(self.spec.backend, "candidate_masks")
+
+    # ------------------------------------------------------------ state
+
+    @property
+    @abc.abstractmethod
+    def n_items(self) -> int:
+        """Live catalog size."""
+
+    def stats(self) -> dict:
+        return {"backend": self.spec.backend, "n_items": self.n_items}
+
+    def snapshot(self, path: str) -> None:
+        """Persist the full queryable state through ``repro.checkpoint`` so a
+        restore answers queries bit-identically."""
+        raise UnsupportedOp(self.spec.backend, "snapshot")
+
+    def restore(self, path: str) -> "Retriever":
+        raise UnsupportedOp(self.spec.backend, "restore")
+
+
+# ---------------------------------------------------------------- registry
+
+# Lazy, string-keyed and importlib-resolved, mirroring configs/registry.py:
+# backend modules import heavy deps (kernels, service tier) only when opened.
+_MODULES: dict[str, tuple[str, str]] = {
+    "brute": ("repro.retriever.brute", "BruteRetriever"),
+    "gam": ("repro.retriever.gam", "GamIndexRetriever"),
+    "gam-device": ("repro.retriever.gam", "GamIndexRetriever"),
+    "sharded": ("repro.retriever.sharded", "ShardedRetriever"),
+    "srp-lsh": ("repro.retriever.baselines", "BaselineRetriever"),
+    "superbit-lsh": ("repro.retriever.baselines", "BaselineRetriever"),
+    "cro": ("repro.retriever.baselines", "BaselineRetriever"),
+    "pca-tree": ("repro.retriever.baselines", "BaselineRetriever"),
+}
+
+BACKEND_IDS = tuple(_MODULES)
+
+_REGISTRY: dict[str, Callable[..., Retriever]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., Retriever] | None = None):
+    """Register a backend factory ``f(spec, **kw) -> Retriever`` under
+    ``name`` (usable as a decorator).  Third-party pruning structures plug in
+    here without touching callers — they just put ``name`` in their spec."""
+    def _register(f):
+        _REGISTRY[name] = f
+        return f
+    return _register(factory) if factory is not None else _register
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(dict.fromkeys((*_MODULES, *_REGISTRY)))
+
+
+def _resolve(name: str) -> Callable[..., Retriever]:
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name not in _MODULES:
+        raise KeyError(f"unknown retriever backend {name!r}; "
+                       f"known: {sorted(available_backends())}")
+    module, cls = _MODULES[name]
+    return getattr(importlib.import_module(module), cls)
+
+
+def open_retriever(spec: RetrieverSpec, items: np.ndarray | None = None,
+                   ids: np.ndarray | None = None, *,
+                   snapshot: str | None = None, **backend_kw) -> Retriever:
+    """Resolve ``spec.backend`` and open a retriever.
+
+    With ``items`` the catalog is built immediately; with ``snapshot`` the
+    state is restored from a :meth:`Retriever.snapshot` file instead; with
+    neither, an empty retriever is returned (streaming backends accept
+    ``upsert`` from zero).  Extra keyword arguments (e.g. ``mesh=``,
+    ``clock=``) are forwarded to the backend constructor.
+    """
+    if items is not None and snapshot is not None:
+        raise ValueError("pass either items or snapshot, not both")
+    retriever = _resolve(spec.backend)(spec, **backend_kw)
+    if snapshot is not None:
+        return retriever.restore(snapshot)
+    if items is not None:
+        return retriever.build(items, ids)
+    return retriever

@@ -1,0 +1,91 @@
+"""LSH/tree baseline backends (paper §5.1/§6), query-only.
+
+``srp-lsh``, ``superbit-lsh``, ``cro`` and ``pca-tree`` wrap the
+``core.baselines`` structures behind the same spec/registry/`query` contract
+as the GAM backends, so the benchmark line-up is one list of specs.  They
+are static hash/tree structures with no mutation or persistence story:
+``upsert``/``delete``/``compact``/``snapshot`` raise
+:class:`UnsupportedOp` — the typed signal callers feature-test instead of
+getting silently wrong answers.
+
+Backend-specific knobs ride in ``spec.options``; unspecified ones default
+from the factor dimensionality exactly as ``benchmarks.common`` always
+chose them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import CroHash, PcaTree, SrpLsh, SuperBitLsh
+from repro.retriever.api import Retriever, RetrieverSpec
+from repro.retriever.brute import exact_topk
+from repro.retriever.types import RetrievalResult
+
+__all__ = ["BaselineRetriever"]
+
+
+def _make(spec: RetrieverSpec, items: np.ndarray):
+    k = items.shape[1]
+    opt = spec.opt
+    if spec.backend == "srp-lsh":
+        return SrpLsh(items, n_bits=opt("n_bits", max(4, k // 2)),
+                      n_tables=opt("n_tables", 4), seed=spec.seed)
+    if spec.backend == "superbit-lsh":
+        return SuperBitLsh(items, n_bits=opt("n_bits", max(4, k // 2)),
+                           n_tables=opt("n_tables", 4), seed=spec.seed)
+    if spec.backend == "cro":
+        return CroHash(items, n_proj=opt("n_proj", 2 * k),
+                       top_l=opt("top_l", 2), n_tables=opt("n_tables", 4),
+                       seed=spec.seed)
+    if spec.backend == "pca-tree":
+        return PcaTree(items, depth=opt(
+            "depth", max(3, int(np.log2(max(len(items), 2))) - 4)))
+    raise KeyError(spec.backend)
+
+
+class BaselineRetriever(Retriever):
+    def __init__(self, spec: RetrieverSpec, **_):
+        super().__init__(spec)
+        self.ids = np.zeros(0, np.int64)
+        self.items = np.zeros((0, spec.cfg.k), np.float32)
+        self._impl = None
+
+    def build(self, items, ids=None) -> "BaselineRetriever":
+        items = np.asarray(items, np.float32).reshape(-1, self.spec.cfg.k)
+        ids = (np.arange(items.shape[0], dtype=np.int64) if ids is None
+               else np.asarray(ids, np.int64).ravel())
+        if len(np.unique(ids)) != ids.size:
+            raise ValueError("item ids must be unique")
+        order = np.argsort(ids)
+        self.ids, self.items = ids[order], items[order]
+        self._impl = _make(self.spec, self.items) if ids.size else None
+        return self
+
+    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+        kappa = self.spec.kappa if kappa is None else int(kappa)
+        users = np.asarray(users, np.float32)
+        q, n = users.shape[0], self.ids.size
+        if n == 0:
+            return RetrievalResult(np.full((q, kappa), -1, np.int64),
+                                   np.full((q, kappa), -np.inf, np.float32),
+                                   np.zeros(q, np.int64), np.zeros(q))
+        if exact:
+            kk = min(kappa, n)
+            top_ids, top_scores = exact_topk(self.ids, users @ self.items.T,
+                                             kappa)
+            ids_out = np.full((q, kappa), -1, np.int64)
+            sc_out = np.full((q, kappa), -np.inf, np.float32)
+            ids_out[:, :kk] = top_ids
+            sc_out[:, :kk] = top_scores
+            return RetrievalResult(ids_out, sc_out, np.full(q, n, np.int64),
+                                   np.zeros(q))
+        res = self._impl.query(users, kappa)
+        ids = np.where(res.ids >= 0,
+                       self.ids[np.clip(res.ids, 0, n - 1)], -1)
+        return RetrievalResult(ids=ids, scores=res.scores,
+                               n_scored=res.n_scored,
+                               discarded_frac=res.discarded_frac)
+
+    @property
+    def n_items(self) -> int:
+        return int(self.ids.size)

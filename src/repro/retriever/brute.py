@@ -1,0 +1,115 @@
+"""``brute`` backend: exact top-kappa by scoring every item.
+
+The paper's baseline cost, promoted to a first-class backend so it can serve
+as the oracle in the cross-backend contract suite and as a drop-in for tiny
+catalogs where pruning never pays.  Supports the full lifecycle (mutations
+are trivial on a flat catalog); index-specific introspection
+(``candidate_masks``) raises :class:`UnsupportedOp` — there is no index.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.retriever.api import Retriever, RetrieverSpec
+from repro.retriever.snapshot import read_snapshot, write_snapshot
+from repro.retriever.types import RetrievalResult
+
+__all__ = ["BruteRetriever", "exact_topk"]
+
+
+def exact_topk(ids: np.ndarray, scores: np.ndarray, kappa: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """(N,) ascending ids + (Q, N) scores -> top-kappa under the API's total
+    order (score desc, id asc).
+
+    argpartition fast path (O(N) per row); only rows whose kappa boundary is
+    score-TIED fall back to a stable full sort, so the order is exact on
+    ties without paying O(N log N) everywhere — this is the benchmarks'
+    brute baseline, its wall time is the speed-up denominator."""
+    q, n = scores.shape
+    kk = min(kappa, n)
+    part = np.argpartition(-scores, kk - 1, axis=1)[:, :kk]
+    part = np.sort(part, axis=1)                  # ascending cols = id asc
+    part_scores = np.take_along_axis(scores, part, axis=1)
+    order = np.argsort(-part_scores, axis=1, kind="stable")
+    top = np.take_along_axis(part, order, axis=1)
+    top_scores = np.take_along_axis(part_scores, order, axis=1)
+    tied = (scores >= top_scores[:, -1:]).sum(axis=1) > kk
+    for qi in np.nonzero(tied)[0]:
+        o = np.argsort(-scores[qi], kind="stable")[:kk]
+        top[qi], top_scores[qi] = o, scores[qi][o]
+    return ids[top], top_scores
+
+
+class BruteRetriever(Retriever):
+    def __init__(self, spec: RetrieverSpec, **_):
+        super().__init__(spec)
+        self.ids = np.zeros(0, np.int64)
+        self.items = np.zeros((0, spec.cfg.k), np.float32)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def build(self, items, ids=None) -> "BruteRetriever":
+        items = np.asarray(items, np.float32).reshape(-1, self.spec.cfg.k)
+        ids = (np.arange(items.shape[0], dtype=np.int64) if ids is None
+               else np.asarray(ids, np.int64).ravel())
+        if len(np.unique(ids)) != ids.size:
+            raise ValueError("item ids must be unique")
+        order = np.argsort(ids)
+        self.ids, self.items = ids[order], items[order]
+        return self
+
+    def upsert(self, ids, factors) -> None:
+        ids = np.asarray(ids, np.int64).ravel()
+        factors = np.asarray(factors, np.float32).reshape(
+            ids.size, self.spec.cfg.k)
+        if len(np.unique(ids)) != ids.size:   # duplicates: last write wins
+            _, first_rev = np.unique(ids[::-1], return_index=True)
+            sel = np.sort(ids.size - 1 - first_rev)
+            ids, factors = ids[sel], factors[sel]
+        keep = ~np.isin(self.ids, ids)
+        self.build(np.concatenate([self.items[keep], factors]),
+                   np.concatenate([self.ids[keep], ids]))
+
+    def delete(self, ids) -> None:
+        keep = ~np.isin(self.ids, np.asarray(ids, np.int64).ravel())
+        self.build(self.items[keep], self.ids[keep])
+
+    def compact(self) -> None:
+        pass                       # always compact: one flat factor matrix
+
+    # ------------------------------------------------------------ queries
+
+    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+        kappa = self.spec.kappa if kappa is None else int(kappa)
+        users = np.asarray(users, np.float32)
+        q, n = users.shape[0], self.items.shape[0]
+        ids_out = np.full((q, kappa), -1, np.int64)
+        sc_out = np.full((q, kappa), -np.inf, np.float32)
+        if n:
+            kk = min(kappa, n)
+            top_ids, top_scores = exact_topk(self.ids, users @ self.items.T,
+                                             kappa)
+            ids_out[:, :kk] = top_ids
+            sc_out[:, :kk] = top_scores
+        return RetrievalResult(
+            ids=ids_out, scores=sc_out,
+            n_scored=np.full(q, n, np.int64),
+            discarded_frac=np.zeros(q),
+        )
+
+    # ------------------------------------------------------------ state
+
+    @property
+    def n_items(self) -> int:
+        return int(self.ids.size)
+
+    def snapshot(self, path: str) -> None:
+        write_snapshot(path, self.spec,
+                       {"ids": self.ids, "items": self.items})
+
+    def restore(self, path: str) -> "BruteRetriever":
+        arrays, _ = read_snapshot(path, self.spec)
+        self.ids = np.asarray(arrays["ids"], np.int64)
+        self.items = np.asarray(arrays["items"], np.float32)
+        return self

@@ -1,0 +1,260 @@
+"""``sharded`` backend: the streaming service tier behind the unified API.
+
+Owns the three storage tiers and the request plumbing that used to live in
+``service.GamService`` (now a deprecation shim over this class):
+
+  * ``ShardedGamIndex`` — the compacted main segment, item-axis sharded;
+  * ``DeltaSegment``    — streamed upserts/deletes since the last compact;
+  * a host-side catalog (id -> factor) that is the source of truth
+    ``compact()`` rebuilds from;
+
+plus ``ServiceMetrics`` and a ``Microbatcher`` front-end (``.batcher``).
+
+Query = map the user batch with phi once, stream base + delta through the
+fused ``gam_retrieve`` kernel, then a deterministic merge ordered by
+(score desc, catalog id asc) — the same total order a fresh rebuild's
+``lax.top_k`` induces, which is what makes upsert-then-query ==
+rebuild-then-query (and snapshot -> restore -> query) testable to the bit.
+
+``snapshot`` persists the whole deployment object through
+``repro.checkpoint``: per-shard posting tables, the flat factor matrix,
+alive tombstones, the fused kernel's bit-packed patterns and block-union
+metadata, and the live delta catalog — a restored service answers queries
+bit-identically, including between compactions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapping import sparse_map
+from repro.kernels.gam_retrieve import RetrievalMeta
+from repro.kernels.gam_score import NEG
+from repro.retriever.api import Retriever, RetrieverSpec
+from repro.retriever.snapshot import read_snapshot, write_snapshot
+from repro.retriever.types import RetrievalResult, UnsupportedOp
+from repro.service.delta import DeltaSegment
+from repro.service.metrics import ServiceMetrics
+from repro.service.microbatch import Microbatcher
+from repro.service.sharded_index import ShardedGamIndex
+
+__all__ = ["ShardedRetriever"]
+
+_PAD_ID = np.int64(2**62)      # sorts after every real id on score ties
+
+
+class ShardedRetriever(Retriever):
+    def __init__(self, spec: RetrieverSpec, *, mesh=None,
+                 clock=time.monotonic, **_):
+        super().__init__(spec)
+        self.mesh = mesh
+        self.clock = clock
+        self.catalog: dict[int, np.ndarray] = {}
+        self.metrics = ServiceMetrics(clock)
+        self.base = self._build_base(
+            np.zeros((0, spec.cfg.k), np.float32), np.zeros(0, np.int64))
+        self.delta = DeltaSegment(
+            spec.cfg, spec.min_overlap,
+            spec.bucket if spec.delta_bucket is None else spec.delta_bucket)
+        self.batcher = Microbatcher(
+            self._batch_query_fn, spec.cfg.k, batch_size=spec.batch_size,
+            max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics)
+        self._last_query_stats: dict = {}
+
+    def _build_base(self, factors: np.ndarray,
+                    ids: np.ndarray) -> ShardedGamIndex:
+        return ShardedGamIndex.build(
+            factors, self.spec.cfg, item_ids=ids,
+            n_shards=self.spec.n_shards, min_overlap=self.spec.min_overlap,
+            bucket=self.spec.bucket, mesh=self.mesh)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def build(self, items, ids=None) -> "ShardedRetriever":
+        items = np.asarray(items, np.float32).reshape(-1, self.spec.cfg.k)
+        ids = (np.arange(items.shape[0], dtype=np.int64) if ids is None
+               else np.asarray(ids, np.int64).ravel())
+        if len(np.unique(ids)) != ids.size:
+            raise ValueError("item ids must be unique")
+        self.catalog = {int(i): f for i, f in zip(ids, items)}
+        self.base = self._build_base(items, ids)
+        self.delta.clear()
+        return self
+
+    def upsert(self, ids, factors) -> None:
+        """Insert or overwrite items; visible to the very next query."""
+        ids = np.asarray(ids, np.int64).ravel()
+        factors = np.asarray(factors, np.float32).reshape(
+            ids.size, self.spec.cfg.k)
+        for i, f in zip(ids, factors):
+            self.catalog[int(i)] = f
+        self.base.kill(ids)                 # superseded main rows, if any
+        self.delta.upsert(ids, factors)
+        self.metrics.record_upsert(ids.size)
+
+    def delete(self, ids) -> None:
+        ids = np.asarray(ids, np.int64).ravel()
+        for i in ids:
+            self.catalog.pop(int(i), None)
+        self.base.kill(ids)
+        self.delta.delete(ids)
+        self.metrics.record_delete(ids.size)
+
+    def compact(self) -> None:
+        """Rebuild the main shards from the merged catalog; empty the delta.
+        Queries before and after return identical results (the delta-segment
+        contract, pinned by the retriever contract suite)."""
+        ids = np.fromiter(self.catalog.keys(), np.int64, len(self.catalog))
+        order = np.argsort(ids)
+        ids = ids[order]
+        factors = (np.stack([self.catalog[int(i)] for i in ids])
+                   if ids.size else np.zeros((0, self.spec.cfg.k), np.float32))
+        self.base = self._build_base(factors, ids)
+        self.delta.clear()
+        self.metrics.record_compact()
+
+    # ------------------------------------------------------------ queries
+
+    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+        """``exact=True`` scores every live item through the same kernel —
+        the brute-force reference the benchmark compares against."""
+        kappa = self.spec.kappa if kappa is None else int(kappa)
+        users = np.asarray(users, np.float32)
+        q = users.shape[0]
+        users_j = jnp.asarray(users)
+        tau, vals = sparse_map(users_j, self.spec.cfg)
+        q_mask = vals != 0.0
+
+        base_res = self.base.query(users_j, tau, q_mask, kappa, exact=exact)
+        b_scores = np.asarray(base_res.scores, np.float32)
+        b_ids = self.base.rows_to_ids(np.asarray(base_res.rows), b_scores)
+        d_scores, d_ids, d_cand = self.delta.query(
+            users_j, tau, q_mask, kappa, exact=exact)
+
+        cat_scores = np.concatenate([b_scores, d_scores], axis=1)
+        cat_ids = np.concatenate([b_ids, d_ids], axis=1)
+        cat_ids = np.where(cat_scores <= NEG / 2, _PAD_ID, cat_ids)
+        # total order: score desc, catalog id asc — rebuild-equivalent
+        order = np.lexsort((cat_ids, -cat_scores), axis=-1)[:, :kappa]
+        top_ids = np.take_along_axis(cat_ids, order, axis=-1)
+        top_scores = np.take_along_axis(cat_scores, order, axis=-1)
+
+        ids_out = np.full((q, kappa), -1, np.int64)
+        sc_out = np.full((q, kappa), -np.inf, np.float32)
+        kk = top_ids.shape[1]
+        real = top_scores > NEG / 2
+        ids_out[:, :kk] = np.where(real, top_ids, -1)
+        sc_out[:, :kk] = np.where(real, top_scores, -np.inf)
+
+        n_live = self.base.n_live + len(self.delta)
+        n_cand = np.asarray(jnp.sum(base_res.shard_candidates, -1)) + d_cand
+        discard = 1.0 - n_cand / max(n_live, 1)
+        self._last_query_stats = {
+            "discard": discard,
+            "shard_candidates": np.asarray(base_res.shard_candidates),
+            "tiles_skipped_frac": base_res.tiles_skipped_frac,
+        }
+        return RetrievalResult(
+            ids=ids_out, scores=sc_out,
+            n_scored=np.asarray(n_cand, np.int64),
+            discarded_frac=discard,
+        )
+
+    def _batch_query_fn(self, users: np.ndarray, n_real: int):
+        """Fixed-shape step for the microbatcher; folds per-query discard and
+        shard-balance stats into the metrics — real rows only, never the
+        zero-vector padding."""
+        res = self.query(users)
+        st = self._last_query_stats
+        self.metrics.record_query_stats(st["discard"][:n_real],
+                                        st["shard_candidates"][:n_real])
+        return res.ids, res.scores
+
+    def candidate_masks(self, users):
+        raise UnsupportedOp(self.spec.backend, "candidate_masks",
+                            "the sharded tier never materialises (Q, N) "
+                            "masks — that is the point of the fused kernel")
+
+    # ------------------------------------------------------------ state
+
+    @property
+    def n_items(self) -> int:
+        return len(self.catalog)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(
+            n_shards=self.spec.n_shards,
+            n_live_base=self.base.n_live,
+            delta_len=len(self.delta),
+            posting_load=self.base.posting_load().tolist(),
+            metrics=self.metrics.snapshot(),
+        )
+        if self._last_query_stats:
+            out["tiles_skipped_frac"] = (
+                self._last_query_stats["tiles_skipped_frac"])
+        return out
+
+    def snapshot(self, path: str) -> None:
+        cat_ids = np.sort(np.fromiter(self.catalog.keys(), np.int64,
+                                      len(self.catalog)))
+        cat_fac = (np.stack([self.catalog[int(i)] for i in cat_ids])
+                   if cat_ids.size
+                   else np.zeros((0, self.spec.cfg.k), np.float32))
+        base, meta = self.base, self.base.meta
+        arrays = {
+            "catalog_ids": cat_ids, "catalog_factors": cat_fac,
+            "base_item_ids": base.item_ids,
+            "base_tables": base.tables, "base_counts": base.counts,
+            "base_spills": base.spills, "base_factors": base.factors,
+            "base_alive": base._alive_host,
+            "meta_item_bits_t": meta.item_bits_t,
+            "meta_block_union": meta.block_union,
+            "meta_block_spill": meta.block_spill,
+            "meta_spill8": meta.spill8,
+            "delta_ids": self.delta.ids, "delta_factors": self.delta.factors,
+        }
+        extra = {"base": {"n_shards": base.n_shards,
+                          "shard_cap": base.shard_cap,
+                          "bucket": base.bucket},
+                 "meta": {"bn": meta.bn, "words": meta.words,
+                          "n_rows": meta.n_rows, "n_pad": meta.n_pad}}
+        write_snapshot(path, self.spec, arrays, extra)
+
+    def restore(self, path: str) -> "ShardedRetriever":
+        """Reconstruct the exact serving state — including tombstones, the
+        kill-refreshed block metadata and a non-empty delta — without
+        re-deriving anything; queries are bit-identical to pre-snapshot.
+        Restores onto local devices (``mesh`` placement is not persisted)."""
+        arrays, state = read_snapshot(path, self.spec)
+        m = state["meta"]
+        meta = RetrievalMeta(
+            item_bits_t=jnp.asarray(arrays["meta_item_bits_t"]),
+            block_union=jnp.asarray(arrays["meta_block_union"]),
+            block_spill=jnp.asarray(arrays["meta_block_spill"]),
+            spill8=jnp.asarray(arrays["meta_spill8"]),
+            p=self.spec.cfg.p, words=int(m["words"]), bn=int(m["bn"]),
+            n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"]))
+        b = state["base"]
+        self.base = ShardedGamIndex(
+            self.spec.cfg, np.asarray(arrays["base_item_ids"], np.int64),
+            jnp.asarray(arrays["base_tables"]),
+            jnp.asarray(arrays["base_counts"]),
+            jnp.asarray(arrays["base_spills"]),
+            jnp.asarray(arrays["base_factors"]),
+            np.asarray(arrays["base_alive"], bool),
+            int(b["n_shards"]), int(b["shard_cap"]), self.spec.min_overlap,
+            int(b["bucket"]), None, meta)
+        self.catalog = {int(i): f for i, f in zip(
+            np.asarray(arrays["catalog_ids"], np.int64),
+            np.asarray(arrays["catalog_factors"], np.float32))}
+        self.delta.clear()
+        if arrays["delta_ids"].size:
+            # DeltaSegment state is a deterministic function of its sorted
+            # (ids, factors) — re-deriving it reproduces the packed patterns
+            # and posting table bit-for-bit
+            self.delta.upsert(np.asarray(arrays["delta_ids"], np.int64),
+                              np.asarray(arrays["delta_factors"], np.float32))
+        return self

@@ -1,0 +1,67 @@
+"""Snapshot plumbing shared by the retriever backends.
+
+A snapshot is one ``checkpoint.save_arrays`` file: the backend's queryable
+state as named host arrays (posting tables, bit-packed patterns, block-union
+metadata, factor matrices, the delta catalog, ...) plus a JSON header that
+pins the snapshot format, the backend name and the spec's schema-defining
+fields.  ``read_snapshot`` refuses files written by a different backend or
+an incompatible mapping schema — restoring into the wrong spec must fail
+loudly, never answer queries from the wrong geometry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint import load_arrays, save_arrays
+from repro.core.mapping import GamConfig
+from repro.retriever.api import RetrieverSpec
+
+__all__ = ["read_snapshot", "write_snapshot"]
+
+SNAPSHOT_FORMAT = "repro.retriever/v1"
+
+# spec fields that change query RESULTS (not just performance): a snapshot
+# taken under one of these must not silently serve under another.
+# delta_bucket is result-bearing too — bucket spill turns delta rows into
+# unconditional candidates, so a different width changes candidate sets.
+_RESULT_FIELDS = ("backend", "min_overlap", "bucket", "whiten",
+                  "delta_bucket")
+
+
+def _cfg_meta(cfg: GamConfig) -> dict:
+    return {"k": cfg.k, "scheme": cfg.scheme, "d": cfg.d,
+            "threshold": cfg.threshold}
+
+
+def write_snapshot(path: str, spec: RetrieverSpec,
+                   arrays: dict[str, np.ndarray],
+                   extra: dict | None = None) -> None:
+    header = {
+        "format": SNAPSHOT_FORMAT,
+        "cfg": _cfg_meta(spec.cfg),
+        "spec": {f: getattr(spec, f) for f in _RESULT_FIELDS},
+        "state": extra or {},
+    }
+    save_arrays(path, arrays, header)
+
+
+def read_snapshot(path: str, spec: RetrieverSpec
+                  ) -> tuple[dict[str, np.ndarray], dict]:
+    """Load + validate a snapshot against the opening spec -> (arrays,
+    backend state dict)."""
+    arrays, header = load_arrays(path)
+    if header.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"{path}: not a retriever snapshot "
+                         f"(format={header.get('format')!r})")
+    if header["cfg"] != _cfg_meta(spec.cfg):
+        raise ValueError(
+            f"{path}: snapshot mapping schema {header['cfg']} does not match "
+            f"spec cfg {_cfg_meta(spec.cfg)}")
+    saved = header["spec"]
+    mine = {f: getattr(spec, f) for f in _RESULT_FIELDS}
+    if saved != mine:
+        diff = {f: (saved[f], mine[f]) for f in _RESULT_FIELDS
+                if saved[f] != mine[f]}
+        raise ValueError(f"{path}: snapshot/spec mismatch (saved, spec): "
+                         f"{diff}")
+    return arrays, header.get("state", {})

@@ -1,0 +1,44 @@
+"""Leaf types of the unified retriever API (no intra-repo imports).
+
+``RetrievalResult`` lives here — this is its canonical home; the historical
+``repro.core.retrieval.RetrievalResult`` spelling re-exports it — so that the
+result contract is importable from anywhere (core, service, serving,
+baselines) without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["RetrievalResult", "UnsupportedOp"]
+
+
+class UnsupportedOp(NotImplementedError):
+    """A backend does not implement this part of the Retriever contract.
+
+    Raised eagerly (never silently diverging) so callers can feature-test a
+    backend with try/except instead of guessing from its name.
+    """
+
+    def __init__(self, backend: str, op: str, why: str = ""):
+        self.backend = backend
+        self.op = op
+        msg = f"backend {backend!r} does not support {op}()"
+        super().__init__(f"{msg}: {why}" if why else msg)
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    """Top-kappa answer of any retriever backend, in catalog-id space.
+
+    Empty slots (queries with fewer than kappa candidates) carry id -1 and
+    score -inf; ``n_scored`` counts the items whose exact inner product was
+    computed, and ``discarded_frac`` is the fraction of the live item set
+    never scored (the paper's speed-up statistic).
+    """
+
+    ids: np.ndarray        # (Q, kappa) retrieved catalog ids (-1 pad)
+    scores: np.ndarray     # (Q, kappa) inner products (-inf pad)
+    n_scored: np.ndarray   # (Q,) how many items were actually scored
+    discarded_frac: np.ndarray  # (Q,) fraction of the item set never scored

@@ -1,23 +1,34 @@
-"""Sharded streaming retrieval service over the GAM inverted index.
+"""Sharded streaming retrieval machinery (the ``sharded`` backend's parts).
 
 The paper's deployment object is an inverted index over phi-mapped factors;
-this package is its serving tier — the piece that takes the single-shard,
-static-catalog ``GamRetriever`` to a production shape: partitioned storage,
-live catalog mutation, and a request front-end.
+this package holds the building blocks of its serving tier — partitioned
+storage, live catalog mutation, and a request front-end.  The facade that
+ties them together is the unified-API ``sharded`` backend
+(``repro.retriever.sharded.ShardedRetriever``); open it with::
+
+    from repro.retriever import RetrieverSpec, open_retriever
+    r = open_retriever(RetrieverSpec(cfg=cfg, backend="sharded",
+                                     n_shards=4, min_overlap=2),
+                       items=factors, ids=item_ids)
+
+``GamService`` remains as a deprecation shim over that backend for one
+release.
 
 Architecture
 ============
 
 ::
 
-    requests ──> Microbatcher ──> GamService.query ──┬─> ShardedGamIndex
-       (size/deadline coalescing,                    │   (main segment,
-        fixed-shape padded batches,                  │    item-axis shards,
-        per-request latency)                         │    per-shard masks +
-                                                     │    top-kappa merge)
-    upsert/delete ──> DeltaSegment  <────────────────┴─> merge by
-        (always-queried dense segment;                   (score desc, id asc)
-         compact() folds it into the main shards)
+    requests ──> Microbatcher ──> ShardedRetriever.query ─┬─> ShardedGamIndex
+       (size/deadline coalescing,                         │   (main segment,
+        fixed-shape padded batches,                       │    item-axis shards,
+        per-request latency)                              │    fused-kernel query,
+                                                          │    kill-refreshed
+    upsert/delete ──> DeltaSegment  <─────────────────────┤    block metadata)
+        (always-queried dense segment;                    └─> merge by
+         compact() folds it into the main shards)             (score desc, id asc)
+    snapshot()/restore() ──> repro.checkpoint (posting tables, bit-packed
+        patterns, block-union metadata, delta catalog — bit-identical restore)
     ServiceMetrics: QPS, p50/p99 latency, occupancy,
                     discard fraction, shard balance
 
@@ -28,22 +39,17 @@ Components
     The compacted main segment.  The id-sorted catalog is cut into
     contiguous shards; each shard owns a dense-bucket posting segment
     (built by the vectorised ``core.inverted_index.build_segment``) over
-    local rows.  Candidate masking is per-shard; exact scoring is one
-    ``gam_score`` kernel call over the flat factor matrix, whose item axis
-    ``sharding.specs.index_shardings`` partitions over
-    ``launch.mesh.make_index_mesh`` — catalog size scales with devices.
-    The cross-shard merge tie-breaks by ascending item id, making a
-    multi-shard query bit-identical to the single-shard device retriever.
+    local rows.  Queries stream the flat factor matrix through the fused
+    ``kernels.gam_retrieve`` kernel, whose item axis ``sharding.specs
+    .index_shardings`` partitions over ``launch.mesh.make_index_mesh`` —
+    catalog size scales with devices.  ``kill()`` tombstones rows AND
+    refreshes the kernel's block-union/spill metadata, so long tombstone
+    streams cannot erode the zero-candidate block-skip rate.
 
 ``DeltaSegment`` (``delta.py``)
     Streaming ``upsert``/``delete`` land in a small dense segment that every
     query also scores (same candidate semantics, same kernel), so queries
     between compactions return exactly what a fresh rebuild would.
-
-``GamService`` (``service.py``)
-    The facade: catalog of record, base + delta query merge, ``compact()``,
-    metrics.  ``query(..., exact=True)`` is the brute-force reference path
-    through the same kernel.
 
 ``Microbatcher`` (``microbatch.py``)
     Coalesces single-user queries into fixed-size padded batches (size- or
@@ -55,13 +61,13 @@ Components
     ``benchmarks/service_bench.py`` (throughput-vs-latency curve).
 
 Not yet here (see ROADMAP): multi-host serving, shard replication/failover,
-and snapshot/restore of the catalog through ``checkpoint/``.
+background (async) compaction, and a load-balancing repartitioner.
 """
 from repro.service.delta import DeltaSegment
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher, QueryResult
 from repro.service.service import GamService, ServiceConfig
-from repro.service.sharded_index import ShardedGamIndex
+from repro.service.sharded_index import ShardedGamIndex, ShardTopK
 
 __all__ = [
     "DeltaSegment",
@@ -70,5 +76,6 @@ __all__ = [
     "QueryResult",
     "ServiceConfig",
     "ServiceMetrics",
+    "ShardTopK",
     "ShardedGamIndex",
 ]

@@ -1,43 +1,35 @@
-"""GamService: the sharded, streaming retrieval service facade.
+"""GamService: DEPRECATED facade shim over the unified retriever API.
 
-Owns the three storage tiers and the request plumbing:
+The sharded streaming service implementation moved to
+``repro.retriever.sharded.ShardedRetriever`` (backend key ``"sharded"``),
+which adds the missing lifecycle pieces — ``snapshot``/``restore`` through
+``repro.checkpoint`` and the spec-driven constructor every other backend
+shares.  ``GamService`` remains for one release as a thin shim: it maps the
+old ``(item_ids, factors, cfg, ServiceConfig)`` signature onto a
+:class:`~repro.retriever.api.RetrieverSpec`, keeps the historical
+``query() -> (ids, scores)`` tuple return, and delegates everything else
+(``upsert``/``delete``/``compact``/``batcher``/``metrics``/``catalog``)
+to the backend.  New code opens the backend directly::
 
-  * ``ShardedGamIndex`` — the compacted main segment, item-axis sharded;
-  * ``DeltaSegment``    — streamed upserts/deletes since the last compact;
-  * a host-side catalog (id -> factor) that is the source of truth
-    ``compact()`` rebuilds from;
-
-plus ``ServiceMetrics`` and an optional ``Microbatcher`` front-end.
-
-Query = map the user batch with phi once, stream base + delta through the
-fused ``gam_retrieve`` kernel (candidate pruning, exact scoring and the
-top-kappa reduction fused on chip — no (Q, N) mask or score tensor ever
-reaches HBM), then a deterministic merge ordered by (score desc, catalog id
-asc) — the same total order a fresh rebuild's ``lax.top_k`` induces, which is
-what makes upsert-then-query == rebuild-then-query testable to the bit.
+    from repro.retriever import RetrieverSpec, open_retriever
+    r = open_retriever(RetrieverSpec(cfg=cfg, backend="sharded",
+                                     n_shards=4, min_overlap=2),
+                       items=factors, ids=item_ids)
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mapping import GamConfig, sparse_map
-from repro.kernels.gam_score import NEG
-from repro.service.delta import DeltaSegment
-from repro.service.metrics import ServiceMetrics
-from repro.service.microbatch import Microbatcher
-from repro.service.sharded_index import ShardedGamIndex
-
 __all__ = ["GamService", "ServiceConfig"]
-
-_PAD_ID = np.int64(2**62)      # sorts after every real id on score ties
 
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
+    """Legacy knob bundle; the same fields now live flat on RetrieverSpec."""
     n_shards: int = 1
     min_overlap: int = 1
     kappa: int = 10
@@ -51,120 +43,39 @@ class ServiceConfig:
 
 
 class GamService:
-    def __init__(self, item_ids: np.ndarray, factors: np.ndarray,
-                 cfg: GamConfig, svc: ServiceConfig = ServiceConfig(), *,
-                 mesh=None, clock=time.monotonic):
-        factors = np.asarray(factors, np.float32)
-        item_ids = np.asarray(item_ids, np.int64)
-        self.cfg = cfg
-        self.svc = svc
-        self.mesh = mesh
-        self.catalog: dict[int, np.ndarray] = {
-            int(i): f for i, f in zip(item_ids, factors)}
-        self.metrics = ServiceMetrics(clock)
-        self.base = ShardedGamIndex.build(
-            factors, cfg, item_ids=item_ids, n_shards=svc.n_shards,
-            min_overlap=svc.min_overlap, bucket=svc.bucket, mesh=mesh)
-        self.delta = DeltaSegment(
-            cfg, svc.min_overlap,
-            svc.bucket if svc.delta_bucket is None else svc.delta_bucket)
-        self.batcher = Microbatcher(
-            self._batch_query_fn, cfg.k, batch_size=svc.batch_size,
-            max_delay_s=svc.max_delay_s, clock=clock, metrics=self.metrics)
+    """DEPRECATED shim — use ``open_retriever(RetrieverSpec(cfg=cfg,
+    backend='sharded', ...), items=factors, ids=item_ids)``."""
 
-    # ------------------------------------------------------------ streaming
+    def __init__(self, item_ids: np.ndarray, factors: np.ndarray,
+                 cfg, svc: ServiceConfig = ServiceConfig(), *,
+                 mesh=None, clock=time.monotonic):
+        warnings.warn(
+            "service.GamService(...) is deprecated; use "
+            "repro.retriever.open_retriever(RetrieverSpec(cfg=cfg, "
+            "backend='sharded', n_shards=..., min_overlap=..., ...), "
+            "items=factors, ids=item_ids) "
+            "(see repro.retriever — removed after one release)",
+            DeprecationWarning, stacklevel=2)
+        from repro.retriever import RetrieverSpec, open_retriever
+        self.svc = svc
+        spec = RetrieverSpec(
+            cfg=cfg, backend="sharded", n_shards=svc.n_shards,
+            min_overlap=svc.min_overlap, kappa=svc.kappa, bucket=svc.bucket,
+            delta_bucket=svc.delta_bucket, batch_size=svc.batch_size,
+            max_delay_s=svc.max_delay_s)
+        self._impl = open_retriever(spec, items=factors, ids=item_ids,
+                                    mesh=mesh, clock=clock)
 
     @property
-    def n_items(self) -> int:
-        return len(self.catalog)
+    def cfg(self):
+        return self._impl.spec.cfg
 
-    def upsert(self, ids, factors) -> None:
-        """Insert or overwrite items; visible to the very next query."""
-        ids = np.asarray(ids, np.int64).ravel()
-        factors = np.asarray(factors, np.float32).reshape(ids.size, self.cfg.k)
-        for i, f in zip(ids, factors):
-            self.catalog[int(i)] = f
-        self.base.kill(ids)                 # superseded main rows, if any
-        self.delta.upsert(ids, factors)
-        self.metrics.record_upsert(ids.size)
-
-    def delete(self, ids) -> None:
-        ids = np.asarray(ids, np.int64).ravel()
-        for i in ids:
-            self.catalog.pop(int(i), None)
-        self.base.kill(ids)
-        self.delta.delete(ids)
-        self.metrics.record_delete(ids.size)
-
-    def compact(self) -> None:
-        """Rebuild the main shards from the merged catalog; empty the delta.
-        Queries before and after return identical results (parity is the
-        delta-segment contract, tested in tests/test_service.py)."""
-        ids = np.fromiter(self.catalog.keys(), np.int64, len(self.catalog))
-        order = np.argsort(ids)
-        ids = ids[order]
-        factors = (np.stack([self.catalog[int(i)] for i in ids])
-                   if ids.size else np.zeros((0, self.cfg.k), np.float32))
-        self.base = ShardedGamIndex.build(
-            factors, self.cfg, item_ids=ids, n_shards=self.svc.n_shards,
-            min_overlap=self.svc.min_overlap, bucket=self.svc.bucket,
-            mesh=self.mesh)
-        self.delta.clear()
-        self.metrics.record_compact()
-
-    # ------------------------------------------------------------ queries
-
-    def query(self, users: np.ndarray, kappa: int | None = None, *,
+    def query(self, users, kappa: int | None = None, *,
               exact: bool = False) -> tuple[np.ndarray, np.ndarray]:
-        """users (Q, k) -> (ids (Q, kappa) int64 with -1 pads,
-        scores (Q, kappa) f32 with -inf pads).
+        res = self._impl.query(users, kappa, exact=exact)
+        return res.ids, res.scores
 
-        ``exact=True`` scores every live item through the same kernel — the
-        brute-force reference the benchmark compares against."""
-        kappa = self.svc.kappa if kappa is None else kappa
-        users = np.asarray(users, np.float32)
-        q = users.shape[0]
-        users_j = jnp.asarray(users)
-        tau, vals = sparse_map(users_j, self.cfg)
-        q_mask = vals != 0.0
-
-        base_res = self.base.query(users_j, tau, q_mask, kappa, exact=exact)
-        b_scores = np.asarray(base_res.scores, np.float32)
-        b_ids = self.base.rows_to_ids(np.asarray(base_res.rows), b_scores)
-        d_scores, d_ids, d_cand = self.delta.query(
-            users_j, tau, q_mask, kappa, exact=exact)
-
-        cat_scores = np.concatenate([b_scores, d_scores], axis=1)
-        cat_ids = np.concatenate([b_ids, d_ids], axis=1)
-        cat_ids = np.where(cat_scores <= NEG / 2, _PAD_ID, cat_ids)
-        # total order: score desc, catalog id asc — rebuild-equivalent
-        order = np.lexsort((cat_ids, -cat_scores), axis=-1)[:, :kappa]
-        top_ids = np.take_along_axis(cat_ids, order, axis=-1)
-        top_scores = np.take_along_axis(cat_scores, order, axis=-1)
-
-        ids_out = np.full((q, kappa), -1, np.int64)
-        sc_out = np.full((q, kappa), -np.inf, np.float32)
-        kk = top_ids.shape[1]
-        real = top_scores > NEG / 2
-        ids_out[:, :kk] = np.where(real, top_ids, -1)
-        sc_out[:, :kk] = np.where(real, top_scores, -np.inf)
-
-        n_live = self.base.n_live + len(self.delta)
-        n_cand = np.asarray(jnp.sum(base_res.shard_candidates, -1)) + d_cand
-        discard = 1.0 - n_cand / max(n_live, 1)
-        self._last_query_stats = {
-            "discard": discard,
-            "shard_candidates": np.asarray(base_res.shard_candidates),
-            "tiles_skipped_frac": base_res.tiles_skipped_frac,
-        }
-        return ids_out, sc_out
-
-    def _batch_query_fn(self, users: np.ndarray, n_real: int):
-        """Fixed-shape step for the microbatcher; folds per-query discard and
-        shard-balance stats into the metrics — real rows only, never the
-        zero-vector padding."""
-        ids, scores = self.query(users)
-        st = self._last_query_stats
-        self.metrics.record_query_stats(st["discard"][:n_real],
-                                        st["shard_candidates"][:n_real])
-        return ids, scores
+    def __getattr__(self, name):
+        if name == "_impl":      # not set yet (e.g. unpickling a bare shell)
+            raise AttributeError(name)
+        return getattr(self._impl, name)

@@ -118,6 +118,15 @@ class ShardedGamIndex:
         self.mesh = mesh
         self.meta = meta                  # fused-kernel block metadata
         self._row_of = {int(i): r for r, i in enumerate(item_ids)}
+        # host mirrors of the per-row pattern bitsets and spill flags, so
+        # kill() can recompute per-block metadata without a device gather.
+        # Derived from meta (not rebuilt from tau) so a restored snapshot —
+        # whose dead rows were already zeroed by earlier kills — stays
+        # consistent with what the device arrays actually contain.
+        self._bits_host = (np.ascontiguousarray(
+            np.asarray(meta.item_bits_t).T) if meta is not None else None)
+        self._spill_host = (np.asarray(meta.spill8[0]).astype(bool)
+                            if meta is not None else None)
 
     # ------------------------------------------------------------- build
 
@@ -196,13 +205,43 @@ class ShardedGamIndex:
 
     def kill(self, ids) -> None:
         """Tombstone catalog ids (deleted or superseded by a delta upsert).
-        O(batch) scatter on device — never re-uploads the full alive array."""
+
+        O(batch + touched blocks) — never re-uploads the full alive array.
+        Besides flipping ``alive``, the dead rows' pattern bits and spill
+        flags are removed from the fused kernel's block metadata (pattern
+        bitsets, block unions, block spill flags): the block-union popcount
+        must upper-bound the overlap of LIVE members only, otherwise long
+        tombstone streams erode the zero-candidate block-skip rate until
+        ``compact()`` (the ROADMAP staleness bug).  Candidate sets are
+        unchanged — dead rows were already excluded in-kernel via ``alive``
+        — so query results are bit-identical before and after the refresh.
+        """
         rows = [r for i in np.asarray(ids).ravel()
                 if (r := self._row_of.get(int(i))) is not None]
         if not rows:
             return
         self._alive_host[rows] = False
         self.alive = self.alive.at[jnp.asarray(rows, jnp.int32)].set(False)
+        if self.meta is None:
+            return
+        rows_a = np.asarray(rows, np.int64)
+        self._bits_host[rows_a] = 0
+        self._spill_host[rows_a] = False
+        bn, words = self.meta.bn, self.meta.words
+        blocks = np.unique(rows_a // bn)
+        union = np.bitwise_or.reduce(
+            self._bits_host.reshape(-1, bn, words)[blocks], axis=1)
+        bspill = self._spill_host.reshape(-1, bn)[blocks].any(axis=1)
+        blocks_j = jnp.asarray(blocks, jnp.int32)
+        self.meta = dataclasses.replace(
+            self.meta,
+            item_bits_t=self.meta.item_bits_t.at[:, rows_a].set(0),
+            spill8=self.meta.spill8.at[0, rows_a].set(0),
+            block_union=self.meta.block_union.at[blocks_j].set(
+                jnp.asarray(union)),
+            block_spill=self.meta.block_spill.at[blocks_j].set(
+                jnp.asarray(bspill)),
+        )
 
     def posting_load(self) -> np.ndarray:
         """(S,) total posting entries per shard — the balance statistic."""

@@ -1,2 +1,4 @@
 from repro.serving.engine import Engine, GenerationResult, ServeConfig
 from repro.serving.gam_head import GamHead
+
+__all__ = ["Engine", "GamHead", "GenerationResult", "ServeConfig"]

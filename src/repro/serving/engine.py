@@ -3,10 +3,11 @@ temperature sampling, and the GAM-accelerated LM head as a first-class
 feature.
 
 With ``use_gam_head=True`` the decode step stops at the final hidden state
-(no vocab matmul); the GAM head maps the hidden state with phi, pulls
-candidate vocab ids from the inverted index over the unembedding rows, and
-scores ONLY those — the paper's inverted-index retrieval applied to the
-biggest inner-product in serving.
+(no vocab matmul); the GAM head — a thin adapter over a unified-API
+``gam-device`` retriever (``repro.retriever``) — maps the hidden state with
+phi, pulls candidate vocab ids from the backend's inverted index over the
+unembedding rows, and scores ONLY those — the paper's inverted-index
+retrieval applied to the biggest inner-product in serving.
 
 Small-scale (CPU-runnable) but production-shaped: fixed decode batch, jit'd
 step reused across tokens, per-step discard statistics reported.

@@ -1,20 +1,24 @@
-"""GAM-accelerated LM head: the paper's technique as a first-class serving
-feature.
+"""GAM-accelerated LM head: a thin adapter over a ``gam-device`` retriever.
 
 At decode time the LM head computes ``hidden . E_v`` for every vocabulary row
 v — exactly the paper's inner-product retrieval problem with N = vocab and
-k = d_model.  GamHead tessellates the (unit-normalised) output-embedding rows
-offline, builds the inverted index once per checkpoint, and per step:
+k = d_model.  ``GamHead.build`` opens a unified-API retriever
+(``repro.retriever``, backend ``gam-device``) over the unit-normalised
+output-embedding rows — index construction, pattern packing and persistence
+all live in the backend — and per step:
 
   1. maps the hidden state with phi (Algorithm 2 + parse-tree permutation),
-  2. pulls candidate vocab ids from the inverted index (>= min_overlap
-     pattern intersections),
+  2. pulls candidate vocab ids via the retriever's jit-traceable
+     ``candidate_masks`` (>= min_overlap pattern intersections),
   3. computes exact logits ONLY on candidates (gam_score kernel) and returns
      the top-kappa — every non-candidate row is discarded unscored, the
      paper's 1/(1-eta) speed-up.
 
-``exact=True`` falls back to the full matmul (used for the accuracy
-comparisons in benchmarks/).
+The mask-based step stays fully jit-traceable (the engine jits straight
+through ``topk``), which is why the adapter scores via ``gam_score`` +
+``lax.top_k`` rather than the host-side ``retriever.query``; both realise
+the identical candidate semantics.  ``exact=True`` falls back to the full
+matmul (used for the accuracy comparisons in benchmarks/).
 """
 from __future__ import annotations
 
@@ -24,20 +28,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inverted_index import DeviceIndex
-from repro.core.mapping import GamConfig, sparse_map
+from repro.core.mapping import GamConfig
 from repro.kernels.ops import gam_score
+from repro.retriever import RetrieverSpec, open_retriever
+from repro.retriever.gam import GamIndexRetriever
 
 __all__ = ["GamHead"]
 
 
 @dataclasses.dataclass
 class GamHead:
-    cfg: GamConfig
-    index: DeviceIndex
-    embed: jax.Array            # (V, d) unembedding rows (row-normalised copy
-    raw_embed: jax.Array        #  used for the index; raw used for logits)
-    min_overlap: int = 2
+    retriever: GamIndexRetriever  # gam-device backend over normalised rows
+    raw_embed: jax.Array          # raw rows used for exact logits
+
+    @property
+    def cfg(self) -> GamConfig:
+        return self.retriever.spec.cfg
+
+    @property
+    def min_overlap(self) -> int:
+        return self.retriever.spec.min_overlap
+
+    @property
+    def index(self):
+        """The backend's device posting table (kept for introspection)."""
+        return self.retriever.device_index
+
+    @property
+    def embed(self) -> jax.Array:
+        """Row-normalised embedding copy the index was built over."""
+        return self.retriever._items_dev
 
     @staticmethod
     def build(embed: jax.Array, *, scheme: str = "parse_tree",
@@ -52,21 +72,16 @@ class GamHead:
         cfg = GamConfig(k=d, scheme=scheme, threshold=threshold / d ** 0.5)
         rows = np.asarray(embed, np.float32)
         norm = rows / (np.linalg.norm(rows, axis=1, keepdims=True) + 1e-9)
-        tau, vals = sparse_map(jnp.asarray(norm), cfg)
-        mask = np.asarray(vals) != 0.0
-        index = DeviceIndex.build(np.asarray(tau), cfg.p, bucket, mask=mask)
-        return GamHead(cfg=cfg, index=index,
-                       embed=jnp.asarray(norm),
-                       raw_embed=jnp.asarray(rows),
-                       min_overlap=min_overlap)
+        spec = RetrieverSpec(cfg=cfg, backend="gam-device",
+                             min_overlap=min_overlap, bucket=bucket)
+        return GamHead(retriever=open_retriever(spec, items=norm),
+                       raw_embed=jnp.asarray(rows))
 
     def candidates(self, hidden: jax.Array) -> jax.Array:
-        """hidden: (B, d) -> (B, V) bool candidate masks."""
+        """hidden: (B, d) -> (B, V) bool candidate masks (jit-traceable)."""
         h = hidden.astype(jnp.float32)
         h = h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-9)
-        tau, vals = sparse_map(h, self.cfg)
-        return self.index.batch_candidate_mask(
-            tau, self.min_overlap, vals != 0.0)
+        return self.retriever.candidate_masks(h)
 
     def topk(self, hidden: jax.Array, kappa: int, *, exact: bool = False):
         """hidden: (B, d) -> (values (B, kappa) f32, ids (B, kappa) i32).
@@ -86,3 +101,7 @@ class GamHead:
     def discard_fraction(self, hidden: jax.Array) -> jax.Array:
         mask = self.candidates(hidden)
         return 1.0 - jnp.mean(mask.astype(jnp.float32), axis=-1)
+
+    def snapshot(self, path: str) -> None:
+        """Persist the vocab index through the retriever (checkpoint/)."""
+        self.retriever.snapshot(path)

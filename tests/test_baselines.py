@@ -3,7 +3,9 @@ import numpy as np
 import pytest
 
 from repro.core.baselines import CroHash, PcaTree, SrpLsh, SuperBitLsh
-from repro.core.retrieval import BruteForceRetriever, recovery_accuracy
+from repro.core.mapping import GamConfig
+from repro.core.retrieval import recovery_accuracy
+from repro.retriever import RetrieverSpec, open_retriever
 
 
 def _factors(n, k, seed):
@@ -14,7 +16,8 @@ def _factors(n, k, seed):
 K, N, Q, KAPPA = 12, 400, 25, 10
 ITEMS = _factors(N, K, 0)
 USERS = _factors(Q, K, 1)
-BRUTE = BruteForceRetriever(ITEMS).query(USERS, KAPPA)
+BRUTE = open_retriever(RetrieverSpec(cfg=GamConfig(k=K), backend="brute"),
+                       items=ITEMS).query(USERS, KAPPA)
 
 
 @pytest.mark.parametrize("cls,kwargs", [

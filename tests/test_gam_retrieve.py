@@ -13,7 +13,8 @@ import pytest
 
 from repro.core.inverted_index import DeviceIndex
 from repro.core.mapping import GamConfig, sparse_map
-from repro.core.retrieval import GamRetriever, masked_topk
+from repro.core.retrieval import masked_topk
+from repro.retriever import RetrieverSpec, open_retriever
 from repro.kernels import ref
 from repro.kernels.gam_retrieve import (build_retrieval_meta, gam_retrieve,
                                         pack_patterns)
@@ -195,11 +196,13 @@ def test_alive_mask_and_exact_path():
 
 
 def test_device_retriever_equals_dense_reference_end_to_end():
-    """GamRetriever(device=True) — now streaming — reproduces the dense
+    """The gam-device backend — now streaming — reproduces the dense
     masked path it replaced, including n_scored."""
     items = _factors(400, 16, 14)
     users = _factors(20, 16, 15)
-    gam = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    gam = open_retriever(
+        RetrieverSpec(cfg=CFG, backend="gam-device", min_overlap=2,
+                      bucket=512), items=items)
     res = gam.query(users, 10)
     q_tau, q_mask = gam.map_queries(users)
     masks = gam.device_index.batch_candidate_mask(
@@ -216,12 +219,11 @@ def test_sharded_merge_equals_dense_reference():
     """The service's fused sharded query == the retained dense-mask
     reference (_shard_masks + _score_and_merge), bit for bit, including
     per-shard candidate counts and tombstoned rows."""
-    from repro.service import GamService, ServiceConfig
-
     items = _factors(350, 16, 16)
     users = _factors(9, 16, 17)
-    svc = GamService(np.arange(350), items, CFG, ServiceConfig(
-        n_shards=3, min_overlap=2, kappa=10, bucket=512))
+    svc = open_retriever(
+        RetrieverSpec(cfg=CFG, backend="sharded", n_shards=3, min_overlap=2,
+                      kappa=10, bucket=512), items=items)
     svc.delete([5, 170, 349])          # exercise the alive mask
     base = svc.base
     tau, vals_ = sparse_map(jnp.asarray(users.astype(np.float32)), CFG)

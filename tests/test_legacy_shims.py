@@ -1,0 +1,85 @@
+"""Legacy entry points still work — as deprecation shims over the unified
+retriever API — and every shim names its replacement in the warning."""
+import numpy as np
+import pytest
+
+from repro.core.mapping import GamConfig
+from repro.retriever import RetrieverSpec, open_retriever
+
+CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
+
+
+def _factors(n, k, seed):
+    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+
+ITEMS = _factors(200, 16, 0)
+USERS = _factors(8, 16, 1)
+
+
+def test_brute_force_retriever_shim_warns_and_matches_backend():
+    from repro.core.retrieval import BruteForceRetriever
+    with pytest.warns(DeprecationWarning, match="backend='brute'"):
+        legacy = BruteForceRetriever(ITEMS)
+    res = legacy.query(USERS, 10)
+    want = open_retriever(RetrieverSpec(cfg=GamConfig(k=16), backend="brute"),
+                          items=ITEMS).query(USERS, 10)
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_array_equal(res.scores, want.scores)
+
+
+@pytest.mark.parametrize("device", [False, True])
+def test_gam_retriever_shim_warns_and_matches_backend(device):
+    from repro.core.retrieval import GamRetriever
+    backend = "gam-device" if device else "gam"
+    with pytest.warns(DeprecationWarning, match=backend):
+        legacy = GamRetriever(ITEMS, CFG, min_overlap=2, device=device,
+                              bucket=512)
+    res = legacy.query(USERS, 10)
+    want = open_retriever(
+        RetrieverSpec(cfg=CFG, backend=backend, min_overlap=2, bucket=512),
+        items=ITEMS).query(USERS, 10)
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_array_equal(res.scores, want.scores)
+    # the old attribute surface still reads through the shim
+    assert legacy.items.shape == ITEMS.shape
+    assert legacy.item_tau.shape == ITEMS.shape
+    assert legacy.min_overlap == 2
+
+
+def test_gam_service_shim_warns_keeps_tuple_query_and_streams():
+    from repro.service import GamService, ServiceConfig
+    with pytest.warns(DeprecationWarning, match="backend='sharded'"):
+        svc = GamService(np.arange(200), ITEMS, CFG,
+                         ServiceConfig(n_shards=2, min_overlap=2, kappa=10))
+    ids, scores = svc.query(USERS, 10)       # historical tuple return
+    want = open_retriever(
+        RetrieverSpec(cfg=CFG, backend="sharded", n_shards=2, min_overlap=2,
+                      kappa=10), items=ITEMS).query(USERS, 10)
+    np.testing.assert_array_equal(ids, want.ids)
+    np.testing.assert_array_equal(scores, want.scores)
+    svc.upsert([500], _factors(1, 16, 2))    # delegated streaming surface
+    svc.delete([0])
+    assert svc.n_items == 200 and len(svc.delta) == 1
+    svc.compact()
+    assert len(svc.delta) == 0
+
+
+def test_shims_survive_pickle_round_trip():
+    """The delegating __getattr__ must not recurse on a bare instance
+    (pickle probes dunders before __init__ ran)."""
+    import pickle
+    with pytest.warns(DeprecationWarning):
+        from repro.core.retrieval import BruteForceRetriever
+        legacy = BruteForceRetriever(ITEMS)
+    clone = pickle.loads(pickle.dumps(legacy))
+    np.testing.assert_array_equal(clone.query(USERS, 5).ids,
+                                  legacy.query(USERS, 5).ids)
+
+
+def test_no_warning_from_spec_driven_path(recwarn):
+    open_retriever(RetrieverSpec(cfg=CFG, backend="gam", min_overlap=2),
+                   items=ITEMS).query(USERS, 5)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]

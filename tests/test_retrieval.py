@@ -5,11 +5,22 @@ import pytest
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex
 from repro.core.mapping import GamConfig, densify, pattern_overlap, sparse_map
-from repro.core.retrieval import (
-    BruteForceRetriever,
-    GamRetriever,
-    recovery_accuracy,
-)
+from repro.core.retrieval import recovery_accuracy
+from repro.retriever import RetrieverSpec, open_retriever
+
+
+def _gam(items, cfg, **kw):
+    device = kw.pop("device", False)
+    return open_retriever(
+        RetrieverSpec(cfg=cfg, backend="gam-device" if device else "gam",
+                      **kw),
+        items=items)
+
+
+def _brute(items):
+    return open_retriever(
+        RetrieverSpec(cfg=GamConfig(k=items.shape[1]), backend="brute"),
+        items=items)
 
 
 def _factors(n, k, seed):
@@ -138,11 +149,10 @@ def test_gam_retriever_end_to_end():
     k, n, q, kappa = 16, 500, 40, 10
     items = _factors(n, k, 6)
     users = _factors(q, k, 7)
-    brute = BruteForceRetriever(items).query(users, kappa)
+    brute = _brute(items).query(users, kappa)
     # the paper feeds factors "after some thresholding" (§6)
-    gam = GamRetriever(
-        items, GamConfig(k=k, scheme="parse_tree", threshold=0.2), min_overlap=2
-    )
+    gam = _gam(items, GamConfig(k=k, scheme="parse_tree", threshold=0.2),
+               min_overlap=2)
     res = gam.query(users, kappa)
     acc = recovery_accuracy(res.ids, brute.ids).mean()
     disc = res.discarded_frac.mean()
@@ -162,9 +172,9 @@ def test_min_overlap_trades_recall_for_discard():
     k, n = 12, 400
     items = _factors(n, k, 8)
     users = _factors(30, k, 9)
-    brute = BruteForceRetriever(items).query(users, 10)
-    r1 = GamRetriever(items, GamConfig(k=k), min_overlap=1).query(users, 10)
-    r3 = GamRetriever(items, GamConfig(k=k), min_overlap=3).query(users, 10)
+    brute = _brute(items).query(users, 10)
+    r1 = _gam(items, GamConfig(k=k), min_overlap=1).query(users, 10)
+    r3 = _gam(items, GamConfig(k=k), min_overlap=3).query(users, 10)
     assert r3.discarded_frac.mean() >= r1.discarded_frac.mean()
     assert (
         recovery_accuracy(r1.ids, brute.ids).mean()
@@ -176,7 +186,7 @@ def test_device_candidate_masks_jit_path():
     k = 8
     items = _factors(120, k, 10)
     users = _factors(5, k, 11)
-    gam = GamRetriever(items, GamConfig(k=k), device=True)
+    gam = _gam(items, GamConfig(k=k), device=True)
     masks = np.asarray(gam.candidate_masks(users))
     assert masks.shape == (5, 120)
     res = gam.query(users, 5)
@@ -194,8 +204,8 @@ def test_whiten_flag_runs_and_scores_stay_exact():
     scale = np.array([4.0, 3.0] + [1.0] * 8, np.float32)
     v = rng.normal(size=(500, 10)).astype(np.float32) * scale
     u = rng.normal(size=(10, 10)).astype(np.float32) * scale
-    gam = GamRetriever(v, GamConfig(k=10, scheme="parse_tree", threshold=0.3),
-                       min_overlap=2, whiten=True)
+    gam = _gam(v, GamConfig(k=10, scheme="parse_tree", threshold=0.3),
+               min_overlap=2, whiten=True)
     res = gam.query(u, 5)
     for qi in range(10):
         for slot in range(5):

@@ -1,0 +1,283 @@
+"""Unified retriever API: the cross-backend contract suite.
+
+One scenario — build / query / upsert / delete / compact / query /
+snapshot / restore — parametrized over all four first-class backends,
+asserting (a) exact-mode top-kappa agreement with the ``brute`` oracle,
+(b) bit-identical query results across a snapshot -> restore round trip
+(including with a non-empty delta segment on ``sharded``), and (c) typed
+``UnsupportedOp`` — never silent divergence — where a backend genuinely
+cannot honour an operation.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import GamConfig
+from repro.retriever import (
+    BACKEND_IDS,
+    RetrieverSpec,
+    UnsupportedOp,
+    available_backends,
+    open_retriever,
+    register_backend,
+)
+
+CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
+BACKENDS = ["brute", "gam", "gam-device", "sharded"]
+
+
+def _factors(n, k, seed):
+    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+
+def _spec(backend, **kw):
+    kw.setdefault("min_overlap", 2)
+    kw.setdefault("bucket", 512)
+    if backend == "sharded":
+        kw.setdefault("n_shards", 2)
+    return RetrieverSpec(cfg=CFG, backend=backend, **kw)
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_registry_lists_all_backends():
+    assert set(BACKENDS) <= set(BACKEND_IDS)
+    assert set(BACKEND_IDS) <= set(available_backends())
+
+
+def test_unknown_backend_is_a_loud_keyerror():
+    with pytest.raises(KeyError, match="unknown retriever backend"):
+        open_retriever(RetrieverSpec(cfg=CFG, backend="faiss"))
+
+
+def test_register_backend_extends_registry():
+    calls = []
+
+    @register_backend("contract-test-null")
+    def _factory(spec, **kw):
+        calls.append(spec)
+        return open_retriever(RetrieverSpec(cfg=spec.cfg, backend="brute"))
+
+    r = open_retriever(RetrieverSpec(cfg=CFG, backend="contract-test-null"))
+    assert calls and r.spec.backend == "brute"
+    assert "contract-test-null" in available_backends()
+
+
+# ------------------------------------------------------------ the scenario
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_lifecycle_scenario_against_brute_oracle(backend, tmp_path):
+    """The same scenario on every backend; after every mutation the
+    exact-mode answers must agree with the brute oracle bit-for-bit."""
+    k = CFG.k
+    items = _factors(300, k, 0)
+    users = _factors(12, k, 1)
+    ids0 = np.arange(300, dtype=np.int64)
+    rng = np.random.default_rng(2)
+
+    r = open_retriever(_spec(backend), items=items, ids=ids0)
+    oracle = open_retriever(_spec("brute"), items=items, ids=ids0)
+
+    def check(tag):
+        got = r.query(users, 10, exact=True)
+        want = oracle.query(users, 10, exact=True)
+        np.testing.assert_array_equal(got.ids, want.ids, err_msg=tag)
+        # ids must agree bit-for-bit; scores only to float summation order
+        # (matvec vs matmul vs on-chip dot_general accumulate differently —
+        # BIT-identity is the snapshot round-trip requirement below)
+        np.testing.assert_allclose(got.scores, want.scores, rtol=1e-5,
+                                   atol=1e-6, err_msg=tag)
+
+    check("after build")
+    assert r.n_items == 300
+
+    new_ids = np.array([500, 501, 502], np.int64)
+    new_fac = _factors(3, k, 3)
+    r.upsert(new_ids, new_fac)
+    oracle.upsert(new_ids, new_fac)
+    check("after insert")
+    assert r.n_items == 303
+
+    over_fac = _factors(2, k, 4)
+    r.upsert([5, 500], over_fac)
+    oracle.upsert([5, 500], over_fac)
+    check("after overwrite")
+    assert r.n_items == 303
+
+    r.delete([0, 1, 2, 501, 999999])
+    oracle.delete([0, 1, 2, 501, 999999])
+    check("after delete (incl. unknown id)")
+    assert r.n_items == 299
+
+    # snapshot mid-stream (sharded: non-empty delta), restore into a fresh
+    # instance, and require BIT-identical pruned-mode answers
+    pruned_before = r.query(users, 10)
+    path = os.fspath(tmp_path / f"{backend}.npz")
+    r.snapshot(path)
+    restored = open_retriever(_spec(backend), snapshot=path)
+    assert restored.n_items == 299
+    pruned_after = restored.query(users, 10)
+    np.testing.assert_array_equal(pruned_after.ids, pruned_before.ids)
+    np.testing.assert_array_equal(pruned_after.scores, pruned_before.scores)
+
+    r.compact()
+    check("after compact")
+    pruned_compacted = r.query(users, 10)
+    np.testing.assert_array_equal(pruned_compacted.ids, pruned_before.ids)
+    np.testing.assert_array_equal(pruned_compacted.scores,
+                                  pruned_before.scores)
+
+
+def test_sharded_snapshot_preserves_live_delta():
+    items = _factors(200, CFG.k, 5)
+    r = open_retriever(_spec("sharded"), items=items)
+    r.upsert(np.arange(300, 310), _factors(10, CFG.k, 6))
+    r.delete([0, 7])
+    assert len(r.delta) == 10
+
+
+@pytest.mark.parametrize("backend", ["gam", "gam-device", "sharded"])
+def test_pruned_mode_matches_gam_candidate_semantics(backend):
+    """All index backends share one candidate definition (pattern overlap +
+    spill), so with a common generous bucket their pruned answers are
+    bit-identical — not just statistically close."""
+    items = _factors(350, CFG.k, 7)
+    users = _factors(10, CFG.k, 8)
+    ref = open_retriever(_spec("gam"), items=items).query(users, 10)
+    got = open_retriever(_spec(backend), items=items).query(users, 10)
+    np.testing.assert_array_equal(got.ids, ref.ids)
+    np.testing.assert_array_equal(got.n_scored, ref.n_scored)
+    np.testing.assert_allclose(got.scores, ref.scores, rtol=1e-5, atol=1e-6)
+    if backend == "sharded":   # same fused kernel as gam-device: bit-equal
+        dev = open_retriever(_spec("gam-device"), items=items).query(users, 10)
+        np.testing.assert_array_equal(got.ids, dev.ids)
+        np.testing.assert_array_equal(got.scores, dev.scores)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_ties_break_identically_across_backends(backend):
+    """Duplicate factor rows force exact score ties (including across the
+    kappa boundary); every backend must realise the same total order
+    (score desc, id asc) as the brute oracle — ties may never make
+    backends diverge."""
+    base = _factors(40, CFG.k, 21)
+    items = np.concatenate([base, base, base[:8]])     # many exact ties
+    users = base[:6]
+    ids = np.arange(items.shape[0], dtype=np.int64)
+    got = open_retriever(_spec(backend), items=items, ids=ids).query(
+        users, 12, exact=True)
+    want = open_retriever(_spec("brute"), items=items, ids=ids).query(
+        users, 12, exact=True)
+    np.testing.assert_array_equal(got.ids, want.ids)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stream_from_empty(backend):
+    """open_retriever(spec) with no items is a valid (empty) retriever:
+    queries answer all-empty and upsert streams the catalog up from zero."""
+    users = _factors(4, CFG.k, 9)
+    r = open_retriever(_spec(backend))
+    res = r.query(users, 5)
+    assert (res.ids == -1).all() and np.isneginf(res.scores).all()
+    r.upsert(np.arange(6), _factors(6, CFG.k, 10))
+    assert r.n_items == 6
+    res = r.query(users, 5, exact=True)
+    assert (res.ids >= 0).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_query_default_kappa_comes_from_spec(backend):
+    items = _factors(64, CFG.k, 11)
+    r = open_retriever(_spec(backend, kappa=7), items=items)
+    assert r.query(_factors(3, CFG.k, 12)).ids.shape == (3, 7)
+
+
+def test_stats_surface():
+    items = _factors(128, CFG.k, 13)
+    for backend in BACKENDS:
+        st = open_retriever(_spec(backend), items=items).stats()
+        assert st["backend"] == backend and st["n_items"] == 128
+
+
+# ------------------------------------------------------------ UnsupportedOp
+
+
+@pytest.mark.parametrize("backend", ["srp-lsh", "superbit-lsh", "cro",
+                                     "pca-tree"])
+def test_baseline_backends_are_query_only(backend):
+    items = _factors(150, CFG.k, 14)
+    users = _factors(5, CFG.k, 15)
+    r = open_retriever(RetrieverSpec(cfg=CFG, backend=backend), items=items)
+    res = r.query(users, 10)
+    assert res.ids.shape == (5, 10)
+    exact = r.query(users, 10, exact=True)
+    assert (exact.ids >= 0).all()
+    for op in (lambda: r.upsert([0], items[:1]),
+               lambda: r.delete([0]),
+               lambda: r.compact(),
+               lambda: r.snapshot("/tmp/never-written.npz"),
+               lambda: r.candidate_masks(users)):
+        with pytest.raises(UnsupportedOp):
+            op()
+
+
+def test_candidate_masks_support_matrix():
+    items = _factors(100, CFG.k, 16)
+    users = _factors(3, CFG.k, 17)
+    dev = open_retriever(_spec("gam-device"), items=items)
+    masks = np.asarray(dev.candidate_masks(users))
+    assert masks.shape == (3, 100) and masks.dtype == bool
+    for backend in ["brute", "gam", "sharded"]:
+        with pytest.raises(UnsupportedOp):
+            open_retriever(_spec(backend), items=items).candidate_masks(users)
+
+
+# ------------------------------------------------------------ snapshot guards
+
+
+def test_restore_rejects_mismatched_spec(tmp_path):
+    items = _factors(80, CFG.k, 18)
+    path = os.fspath(tmp_path / "snap.npz")
+    open_retriever(_spec("gam"), items=items).snapshot(path)
+    with pytest.raises(ValueError, match="snapshot/spec mismatch"):
+        open_retriever(_spec("gam", min_overlap=3), snapshot=path)
+    with pytest.raises(ValueError, match="does not match"):
+        open_retriever(
+            RetrieverSpec(cfg=GamConfig(k=16, threshold=0.4), backend="gam",
+                          min_overlap=2, bucket=512), snapshot=path)
+    with pytest.raises(ValueError, match="mismatch"):
+        open_retriever(_spec("gam-device"), snapshot=path)
+
+
+def test_restore_rejects_mismatched_delta_bucket(tmp_path):
+    """delta_bucket is result-bearing (spill turns delta rows into
+    unconditional candidates) — restoring under a different width must fail
+    loudly, not silently change candidate sets."""
+    items = _factors(60, CFG.k, 30)
+    spec = _spec("sharded", delta_bucket=1)
+    r = open_retriever(spec, items=items)
+    r.upsert(np.arange(100, 110), _factors(10, CFG.k, 31))
+    path = os.fspath(tmp_path / "delta.npz")
+    r.snapshot(path)
+    with pytest.raises(ValueError, match="delta_bucket"):
+        open_retriever(_spec("sharded"), snapshot=path)
+
+
+def test_open_retriever_rejects_items_plus_snapshot(tmp_path):
+    items = _factors(10, CFG.k, 19)
+    path = os.fspath(tmp_path / "s.npz")
+    open_retriever(_spec("brute"), items=items).snapshot(path)
+    with pytest.raises(ValueError, match="either items or snapshot"):
+        open_retriever(_spec("brute"), items=items, snapshot=path)
+
+
+def test_duplicate_ids_rejected_on_build():
+    items = _factors(4, CFG.k, 20)
+    for backend in BACKENDS:
+        with pytest.raises(ValueError, match="unique"):
+            open_retriever(_spec(backend), items=items,
+                           ids=np.array([0, 1, 1, 2]))

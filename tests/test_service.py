@@ -1,5 +1,5 @@
 """Sharded streaming retrieval service: parity, streaming, microbatching
-(tests for src/repro/service/)."""
+(tests for src/repro/service/ and the ``sharded`` retriever backend)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,12 +7,10 @@ import pytest
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex, build_segment
 from repro.core.mapping import GamConfig, sparse_map
-from repro.core.retrieval import BruteForceRetriever, GamRetriever
+from repro.retriever import RetrieverSpec, open_retriever
 from repro.service import (
     DeltaSegment,
-    GamService,
     Microbatcher,
-    ServiceConfig,
     ServiceMetrics,
     ShardedGamIndex,
 )
@@ -26,11 +24,25 @@ def _factors(n, k, seed):
 CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
 
 
-def _fresh_service(svc: GamService) -> GamService:
-    """A service built from scratch over svc's current catalog."""
+def _sharded(items, *, ids=None, n_shards=1, min_overlap=1, kappa=10,
+             bucket=256, batch_size=8, max_delay_s=2e-3, **kw):
+    spec = RetrieverSpec(cfg=CFG, backend="sharded", n_shards=n_shards,
+                         min_overlap=min_overlap, kappa=kappa, bucket=bucket,
+                         batch_size=batch_size, max_delay_s=max_delay_s)
+    return open_retriever(spec, items=items, ids=ids, **kw)
+
+
+def _gam_device(items, *, min_overlap=2, bucket=512):
+    return open_retriever(
+        RetrieverSpec(cfg=CFG, backend="gam-device", min_overlap=min_overlap,
+                      bucket=bucket), items=items)
+
+
+def _fresh_service(svc):
+    """A retriever built from scratch over svc's current catalog."""
     ids = np.sort(np.fromiter(svc.catalog.keys(), np.int64, svc.n_items))
     fac = np.stack([svc.catalog[int(i)] for i in ids])
-    return GamService(ids, fac, svc.cfg, svc.svc)
+    return open_retriever(svc.spec, items=fac, ids=ids)
 
 
 # ------------------------------------------------------- vectorised build
@@ -70,13 +82,14 @@ def test_vectorised_segment_build_matches_sequential(bucket):
 
 
 def test_gam_retriever_device_query_is_batched_and_consistent():
-    """The device=True query path (one masked_topk over the batch) agrees
-    with the per-query CPU path: identical candidate counts, and identical
-    top-kappa up to float summation order in the scores."""
+    """The gam-device query path (one fused kernel pass over the batch)
+    agrees with the per-query CPU backend: identical candidate counts, and
+    identical top-kappa up to float summation order in the scores."""
     items = _factors(400, 16, 1)
     users = _factors(20, 16, 2)
-    cpu = GamRetriever(items, CFG, min_overlap=2)
-    dev = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
+    cpu = open_retriever(
+        RetrieverSpec(cfg=CFG, backend="gam", min_overlap=2), items=items)
+    dev = _gam_device(items)
     r_cpu = cpu.query(users, 10)
     r_dev = dev.query(users, 10)
     np.testing.assert_array_equal(r_dev.n_scored, r_cpu.n_scored)
@@ -100,35 +113,32 @@ def test_sharded_index_bit_identical_to_single_shard(n_shards):
     n=350 is deliberately not divisible by 3 (pad-row handling)."""
     items = _factors(350, 16, 3)
     users = _factors(16, 16, 4)
-    single = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
-    r1 = single.query(users, 10)
-    svc = GamService(np.arange(350), items, CFG, ServiceConfig(
-        n_shards=n_shards, min_overlap=2, kappa=10, bucket=512))
-    ids, scores = svc.query(users, 10)
-    np.testing.assert_array_equal(ids, r1.ids)
+    r1 = _gam_device(items).query(users, 10)
+    svc = _sharded(items, n_shards=n_shards, min_overlap=2, bucket=512)
+    res = svc.query(users, 10)
+    np.testing.assert_array_equal(res.ids, r1.ids)
     finite = np.isfinite(r1.scores)
-    np.testing.assert_array_equal(finite, np.isfinite(scores))
-    np.testing.assert_array_equal(scores[finite], r1.scores[finite])
+    np.testing.assert_array_equal(finite, np.isfinite(res.scores))
+    np.testing.assert_array_equal(res.scores[finite], r1.scores[finite])
 
 
 def test_sharded_exact_path_matches_brute_force():
     items = _factors(200, 16, 5)
     users = _factors(8, 16, 6)
-    svc = GamService(np.arange(200), items, CFG,
-                     ServiceConfig(n_shards=2, kappa=7))
-    ids, _ = svc.query(users, 7, exact=True)
-    brute = BruteForceRetriever(items).query(users, 7)
-    np.testing.assert_array_equal(ids, brute.ids)
+    svc = _sharded(items, n_shards=2, kappa=7)
+    res = svc.query(users, 7, exact=True)
+    brute = open_retriever(RetrieverSpec(cfg=CFG, backend="brute"),
+                           items=items).query(users, 7)
+    np.testing.assert_array_equal(res.ids, brute.ids)
 
 
 def test_sharded_spill_preserves_recall():
     """Tiny buckets force spill in every shard; spill rows stay candidates,
     so exact-match items are never lost."""
     items = _factors(300, 16, 7)
-    svc = GamService(np.arange(300), items, CFG, ServiceConfig(
-        n_shards=2, min_overlap=1, kappa=1, bucket=4))
-    ids, _ = svc.query(items[:32], 1)       # query each item with itself
-    assert (ids[:, 0] == np.arange(32)).all()
+    svc = _sharded(items, n_shards=2, min_overlap=1, kappa=1, bucket=4)
+    res = svc.query(items[:32], 1)          # query each item with itself
+    assert (res.ids[:, 0] == np.arange(32)).all()
 
 
 def test_shard_balance_and_posting_load():
@@ -149,63 +159,93 @@ def test_upsert_then_query_matches_fresh_rebuild():
     both before and after compact()."""
     items = _factors(250, 16, 9)
     users = _factors(12, 16, 10)
-    svc = GamService(np.arange(250), items, CFG, ServiceConfig(
-        n_shards=2, min_overlap=2, kappa=10, bucket=512))
-    rng = np.random.default_rng(11)
+    svc = _sharded(items, n_shards=2, min_overlap=2, kappa=10, bucket=512)
     # inserts, overwrites, deletes — interleaved
     svc.upsert([250, 251, 252], _factors(3, 16, 12))
     svc.delete([17, 99])
     svc.upsert([5, 250], _factors(2, 16, 13))    # overwrite base + delta rows
-    ids_a, sc_a = svc.query(users, 10)
+    res_a = svc.query(users, 10)
 
     fresh = _fresh_service(svc)
-    ids_f, sc_f = fresh.query(users, 10)
-    np.testing.assert_array_equal(ids_a, ids_f)
-    np.testing.assert_array_equal(sc_a, sc_f)
+    res_f = fresh.query(users, 10)
+    np.testing.assert_array_equal(res_a.ids, res_f.ids)
+    np.testing.assert_array_equal(res_a.scores, res_f.scores)
 
     svc.compact()
     assert len(svc.delta) == 0
-    ids_c, sc_c = svc.query(users, 10)
-    np.testing.assert_array_equal(ids_c, ids_f)
-    np.testing.assert_array_equal(sc_c, sc_f)
+    res_c = svc.query(users, 10)
+    np.testing.assert_array_equal(res_c.ids, res_f.ids)
+    np.testing.assert_array_equal(res_c.scores, res_f.scores)
 
 
 def test_delete_then_query_matches_fresh_rebuild():
     items = _factors(150, 16, 14)
     users = _factors(6, 16, 15)
-    svc = GamService(np.arange(150), items, CFG, ServiceConfig(
-        n_shards=3, min_overlap=1, kappa=8, bucket=512))
+    svc = _sharded(items, n_shards=3, min_overlap=1, kappa=8, bucket=512)
     svc.delete(np.arange(0, 150, 7))
-    ids_a, sc_a = svc.query(users, 8)
+    res_a = svc.query(users, 8)
     fresh = _fresh_service(svc)
-    ids_f, sc_f = fresh.query(users, 8)
-    np.testing.assert_array_equal(ids_a, ids_f)
-    np.testing.assert_array_equal(sc_a, sc_f)
+    res_f = fresh.query(users, 8)
+    np.testing.assert_array_equal(res_a.ids, res_f.ids)
+    np.testing.assert_array_equal(res_a.scores, res_f.scores)
     # deleted ids never appear
-    assert not np.isin(ids_a, np.arange(0, 150, 7)).any()
+    assert not np.isin(res_a.ids, np.arange(0, 150, 7)).any()
 
 
 def test_deleted_items_not_returned_even_as_self_query():
     items = _factors(60, 16, 16)
-    svc = GamService(np.arange(60), items, CFG,
-                     ServiceConfig(min_overlap=1, kappa=60))
+    svc = _sharded(items, min_overlap=1, kappa=60)
     svc.delete([3])
-    ids, _ = svc.query(items[3:4], 60)
-    assert 3 not in set(ids.ravel().tolist())
+    res = svc.query(items[3:4], 60)
+    assert 3 not in set(res.ids.ravel().tolist())
+
+
+def test_kill_refreshes_block_metadata_so_skip_rate_survives_tombstones():
+    """Regression (ROADMAP staleness bug): a kill-heavy stream must not
+    erode the fused kernel's zero-candidate block-skip rate until compact().
+    Tombstoning a whole pattern-coherent cluster makes its blocks skippable
+    immediately — and the discard/parity contracts hold throughout."""
+    rng = np.random.default_rng(28)
+    nc, per = 8, 256                     # 8 clusters, 1 block each (bn=256)
+    centers = rng.normal(size=(nc, 16)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    items = (np.repeat(centers, per, axis=0)
+             + 0.03 * rng.normal(size=(nc * per, 16)).astype(np.float32))
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    users = (centers[0] + 0.03 * rng.normal(size=(6, 16))).astype(np.float32)
+    users /= np.linalg.norm(users, axis=1, keepdims=True)
+
+    svc = _sharded(items, n_shards=1, min_overlap=3, bucket=2048)
+    res_before = svc.query(users, 10)
+    skip_before = svc._last_query_stats["tiles_skipped_frac"]
+
+    svc.delete(np.arange(per))           # tombstone the whole home cluster
+    res_after = svc.query(users, 10)
+    skip_after = svc._last_query_stats["tiles_skipped_frac"]
+
+    # the freed block becomes skippable NOW, not only after compact()
+    assert skip_after > skip_before, (skip_before, skip_after)
+    # discarded_frac (vs the live set) must not degrade either
+    assert (res_after.discarded_frac
+            >= res_before.discarded_frac - 1e-9).all()
+    # and the refresh never changes answers: parity with a fresh rebuild
+    fresh = _fresh_service(svc)
+    res_f = fresh.query(users, 10)
+    np.testing.assert_array_equal(res_after.ids, res_f.ids)
+    np.testing.assert_array_equal(res_after.scores, res_f.scores)
 
 
 def test_upsert_duplicate_ids_in_one_batch_last_wins():
     items = _factors(30, 16, 23)
-    svc = GamService(np.arange(30), items, CFG,
-                     ServiceConfig(n_shards=2, min_overlap=1, kappa=31))
+    svc = _sharded(items, n_shards=2, min_overlap=1, kappa=31)
     f = _factors(2, 16, 24)
     svc.upsert([40, 40], f)
     assert len(svc.delta) == 1
     np.testing.assert_array_equal(svc.delta.factors[0], f[1])
-    ids, _ = svc.query(f[1:2], 31)
-    assert (ids == 40).sum() == 1             # never returned twice
-    ids_f, _ = _fresh_service(svc).query(f[1:2], 31)
-    np.testing.assert_array_equal(ids, ids_f)
+    res = svc.query(f[1:2], 31)
+    assert (res.ids == 40).sum() == 1         # never returned twice
+    res_f = _fresh_service(svc).query(f[1:2], 31)
+    np.testing.assert_array_equal(res.ids, res_f.ids)
 
 
 def test_delta_segment_rewrites_in_place():
@@ -250,10 +290,9 @@ def test_microbatcher_size_trigger_ordering_and_padding():
     items = _factors(120, 16, 18)
     users = _factors(7, 16, 19)               # 7 requests, batch of 4
     t, clock = _manual_clock()
-    svc = GamService(np.arange(120), items, CFG, ServiceConfig(
-        n_shards=2, min_overlap=1, kappa=5, batch_size=4, max_delay_s=0.01),
-        clock=clock)
-    ref_ids, ref_sc = svc.query(users, 5)
+    svc = _sharded(items, n_shards=2, min_overlap=1, kappa=5, batch_size=4,
+                   max_delay_s=0.01, clock=clock)
+    ref = svc.query(users, 5)
 
     reqs = []
     for i in range(7):
@@ -267,8 +306,8 @@ def test_microbatcher_size_trigger_ordering_and_padding():
     for i, rid in enumerate(reqs):
         res = svc.batcher.result(rid)
         assert res is not None
-        np.testing.assert_array_equal(res.ids, ref_ids[i])
-        np.testing.assert_array_equal(res.scores, ref_sc[i])
+        np.testing.assert_array_equal(res.ids, ref.ids[i])
+        np.testing.assert_array_equal(res.scores, ref.scores[i])
         assert res.latency_s >= 0.0
     assert svc.batcher.result(reqs[0]) is None    # popped exactly once
     # pad rows never pollute per-request stats: 7 requests -> 7 samples
@@ -308,16 +347,14 @@ def test_delta_items_never_silently_dropped_property():
     from hypothesis import strategies as st
 
     items = _factors(40, 16, 20)
-    base = GamService(np.arange(40), items, CFG, ServiceConfig(
-        n_shards=2, min_overlap=1, kappa=48, bucket=512))
 
     @settings(max_examples=15, deadline=None)
     @given(st.lists(st.tuples(st.integers(0, 47), st.integers(0, 2**31 - 1),
                               st.booleans()),
                     min_size=1, max_size=6))
     def check(ops):
-        svc = GamService(np.arange(40), items, CFG, ServiceConfig(
-            n_shards=2, min_overlap=1, kappa=48, bucket=512))
+        svc = _sharded(items, n_shards=2, min_overlap=1, kappa=48,
+                       bucket=512)
         for iid, seed, is_delete in ops:
             if is_delete:
                 svc.delete([iid])
@@ -325,11 +362,11 @@ def test_delta_items_never_silently_dropped_property():
                 svc.upsert([iid], _factors(1, 16, seed))
         live = sorted(svc.catalog)
         fac = np.stack([svc.catalog[i] for i in live])
-        ids, _ = svc.query(fac, 48)
+        res = svc.query(fac, 48)
         for row, iid in enumerate(live):
-            assert iid in set(ids[row].tolist()), (iid, ids[row])
+            assert iid in set(res.ids[row].tolist()), (iid, res.ids[row])
         dead = set(range(48)) - set(live)
-        assert not (np.isin(ids, sorted(dead))).any()
+        assert not (np.isin(res.ids, sorted(dead))).any()
 
     check()
 
@@ -350,9 +387,7 @@ def test_index_mesh_places_shards_on_devices():
     assert not idx.tables.sharding.is_fully_replicated
     # and the sharded query still matches the single-shard retriever
     users = _factors(4, 16, 22)
-    svc = GamService(np.arange(128), items, CFG,
-                     ServiceConfig(n_shards=2, min_overlap=2, bucket=512),
-                     mesh=mesh)
-    single = GamRetriever(items, CFG, min_overlap=2, device=True, bucket=512)
-    ids, _ = svc.query(users, 10)
-    np.testing.assert_array_equal(ids, single.query(users, 10).ids)
+    svc = _sharded(items, n_shards=2, min_overlap=2, bucket=512, mesh=mesh)
+    single = _gam_device(items)
+    res = svc.query(users, 10)
+    np.testing.assert_array_equal(res.ids, single.query(users, 10).ids)

@@ -5,7 +5,8 @@ import numpy as np
 
 from repro.configs.gam_mf import GAM, MF, MIN_OVERLAP
 from repro.configs.registry import get_reduced_config
-from repro.core import BruteForceRetriever, GamConfig, GamRetriever, recovery_accuracy
+from repro.core import GamConfig, recovery_accuracy
+from repro.retriever import RetrieverSpec, open_retriever
 from repro.data import TokenPipeline, movielens_like_ratings, synthetic_ratings
 from repro.factorization import train_mf
 from repro.launch.steps import make_train_step
@@ -17,10 +18,14 @@ def test_paper_pipeline_synthetic_end_to_end():
     """§6.1: random factors -> GAM map -> index -> retrieval achieves a
     multi-fold speed-up at high recovery accuracy."""
     u, v, _ = synthetic_ratings(60, 5000, 10, seed=1)
-    gam = GamRetriever(v, GamConfig(k=10, scheme="parse_tree", threshold=0.45),
-                       min_overlap=3)
+    gam = open_retriever(
+        RetrieverSpec(cfg=GamConfig(k=10, scheme="parse_tree",
+                                    threshold=0.45),
+                      backend="gam", min_overlap=3), items=v)
     res = gam.query(u, 10)
-    brute = BruteForceRetriever(v).query(u, 10)
+    brute = open_retriever(
+        RetrieverSpec(cfg=GamConfig(k=10), backend="brute"),
+        items=v).query(u, 10)
     acc = recovery_accuracy(res.ids, brute.ids).mean()
     disc = res.discarded_frac.mean()
     assert disc > 0.65, disc          # paper: ~80% on synthetic
@@ -33,9 +38,13 @@ def test_paper_pipeline_movielens_end_to_end():
     rows, cols, vals = movielens_like_ratings(seed=3)
     u, v, hist = train_mf(rows, cols, vals, 943, 1682, MF)
     assert hist[-1] < 0.7 * hist[0]
-    gam = GamRetriever(v, GAM, min_overlap=MIN_OVERLAP)
+    gam = open_retriever(
+        RetrieverSpec(cfg=GAM, backend="gam", min_overlap=MIN_OVERLAP),
+        items=v)
     res = gam.query(u[:100], 10)
-    brute = BruteForceRetriever(v).query(u[:100], 10)
+    brute = open_retriever(
+        RetrieverSpec(cfg=GamConfig(k=GAM.k), backend="brute"),
+        items=v).query(u[:100], 10)
     acc = recovery_accuracy(res.ids, brute.ids).mean()
     assert res.discarded_frac.mean() > 0.35
     assert acc > 0.9
