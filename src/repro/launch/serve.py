@@ -26,7 +26,13 @@ def serve_retrieval(args):
     """Open a unified-API retriever (default backend: the sharded streaming
     service), stream upserts + microbatched queries, print the
     ServiceMetrics snapshot (QPS, p50/p99 latency, occupancy, discard,
-    shard balance), and optionally snapshot/restore the catalog."""
+    shard balance), and optionally snapshot/restore the catalog.
+
+    ``--auto-compact N`` starts a BACKGROUND compaction whenever the delta
+    segment holds >= N rows (subsequent queries each advance one bounded
+    slice until the atomic swap); ``--rebalance S`` triggers a skew-aware
+    repartition when the metrics' per-shard candidate skew (max/mean)
+    exceeds S."""
     from repro.core.mapping import GamConfig
     from repro.retriever import RetrieverSpec, open_retriever
 
@@ -58,8 +64,16 @@ def serve_retrieval(args):
             svc.upsert([new_id],
                        rng.normal(size=(1, args.dim)).astype(np.float32))
         svc.batcher.poll()
+        # maintenance triggers: mechanism lives on the retriever, policy here
+        if args.auto_compact and len(svc.delta) >= args.auto_compact:
+            svc.compact(async_=True)
+        if args.rebalance:
+            svc.maybe_rebalance(args.rebalance)
     while svc.batcher.pending:
         svc.batcher.flush()
+    # drain any still-running background build so the demo exits compacted
+    while svc.maintenance_stats()["compaction"]["active"]:
+        svc.compaction_step()
     served = sum(svc.batcher.result(p) is not None for p in pending)
 
     snap = svc.metrics.snapshot()
@@ -70,8 +84,17 @@ def serve_retrieval(args):
     print(f"latency p50={snap['latency_p50_ms']:.2f}ms "
           f"p99={snap['latency_p99_ms']:.2f}ms  "
           f"occupancy={snap['occupancy_mean']:.2f}")
+    balance = snap["shard_balance"]
     print(f"discard={snap['discard_mean']:.1%}  "
-          f"shard balance (max/mean candidates)={snap['shard_balance']:.2f}")
+          f"shard balance (max/mean candidates)="
+          f"{'n/a (window reset)' if balance is None else f'{balance:.2f}'}")
+    if args.auto_compact or args.rebalance:
+        ms = svc.maintenance_stats()
+        print(f"maintenance: generation={ms['generation']}  "
+              f"async compactions={snap['n_async_compactions']} "
+              f"({snap['n_compact_slices']} slices)  "
+              f"repartitions={snap['n_repartitions']}  "
+              f"shard bns={ms['repartition']['partition']['bns']}")
 
     if args.snapshot:
         svc.snapshot(args.snapshot)
@@ -109,6 +132,12 @@ def main():
     ap.add_argument("--service-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--gam-item-threshold", type=float, default=0.2)
+    ap.add_argument("--auto-compact", type=int, default=0, metavar="N",
+                    help="start a background compaction whenever the delta "
+                         "segment reaches N rows (0 = never)")
+    ap.add_argument("--rebalance", type=float, default=0.0, metavar="SKEW",
+                    help="repartition when per-shard candidate skew "
+                         "(max/mean) exceeds SKEW (0 = never)")
     ap.add_argument("--snapshot", metavar="PATH",
                     help="after serving, snapshot the catalog there and "
                          "verify a restore answers bit-identically")

@@ -87,9 +87,19 @@ class Retriever(abc.ABC):
     def delete(self, ids) -> None:
         raise UnsupportedOp(self.spec.backend, "delete")
 
-    def compact(self) -> None:
+    def compact(self, async_: bool = False) -> None:
         """Fold streamed mutations into the main structure (no-op when the
-        backend has no delta tier)."""
+        backend has no delta tier).
+
+        ``async_=True`` requests *background* compaction: the backend starts
+        an incremental rebuild whose bounded slices interleave with
+        subsequent queries, and atomically swaps the replacement in when it
+        completes — queries keep answering exactly from the pre-swap state
+        (old segment ∪ delta) at every intermediate step.  Backends without
+        an incremental path simply complete synchronously (their compact is
+        already cheap); only the ``sharded`` backend holds real in-flight
+        state, observable through :meth:`maintenance_stats`.
+        """
         raise UnsupportedOp(self.spec.backend, "compact")
 
     # ------------------------------------------------------------ queries
@@ -115,6 +125,16 @@ class Retriever(abc.ABC):
 
     def stats(self) -> dict:
         return {"backend": self.spec.backend, "n_items": self.n_items}
+
+    def maintenance_stats(self) -> dict:
+        """Maintenance-subsystem observability: the serving generation
+        (number of completed segment swaps) and the in-flight compaction /
+        repartition state.  Backends without background maintenance report
+        the quiescent default — generation 0, nothing active."""
+        return {"backend": self.spec.backend,
+                "generation": getattr(self, "generation", 0),
+                "compaction": {"active": False},
+                "repartition": {"n_repartitions": 0}}
 
     def snapshot(self, path: str) -> None:
         """Persist the full queryable state through ``repro.checkpoint`` so a

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.retriever.api import Retriever, RetrieverSpec
 from repro.retriever.snapshot import read_snapshot, write_snapshot
-from repro.retriever.types import RetrievalResult
+from repro.retriever.types import RetrievalResult, dedupe_last_write
 
 __all__ = ["BruteRetriever", "exact_topk"]
 
@@ -63,10 +63,7 @@ class BruteRetriever(Retriever):
         ids = np.asarray(ids, np.int64).ravel()
         factors = np.asarray(factors, np.float32).reshape(
             ids.size, self.spec.cfg.k)
-        if len(np.unique(ids)) != ids.size:   # duplicates: last write wins
-            _, first_rev = np.unique(ids[::-1], return_index=True)
-            sel = np.sort(ids.size - 1 - first_rev)
-            ids, factors = ids[sel], factors[sel]
+        ids, factors = dedupe_last_write(ids, factors)
         keep = ~np.isin(self.ids, ids)
         self.build(np.concatenate([self.items[keep], factors]),
                    np.concatenate([self.ids[keep], ids]))
@@ -75,7 +72,7 @@ class BruteRetriever(Retriever):
         keep = ~np.isin(self.ids, np.asarray(ids, np.int64).ravel())
         self.build(self.items[keep], self.ids[keep])
 
-    def compact(self) -> None:
+    def compact(self, async_: bool = False) -> None:
         pass                       # always compact: one flat factor matrix
 
     # ------------------------------------------------------------ queries

@@ -30,7 +30,8 @@ from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
 from repro.retriever.api import Retriever, RetrieverSpec
 from repro.retriever.snapshot import read_snapshot, write_snapshot
-from repro.retriever.types import RetrievalResult, UnsupportedOp
+from repro.retriever.types import (RetrievalResult, UnsupportedOp,
+                                   dedupe_last_write)
 
 __all__ = ["GamIndexRetriever"]
 
@@ -108,10 +109,7 @@ class GamIndexRetriever(Retriever):
         ids = np.asarray(ids, np.int64).ravel()
         factors = np.asarray(factors, np.float32).reshape(
             ids.size, self.spec.cfg.k)
-        if len(np.unique(ids)) != ids.size:   # duplicates: last write wins
-            _, first_rev = np.unique(ids[::-1], return_index=True)
-            sel = np.sort(ids.size - 1 - first_rev)
-            ids, factors = ids[sel], factors[sel]
+        ids, factors = dedupe_last_write(ids, factors)
         keep = ~np.isin(self.ids, ids)
         self.build(np.concatenate([self.items[keep], factors]),
                    np.concatenate([self.ids[keep], ids]))
@@ -120,7 +118,7 @@ class GamIndexRetriever(Retriever):
         keep = ~np.isin(self.ids, np.asarray(ids, np.int64).ravel())
         self.build(self.items[keep], self.ids[keep])
 
-    def compact(self) -> None:
+    def compact(self, async_: bool = False) -> None:
         pass                  # rebuilt-on-mutation: never holds a delta
 
     # ------------------------------------------------------------ queries

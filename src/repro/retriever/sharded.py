@@ -3,12 +3,18 @@
 Owns the three storage tiers and the request plumbing that used to live in
 ``service.GamService`` (now a deprecation shim over this class):
 
-  * ``ShardedGamIndex`` — the compacted main segment, item-axis sharded;
+  * ``ShardedGamIndex`` — the compacted main segment, item-axis sharded
+    according to a (possibly skew-aware) ``Partition``;
   * ``DeltaSegment``    — streamed upserts/deletes since the last compact;
   * a host-side catalog (id -> factor) that is the source of truth
     ``compact()`` rebuilds from;
 
-plus ``ServiceMetrics`` and a ``Microbatcher`` front-end (``.batcher``).
+plus ``ServiceMetrics``, a ``Microbatcher`` front-end (``.batcher``) and the
+maintenance subsystem: a background ``CompactionPlanner`` (started by
+``compact(async_=True)``, advanced one bounded slice per query or via
+``compaction_step``) and a ``Repartitioner`` (``repartition()`` /
+``maybe_rebalance()``) that rebalances skewed catalogs by re-cutting the
+shard boundaries and per-shard kernel block widths.
 
 Query = map the user batch with phi once, stream base + delta through the
 fused ``gam_retrieve`` kernel, then a deterministic merge ordered by
@@ -16,11 +22,21 @@ fused ``gam_retrieve`` kernel, then a deterministic merge ordered by
 ``lax.top_k`` induces, which is what makes upsert-then-query ==
 rebuild-then-query (and snapshot -> restore -> query) testable to the bit.
 
+Background compaction keeps that exactness at every intermediate step:
+while the planner builds the replacement segment in slices, queries keep
+answering from (old segment ∪ delta); mutations feed the live delta AND the
+planner's journal; the swap is one reference assignment whose replayed
+journal lands the service in exactly the state a fresh build over the
+current catalog would produce.  ``generation`` counts completed swaps.
+
 ``snapshot`` persists the whole deployment object through
-``repro.checkpoint``: per-shard posting tables, the flat factor matrix,
-alive tombstones, the fused kernel's bit-packed patterns and block-union
-metadata, and the live delta catalog — a restored service answers queries
-bit-identically, including between compactions.
+``repro.checkpoint``: per-shard posting tables, the flat factor matrix, the
+partition, alive tombstones, the fused kernel's per-group bit-packed
+patterns and block-union metadata, the live delta catalog and the serving
+generation — a restored service answers queries bit-identically, including
+between compactions.  A snapshot taken MID-compaction persists only the
+stable serving state (the planner is shadow state), so ``restore`` always
+lands in a consistent generation with no half-swapped segment observable.
 """
 from __future__ import annotations
 
@@ -35,9 +51,11 @@ from repro.kernels.gam_score import NEG
 from repro.retriever.api import Retriever, RetrieverSpec
 from repro.retriever.snapshot import read_snapshot, write_snapshot
 from repro.retriever.types import RetrievalResult, UnsupportedOp
+from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher
+from repro.service.repartition import Partition, Repartitioner
 from repro.service.sharded_index import ShardedGamIndex
 
 __all__ = ["ShardedRetriever"]
@@ -53,6 +71,11 @@ class ShardedRetriever(Retriever):
         self.clock = clock
         self.catalog: dict[int, np.ndarray] = {}
         self.metrics = ServiceMetrics(clock)
+        self.generation = 0            # completed segment swaps (sync+async)
+        self._planner: CompactionPlanner | None = None
+        self._rebalanced = False       # a repartition plan governs the layout
+        self.repartitioner = Repartitioner(
+            target_blocks=int(spec.opt("rebalance_target_blocks", 8)))
         self.base = self._build_base(
             np.zeros((0, spec.cfg.k), np.float32), np.zeros(0, np.int64))
         self.delta = DeltaSegment(
@@ -63,12 +86,22 @@ class ShardedRetriever(Retriever):
             max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics)
         self._last_query_stats: dict = {}
 
-    def _build_base(self, factors: np.ndarray,
-                    ids: np.ndarray) -> ShardedGamIndex:
+    def _build_base(self, factors: np.ndarray, ids: np.ndarray,
+                    partition: Partition | None = None,
+                    premapped=None) -> ShardedGamIndex:
         return ShardedGamIndex.build(
             factors, self.spec.cfg, item_ids=ids,
             n_shards=self.spec.n_shards, min_overlap=self.spec.min_overlap,
-            bucket=self.spec.bucket, mesh=self.mesh)
+            bucket=self.spec.bucket, mesh=self.mesh, partition=partition,
+            premapped=premapped)
+
+    def _catalog_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """The merged (base ∪ delta) truth as id-sorted arrays."""
+        ids = np.fromiter(self.catalog.keys(), np.int64, len(self.catalog))
+        ids = np.sort(ids)
+        factors = (np.stack([self.catalog[int(i)] for i in ids])
+                   if ids.size else np.zeros((0, self.spec.cfg.k), np.float32))
+        return ids, factors
 
     # ------------------------------------------------------------ lifecycle
 
@@ -78,6 +111,8 @@ class ShardedRetriever(Retriever):
                else np.asarray(ids, np.int64).ravel())
         if len(np.unique(ids)) != ids.size:
             raise ValueError("item ids must be unique")
+        self._planner = None           # a full build supersedes any in-flight
+        self._rebalanced = False
         self.catalog = {int(i): f for i, f in zip(ids, items)}
         self.base = self._build_base(items, ids)
         self.delta.clear()
@@ -92,6 +127,8 @@ class ShardedRetriever(Retriever):
             self.catalog[int(i)] = f
         self.base.kill(ids)                 # superseded main rows, if any
         self.delta.upsert(ids, factors)
+        if self._planner is not None:       # replayed after the swap
+            self._planner.record_upsert(ids, factors)
         self.metrics.record_upsert(ids.size)
 
     def delete(self, ids) -> None:
@@ -100,26 +137,224 @@ class ShardedRetriever(Retriever):
             self.catalog.pop(int(i), None)
         self.base.kill(ids)
         self.delta.delete(ids)
+        if self._planner is not None:
+            self._planner.record_delete(ids)
         self.metrics.record_delete(ids.size)
 
-    def compact(self) -> None:
-        """Rebuild the main shards from the merged catalog; empty the delta.
-        Queries before and after return identical results (the delta-segment
-        contract, pinned by the retriever contract suite)."""
-        ids = np.fromiter(self.catalog.keys(), np.int64, len(self.catalog))
-        order = np.argsort(ids)
-        ids = ids[order]
-        factors = (np.stack([self.catalog[int(i)] for i in ids])
-                   if ids.size else np.zeros((0, self.spec.cfg.k), np.float32))
-        self.base = self._build_base(factors, ids)
+    # ------------------------------------------------------- maintenance
+
+    def compact(self, async_: bool = False, *,
+                partition: Partition | None = None) -> None:
+        """Fold the delta into the main shards.
+
+        Synchronous mode rebuilds in one stop-the-world step (and supersedes
+        any in-flight background build); ``async_=True`` starts the
+        incremental :class:`CompactionPlanner` instead — subsequent queries
+        each advance one bounded slice (or drive it explicitly with
+        :meth:`compaction_step`) until the atomic swap.  Queries before,
+        during and after return identical results (the delta-segment
+        contract, pinned by the lifecycle stress suite).  ``partition``
+        overrides the target layout (the repartitioner passes its plan
+        through here); with no override, a catalog that was rebalanced keeps
+        its skew-aware layout — ordinary compactions re-plan from current
+        weights instead of silently reverting to the uniform cut.
+        """
+        if async_:
+            if partition is not None and self._planner is not None:
+                self.abort_compaction()   # an explicit layout supersedes the
+                                          # in-flight build, never silently lost
+            self.start_compaction(partition=partition)
+            return
+        if self._planner is not None:
+            self.abort_compaction()
+        ids, factors = self._catalog_arrays()
+        premapped = None
+        if partition is None:
+            partition, premapped = self._maintain_partition(ids, factors)
+        self.base = self._build_base(factors, ids, partition=partition,
+                                     premapped=premapped)
         self.delta.clear()
+        self.generation += 1
         self.metrics.record_compact()
+
+    def _maintain_partition(self, ids, factors):
+        """Target layout for a compaction with no explicit override: uniform
+        normally, but a re-planned balanced cut once the catalog has been
+        repartitioned (the tuned layout must survive ordinary compactions).
+        Returns ``(partition | None, premapped | None)``."""
+        if not self._rebalanced or ids.size == 0:
+            return None, None
+        weights, tau, mask = self._item_weights(ids, factors)
+        return (self.repartitioner.plan(weights, self.spec.n_shards),
+                (tau, mask))
+
+    def start_compaction(self, partition: Partition | None = None,
+                         slice_rows: int | None = None,
+                         premapped=None) -> CompactionPlanner:
+        """Freeze the catalog and start the background build (idempotent —
+        at most one build in flight; a second call returns the current
+        planner).  ``premapped``: optional (tau, mask) of the frozen
+        catalog, when the caller already paid the phi-mapping (the
+        repartitioner's weights need it anyway) — the planner then skips
+        its map phase."""
+        if self._planner is not None:
+            return self._planner
+        ids, factors = self._catalog_arrays()
+        if partition is None:
+            partition, premapped = self._maintain_partition(ids, factors)
+        self._planner = CompactionPlanner(
+            self.spec.cfg, ids, factors, partition=partition,
+            n_shards=self.spec.n_shards, bucket=self.spec.bucket,
+            min_overlap=self.spec.min_overlap, mesh=self.mesh,
+            slice_rows=(int(self.spec.opt("compact_slice_rows", 512))
+                        if slice_rows is None else slice_rows),
+            generation=self.generation, premapped=premapped)
+        return self._planner
+
+    def compaction_step(self, max_slices: int = 1) -> bool:
+        """Advance the in-flight background compaction by up to
+        ``max_slices`` bounded units; returns True iff the replacement
+        segment swapped in (the generation advanced)."""
+        if self._planner is None:
+            return False
+        for _ in range(max_slices):
+            self._planner.step()
+            self.metrics.record_compact_slice()
+            if self._planner.ready:
+                self._swap_compacted()
+                return True
+        return False
+
+    def abort_compaction(self) -> bool:
+        """Drop the in-flight build (fault injection / superseded by a sync
+        compact).  Pure shadow state: no query result ever changes."""
+        if self._planner is None:
+            return False
+        self._planner = None
+        self.metrics.record_compact_abort()
+        return True
+
+    def _swap_compacted(self) -> None:
+        """The atomic flip: one reference assignment, then replay the
+        journal of mutations that raced the build."""
+        planner, self._planner = self._planner, None
+        self.base = planner.result()
+        journal = planner.journal
+        if journal:
+            # every journaled id supersedes (or deletes) its frozen row
+            self.base.kill(np.fromiter(journal.keys(), np.int64,
+                                       len(journal)))
+        ups = [(i, f) for i, f in journal.items() if f is not None]
+        if ups:
+            self.delta.replace(np.array([i for i, _ in ups], np.int64),
+                               np.stack([f for _, f in ups]))
+        else:
+            self.delta.clear()
+        self.generation = planner.target_generation
+        self.metrics.record_compact(async_=True)
+
+    def repartition(self, *, async_: bool = True,
+                    n_shards: int | None = None) -> Partition:
+        """Plan a skew-aware partition for the current catalog and compact
+        into it (background by default).
+
+        Per-item weights = pattern size (the posting load an item
+        contributes), blended with the per-block candidate traffic
+        ``ServiceMetrics`` accumulated — hot regions weigh more, so the
+        balanced cut gives them shorter shards with narrower kernel blocks
+        (better skip granularity).  Returns the plan.
+        """
+        self.abort_compaction()       # a new plan supersedes an in-flight build
+        skew = self.metrics.shard_skew()
+        if skew is None:
+            skew = Repartitioner.skew(self.base.posting_load())
+        ids, factors = self._catalog_arrays()
+        weights, tau, mask = self._item_weights(ids, factors)
+        part = self.repartitioner.plan(
+            weights, self.spec.n_shards if n_shards is None else n_shards)
+        self.metrics.record_repartition(skew_before=skew)
+        self._rebalanced = True       # sticky: later plain compactions re-plan
+        # the weights already paid the phi-mapping of this exact frozen
+        # catalog — hand it down so it is never derived twice
+        if async_:
+            self.start_compaction(partition=part, premapped=(tau, mask))
+        else:
+            self.base = self._build_base(factors, ids, partition=part,
+                                         premapped=(tau, mask))
+            self.delta.clear()
+            self.generation += 1
+            self.metrics.record_compact()
+        return part
+
+    def maybe_rebalance(self, threshold: float = 1.5, *,
+                        async_: bool = True) -> bool:
+        """Repartition iff the metrics' per-shard candidate skew (max/mean)
+        exceeds ``threshold`` and no build is already in flight — the
+        auto-rebalance trigger ``launch/serve.py --rebalance`` polls."""
+        if self._planner is not None:
+            return False
+        skew = self.metrics.shard_skew()
+        if skew is None or skew <= threshold:
+            return False
+        self.repartition(async_=async_)
+        return True
+
+    def _item_weights(self, ids: np.ndarray, factors: np.ndarray):
+        """Per-item load estimate in id-sorted order: 1 + pattern nnz,
+        times the observed per-block candidate traffic of the item's
+        current block (when the metrics have seen any).  Returns
+        ``(weights, tau, mask)`` so the caller can reuse the mapping."""
+        k = self.spec.cfg.k
+        if ids.size == 0:
+            return (np.zeros(0, np.float64), np.zeros((0, k), np.int32),
+                    np.zeros((0, k), bool))
+        tau_j, vals = sparse_map(jnp.asarray(factors), self.spec.cfg)
+        tau, mask = np.asarray(tau_j), np.asarray(vals) != 0.0
+        w = mask.sum(axis=1).astype(np.float64) + 1.0
+        bc = self.metrics.block_candidates
+        if bc is not None and bc.sum() > 0 and \
+                bc.size == sum(m.n_blocks for m in self.base.metas):
+            rows = np.array([self.base._row_of.get(int(i), -1) for i in ids],
+                            np.int64)
+            m = rows >= 0
+            if m.any():
+                blocks = self.base.block_index(rows[m])
+                w[m] *= 1.0 + bc[blocks] / max(float(bc.mean()), 1e-9)
+        return w, tau, mask
+
+    def maintenance_stats(self) -> dict:
+        part = self.base.partition
+        comp: dict = {"active": self._planner is not None}
+        if self._planner is not None:
+            comp.update(self._planner.stats())
+        return {
+            "backend": self.spec.backend,
+            "generation": self.generation,
+            "compaction": comp,
+            "repartition": {
+                "rebalanced": self._rebalanced,
+                "n_repartitions": self.metrics.n_repartitions,
+                "shard_skew": self.metrics.shard_skew(),
+                "block_skew": self.metrics.block_skew(),
+                "last_repartition_skew": self.metrics.last_repartition_skew,
+                "partition": {"lengths": list(part.lengths),
+                              "bns": list(part.bns),
+                              "caps": list(part.caps)},
+            },
+        }
 
     # ------------------------------------------------------------ queries
 
     def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
         """``exact=True`` scores every live item through the same kernel —
-        the brute-force reference the benchmark compares against."""
+        the brute-force reference the benchmark compares against.
+
+        While a background compaction is in flight, each query first
+        advances it by one bounded slice (the "interleaved with queries"
+        schedule); the answer itself always comes from the stable
+        (base ∪ delta) view, so results are unaffected at every step."""
+        if self._planner is not None:
+            self.compaction_step()
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         q = users.shape[0]
@@ -149,11 +384,12 @@ class ShardedRetriever(Retriever):
         sc_out[:, :kk] = np.where(real, top_scores, -np.inf)
 
         n_live = self.base.n_live + len(self.delta)
-        n_cand = np.asarray(jnp.sum(base_res.shard_candidates, -1)) + d_cand
+        n_cand = np.asarray(base_res.shard_candidates).sum(axis=-1) + d_cand
         discard = 1.0 - n_cand / max(n_live, 1)
         self._last_query_stats = {
             "discard": discard,
             "shard_candidates": np.asarray(base_res.shard_candidates),
+            "block_candidates": base_res.block_candidates,
             "tiles_skipped_frac": base_res.tiles_skipped_frac,
         }
         return RetrievalResult(
@@ -163,13 +399,15 @@ class ShardedRetriever(Retriever):
         )
 
     def _batch_query_fn(self, users: np.ndarray, n_real: int):
-        """Fixed-shape step for the microbatcher; folds per-query discard and
-        shard-balance stats into the metrics — real rows only, never the
-        zero-vector padding."""
+        """Fixed-shape step for the microbatcher; folds per-query discard,
+        shard-balance and block-load stats into the metrics — real rows
+        only, never the zero-vector padding."""
         res = self.query(users)
         st = self._last_query_stats
-        self.metrics.record_query_stats(st["discard"][:n_real],
-                                        st["shard_candidates"][:n_real])
+        bc = st.get("block_candidates")
+        self.metrics.record_query_stats(
+            st["discard"][:n_real], st["shard_candidates"][:n_real],
+            bc[:n_real] if bc is not None else None)
         return res.ids, res.scores
 
     def candidate_masks(self, users):
@@ -186,9 +424,10 @@ class ShardedRetriever(Retriever):
     def stats(self) -> dict:
         out = super().stats()
         out.update(
-            n_shards=self.spec.n_shards,
+            n_shards=self.base.n_shards,
             n_live_base=self.base.n_live,
             delta_len=len(self.delta),
+            generation=self.generation,
             posting_load=self.base.posting_load().tolist(),
             metrics=self.metrics.snapshot(),
         )
@@ -198,46 +437,56 @@ class ShardedRetriever(Retriever):
         return out
 
     def snapshot(self, path: str) -> None:
-        cat_ids = np.sort(np.fromiter(self.catalog.keys(), np.int64,
-                                      len(self.catalog)))
-        cat_fac = (np.stack([self.catalog[int(i)] for i in cat_ids])
-                   if cat_ids.size
-                   else np.zeros((0, self.spec.cfg.k), np.float32))
-        base, meta = self.base, self.base.meta
+        cat_ids, cat_fac = self._catalog_arrays()
+        base, part = self.base, self.base.partition
         arrays = {
             "catalog_ids": cat_ids, "catalog_factors": cat_fac,
             "base_item_ids": base.item_ids,
             "base_tables": base.tables, "base_counts": base.counts,
-            "base_spills": base.spills, "base_factors": base.factors,
+            "base_spills": base.spills,
+            "base_factors": base.flat_factors(),
             "base_alive": base._alive_host,
-            "meta_item_bits_t": meta.item_bits_t,
-            "meta_block_union": meta.block_union,
-            "meta_block_spill": meta.block_spill,
-            "meta_spill8": meta.spill8,
             "delta_ids": self.delta.ids, "delta_factors": self.delta.factors,
         }
-        extra = {"base": {"n_shards": base.n_shards,
-                          "shard_cap": base.shard_cap,
-                          "bucket": base.bucket},
-                 "meta": {"bn": meta.bn, "words": meta.words,
-                          "n_rows": meta.n_rows, "n_pad": meta.n_pad}}
+        per_group = []
+        for g, meta in enumerate(base.metas):
+            arrays[f"meta{g}_item_bits_t"] = meta.item_bits_t
+            arrays[f"meta{g}_block_union"] = meta.block_union
+            arrays[f"meta{g}_block_spill"] = meta.block_spill
+            arrays[f"meta{g}_spill8"] = meta.spill8
+            per_group.append({"bn": meta.bn, "words": meta.words,
+                              "n_rows": meta.n_rows, "n_pad": meta.n_pad})
+        extra = {"base": {"bucket": base.bucket,
+                          "partition": {"lengths": list(part.lengths),
+                                        "bns": list(part.bns),
+                                        "caps": list(part.caps)}},
+                 "meta": {"n_groups": len(base.metas),
+                          "per_group": per_group},
+                 "generation": self.generation}
         write_snapshot(path, self.spec, arrays, extra)
 
     def restore(self, path: str) -> "ShardedRetriever":
         """Reconstruct the exact serving state — including tombstones, the
-        kill-refreshed block metadata and a non-empty delta — without
-        re-deriving anything; queries are bit-identical to pre-snapshot.
-        Restores onto local devices (``mesh`` placement is not persisted)."""
+        kill-refreshed block metadata, a non-empty delta, a skew-aware
+        partition and the serving generation — without re-deriving
+        anything; queries are bit-identical to pre-snapshot.  Restores onto
+        local devices (``mesh`` placement is not persisted) with no
+        compaction in flight (the planner is shadow state a snapshot never
+        contains)."""
         arrays, state = read_snapshot(path, self.spec)
-        m = state["meta"]
-        meta = RetrievalMeta(
-            item_bits_t=jnp.asarray(arrays["meta_item_bits_t"]),
-            block_union=jnp.asarray(arrays["meta_block_union"]),
-            block_spill=jnp.asarray(arrays["meta_block_spill"]),
-            spill8=jnp.asarray(arrays["meta_spill8"]),
-            p=self.spec.cfg.p, words=int(m["words"]), bn=int(m["bn"]),
-            n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"]))
         b = state["base"]
+        part = Partition(tuple(b["partition"]["lengths"]),
+                         tuple(b["partition"]["bns"]),
+                         tuple(b["partition"]["caps"]))
+        metas = []
+        for g, m in enumerate(state["meta"]["per_group"]):
+            metas.append(RetrievalMeta(
+                item_bits_t=jnp.asarray(arrays[f"meta{g}_item_bits_t"]),
+                block_union=jnp.asarray(arrays[f"meta{g}_block_union"]),
+                block_spill=jnp.asarray(arrays[f"meta{g}_block_spill"]),
+                spill8=jnp.asarray(arrays[f"meta{g}_spill8"]),
+                p=self.spec.cfg.p, words=int(m["words"]), bn=int(m["bn"]),
+                n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"])))
         self.base = ShardedGamIndex(
             self.spec.cfg, np.asarray(arrays["base_item_ids"], np.int64),
             jnp.asarray(arrays["base_tables"]),
@@ -245,16 +494,17 @@ class ShardedRetriever(Retriever):
             jnp.asarray(arrays["base_spills"]),
             jnp.asarray(arrays["base_factors"]),
             np.asarray(arrays["base_alive"], bool),
-            int(b["n_shards"]), int(b["shard_cap"]), self.spec.min_overlap,
-            int(b["bucket"]), None, meta)
+            part, self.spec.min_overlap, int(b["bucket"]), None, metas)
         self.catalog = {int(i): f for i, f in zip(
             np.asarray(arrays["catalog_ids"], np.int64),
             np.asarray(arrays["catalog_factors"], np.float32))}
-        self.delta.clear()
-        if arrays["delta_ids"].size:
-            # DeltaSegment state is a deterministic function of its sorted
-            # (ids, factors) — re-deriving it reproduces the packed patterns
-            # and posting table bit-for-bit
-            self.delta.upsert(np.asarray(arrays["delta_ids"], np.int64),
-                              np.asarray(arrays["delta_factors"], np.float32))
+        # DeltaSegment state is a deterministic function of its sorted
+        # (ids, factors) — re-deriving it reproduces the packed patterns
+        # and posting table bit-for-bit
+        self.delta.replace(np.asarray(arrays["delta_ids"], np.int64),
+                           np.asarray(arrays["delta_factors"], np.float32))
+        self.generation = int(state.get("generation", 0))
+        self._planner = None
+        # a restored skew-aware layout keeps re-planning on later compactions
+        self._rebalanced = part != Partition.uniform(part.n, part.n_shards)
         return self

@@ -18,7 +18,11 @@ from repro.retriever.api import RetrieverSpec
 
 __all__ = ["read_snapshot", "write_snapshot"]
 
-SNAPSHOT_FORMAT = "repro.retriever/v1"
+# v2: sharded payload carries the partition (lengths/bns/caps), per-bn-group
+# meta arrays (meta<g>_*) and the serving generation instead of v1's single
+# n_shards/shard_cap + flat meta_* block — readers reject v1 files loudly
+# here rather than KeyError-ing mid-restore.
+SNAPSHOT_FORMAT = "repro.retriever/v2"
 
 # spec fields that change query RESULTS (not just performance): a snapshot
 # taken under one of these must not silently serve under another.

@@ -11,7 +11,22 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["RetrievalResult", "UnsupportedOp"]
+__all__ = ["RetrievalResult", "UnsupportedOp", "dedupe_last_write"]
+
+
+def dedupe_last_write(ids: np.ndarray,
+                      factors: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve duplicate ids within ONE upsert batch: the last write wins.
+
+    The single definition of the contract's batch-duplicate semantics —
+    every mutable backend (brute, gam/gam-device, the sharded delta tier)
+    funnels through here so their mutation behaviour cannot drift apart.
+    """
+    if len(np.unique(ids)) != ids.size:
+        _, first_rev = np.unique(ids[::-1], return_index=True)
+        sel = np.sort(ids.size - 1 - first_rev)
+        return ids[sel], factors[sel]
+    return ids, factors
 
 
 class UnsupportedOp(NotImplementedError):

@@ -60,20 +60,38 @@ Components
     shard-balance counters; surfaced by ``launch/serve.py --service`` and
     ``benchmarks/service_bench.py`` (throughput-vs-latency curve).
 
-Not yet here (see ROADMAP): multi-host serving, shard replication/failover,
-background (async) compaction, and a load-balancing repartitioner.
+``CompactionPlanner`` (``compaction.py``)
+    Background compaction as a resumable state machine: the replacement
+    main segment is built in bounded slices interleaved with queries
+    (map -> per-shard segments -> per-bn-group metadata -> finalize), with
+    one atomic generation-tagged swap at the end and a mutation journal
+    replayed over it.  Queries answer exactly from (old segment ∪ delta)
+    at every intermediate step.
+
+``Partition`` / ``Repartitioner`` (``repartition.py``)
+    Skew-aware layout of the id-sorted catalog: variable-length contiguous
+    shards and per-shard fused-kernel block widths ``bn``, planned from
+    per-item load weights; ``ServiceMetrics`` skew (max/mean candidate
+    load) decides when rebalancing is worth a compaction.
+
+Not yet here (see ROADMAP): multi-host serving, shard replication/failover.
 """
+from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher, QueryResult
+from repro.service.repartition import Partition, Repartitioner
 from repro.service.service import GamService, ServiceConfig
 from repro.service.sharded_index import ShardedGamIndex, ShardTopK
 
 __all__ = [
+    "CompactionPlanner",
     "DeltaSegment",
     "GamService",
     "Microbatcher",
+    "Partition",
     "QueryResult",
+    "Repartitioner",
     "ServiceConfig",
     "ServiceMetrics",
     "ShardTopK",

@@ -22,6 +22,7 @@ from repro.core.inverted_index import DeviceIndex
 from repro.core.mapping import GamConfig, sparse_map
 from repro.kernels.gam_retrieve import build_retrieval_meta
 from repro.kernels.ops import gam_retrieve
+from repro.retriever.types import dedupe_last_write
 
 __all__ = ["DeltaSegment"]
 
@@ -49,10 +50,7 @@ class DeltaSegment:
     def upsert(self, ids, factors) -> None:
         ids = np.asarray(ids, np.int64).ravel()
         factors = np.asarray(factors, np.float32).reshape(ids.size, self.cfg.k)
-        if len(np.unique(ids)) != ids.size:   # duplicate ids: last write wins
-            _, first_rev = np.unique(ids[::-1], return_index=True)
-            sel = np.sort(ids.size - 1 - first_rev)
-            ids, factors = ids[sel], factors[sel]
+        ids, factors = dedupe_last_write(ids, factors)
         keep = ~np.isin(self.ids, ids)
         merged_ids = np.concatenate([self.ids[keep], ids])
         merged_fac = np.concatenate([self.factors[keep], factors])
@@ -63,6 +61,19 @@ class DeltaSegment:
     def delete(self, ids) -> None:
         keep = ~np.isin(self.ids, np.asarray(ids, np.int64).ravel())
         self.ids, self.factors = self.ids[keep], self.factors[keep]
+        self._rebuild()
+
+    def replace(self, ids, factors) -> None:
+        """Set the whole segment content in one shot (compaction swap and
+        snapshot restore).  Equivalent to ``clear()`` + ``upsert(...)`` —
+        the segment state is a deterministic function of its sorted
+        (ids, factors), so this reproduces the packed patterns and posting
+        table bit-for-bit regardless of the mutation history."""
+        ids = np.asarray(ids, np.int64).ravel()
+        factors = np.asarray(factors, np.float32).reshape(ids.size,
+                                                          self.cfg.k)
+        order = np.argsort(ids)
+        self.ids, self.factors = ids[order], factors[order]
         self._rebuild()
 
     def clear(self) -> None:

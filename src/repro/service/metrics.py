@@ -1,10 +1,13 @@
-"""Service observability: QPS, latency percentiles, occupancy, discard and
-shard-balance counters.
+"""Service observability: QPS, latency percentiles, occupancy, discard,
+shard/block balance and maintenance (compaction / repartition) counters.
 
 Pure-Python accumulation (no jax) so it can be updated from the request path
 without touching device state; ``snapshot()`` renders the dict that
 ``launch/serve.py --service`` prints and ``benchmarks/service_bench.py``
-records.
+records.  The per-shard and per-block candidate accumulators double as the
+load signal the :class:`~repro.service.repartition.Repartitioner` reads:
+``shard_skew()`` / ``block_skew()`` (max/mean) decide when a rebalancing
+compaction is worth scheduling.
 """
 from __future__ import annotations
 
@@ -30,10 +33,16 @@ class ServiceMetrics:
         self.n_upserts = 0
         self.n_deletes = 0
         self.n_compactions = 0
+        self.n_async_compactions = 0
+        self.n_compact_slices = 0
+        self.n_compact_aborts = 0
+        self.n_repartitions = 0
+        self.last_repartition_skew = None      # shard skew that triggered it
         self._occupancy: list[float] = []      # real / padded per batch
         self._latencies: list[float] = []      # seconds, per request
         self._discards: list[float] = []       # fraction, per request
         self._shard_cand = None                # (S,) accumulated candidates
+        self._block_cand = None                # (n_blocks,) accumulated
 
     def _trim(self) -> None:
         # long-running service: percentiles over a recent window, O(1) memory
@@ -53,7 +62,8 @@ class ServiceMetrics:
         self._trim()
 
     def record_query_stats(self, discard_fracs=None,
-                           shard_candidates=None) -> None:
+                           shard_candidates=None,
+                           block_candidates=None) -> None:
         if discard_fracs is not None:
             self._discards.extend(float(d) for d in discard_fracs)
             self._trim()
@@ -61,8 +71,21 @@ class ServiceMetrics:
             sc = np.asarray(shard_candidates, np.float64)
             if sc.ndim == 2:                   # (Q, S) -> per-shard totals
                 sc = sc.sum(axis=0)
+            # a repartition changes S: restart the accumulation window
+            if self._shard_cand is not None and \
+                    self._shard_cand.shape != sc.shape:
+                self._shard_cand = None
             self._shard_cand = (sc if self._shard_cand is None
                                 else self._shard_cand + sc)
+        if block_candidates is not None:
+            bc = np.asarray(block_candidates, np.float64)
+            if bc.ndim == 2:                   # (Q, n_blocks) -> totals
+                bc = bc.sum(axis=0)
+            if self._block_cand is not None and \
+                    self._block_cand.shape != bc.shape:
+                self._block_cand = None
+            self._block_cand = (bc if self._block_cand is None
+                                else self._block_cand + bc)
 
     def record_upsert(self, n: int) -> None:
         self.n_upserts += int(n)
@@ -70,18 +93,58 @@ class ServiceMetrics:
     def record_delete(self, n: int) -> None:
         self.n_deletes += int(n)
 
-    def record_compact(self) -> None:
+    def record_compact(self, async_: bool = False) -> None:
         self.n_compactions += 1
+        if async_:
+            self.n_async_compactions += 1
+
+    def record_compact_slice(self) -> None:
+        self.n_compact_slices += 1
+
+    def record_compact_abort(self) -> None:
+        self.n_compact_aborts += 1
+
+    def record_repartition(self, skew_before: float | None = None) -> None:
+        self.n_repartitions += 1
+        if skew_before is not None:
+            self.last_repartition_skew = float(skew_before)
+        # the load windows describe the PRE-rebalance layout; restart them so
+        # the trigger measures the new partition (otherwise a stale skew
+        # statistic re-fires the repartition on every poll)
+        self._shard_cand = None
+        self._block_cand = None
+
+    # ---------------------------------------------------------- load signal
+
+    @property
+    def shard_candidates(self) -> np.ndarray | None:
+        """(S,) accumulated per-shard candidate totals (None pre-traffic)."""
+        return self._shard_cand
+
+    @property
+    def block_candidates(self) -> np.ndarray | None:
+        """(n_blocks,) accumulated per-block candidate totals."""
+        return self._block_cand
+
+    @staticmethod
+    def _skew(loads) -> float | None:
+        if loads is None or loads.sum() <= 0:
+            return None
+        return float(loads.max() / loads.mean())
+
+    def shard_skew(self) -> float | None:
+        """max/mean of the accumulated per-shard candidate load — the
+        repartition trigger statistic (None before any traffic)."""
+        return self._skew(self._shard_cand)
+
+    def block_skew(self) -> float | None:
+        return self._skew(self._block_cand)
 
     # ---------------------------------------------------------- reporting
 
     def snapshot(self) -> dict:
         elapsed = max(self._clock() - self._t0, 1e-9)
         lat = np.asarray(self._latencies) if self._latencies else None
-        shard_balance = None
-        if self._shard_cand is not None and self._shard_cand.sum() > 0:
-            mean = self._shard_cand.mean()
-            shard_balance = float(self._shard_cand.max() / max(mean, 1e-9))
         return {
             "elapsed_s": float(elapsed),
             "n_requests": self.n_requests,
@@ -95,8 +158,14 @@ class ServiceMetrics:
                                if self._occupancy else None),
             "discard_mean": (float(np.mean(self._discards))
                              if self._discards else None),
-            "shard_balance": shard_balance,    # max/mean candidate load
+            "shard_balance": self.shard_skew(),  # max/mean candidate load
+            "block_balance": self.block_skew(),
             "n_upserts": self.n_upserts,
             "n_deletes": self.n_deletes,
             "n_compactions": self.n_compactions,
+            "n_async_compactions": self.n_async_compactions,
+            "n_compact_slices": self.n_compact_slices,
+            "n_compact_aborts": self.n_compact_aborts,
+            "n_repartitions": self.n_repartitions,
+            "last_repartition_skew": self.last_repartition_skew,
         }

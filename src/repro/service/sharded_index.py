@@ -1,30 +1,41 @@
 """Item-axis sharded GAM index: the service's main (compacted) segment.
 
-The catalog is sorted by item id and partitioned contiguously into
-``n_shards`` equal slices of ``shard_cap`` rows (``shard_cap`` rounded up to
-a whole number of kernel item blocks; trailing rows zero-padded).  Each shard
+The catalog is sorted by item id and partitioned contiguously according to a
+:class:`~repro.service.repartition.Partition` — per-shard row counts, padded
+caps and fused-kernel block widths ``bn``.  The default
+``Partition.uniform`` reproduces the legacy equal-cut layout (one shared cap
+rounded up to whole kernel blocks, pads at the catalog tail); a skew-aware
+partition from the :class:`~repro.service.repartition.Repartitioner` may
+instead cut hot regions into short shards with narrow blocks.  Each shard
 owns a dense-bucket posting segment over LOCAL row ids (built with
 ``core.inverted_index.build_segment``) — kept for posting-load stats and as
 the source of the bucket-spill flags — while the query path streams the flat
-``(n_shards * shard_cap, k)`` factor matrix through the fused
-``kernels.gam_retrieve`` kernel: per-tile candidate overlap from packed
-pattern bitsets, zero-candidate blocks skipped via the block-union prepass,
-and an on-chip running top-kappa, so no (Q, N) mask or score tensor is ever
-materialised.  The flat layout is precisely what ``sharding.specs
-.index_shardings`` partitions over the ``launch.mesh.make_index_mesh`` item
-axis.
+factor matrix through the fused ``kernels.gam_retrieve`` kernel: per-tile
+candidate overlap from packed pattern bitsets, zero-candidate blocks skipped
+via the block-union prepass, and an on-chip running top-kappa, so no (Q, N)
+mask or score tensor is ever materialised.
+
+Consecutive shards sharing one ``bn`` form a *group*: one contiguous slab of
+the flat factor matrix with one ``RetrievalMeta`` and one kernel launch (the
+uniform default is a single group — exactly the legacy single launch).
+Heterogeneous partitions launch once per group and merge on host.
 
 Merge semantics: the kernel's accumulator realises the total order
-(score desc, global row asc); global row == catalog rank because rows are
-id-sorted, so a multi-shard query is bit-identical to the single-shard
-``GamRetriever(device=True)`` path — and to ``lax.top_k`` over the dense
-masked score matrix, which the retained ``_shard_masks``/``_score_and_merge``
-reference path still computes for parity tests.
+(score desc, global row asc); live rows appear in the flat layout in id
+order (pad rows are dead and never candidates), so global-row order among
+candidates == catalog-id order and any multi-shard/multi-group query is
+bit-identical to the single-shard ``GamRetriever(device=True)`` path — and
+to ``lax.top_k`` over the dense masked score matrix, which the retained
+``query_dense_reference`` oracle still computes for parity tests.
+
+Incremental builds: :func:`build_shard_segment`, :func:`build_group_meta`
+and :meth:`ShardedGamIndex.assemble` are the staged units the background
+:class:`~repro.service.compaction.CompactionPlanner` drives one bounded
+slice at a time; ``ShardedGamIndex.build`` runs the same stages eagerly.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -32,67 +43,84 @@ import numpy as np
 
 from repro.core.inverted_index import build_segment, candidate_mask_from_table
 from repro.core.mapping import GamConfig, sparse_map
-from repro.kernels.gam_retrieve import build_retrieval_meta
+from repro.core.retrieval import masked_topk
+from repro.kernels.gam_retrieve import RetrievalMeta, pack_patterns
 from repro.kernels.gam_score import NEG
-from repro.kernels.ops import gam_retrieve, gam_score
+from repro.kernels.ops import gam_retrieve
+from repro.service.repartition import Partition
 
-__all__ = ["ShardedGamIndex", "ShardTopK"]
+__all__ = ["ShardTopK", "ShardedGamIndex", "build_group_meta",
+           "build_shard_segment"]
 
-
-@partial(jax.jit, static_argnames=("min_overlap", "cap"))
-def _shard_masks(tables: jax.Array, spills: jax.Array, q_tau: jax.Array,
-                 q_mask: jax.Array, *, min_overlap: int, cap: int) -> jax.Array:
-    """(S, p, bucket) tables + (Q, k) query patterns -> (Q, S*cap) bool.
-
-    Dense-mask REFERENCE path (with ``_score_and_merge``): serving streams
-    through the fused kernel instead; tests/benchmarks use this pair to pin
-    the fused results bit-for-bit."""
-
-    def one(table, spill, tau, qm):
-        # shared candidate semantics (core.inverted_index) with the shard's
-        # local-row sentinel; spill-list pads carry id == cap and drop out
-        return candidate_mask_from_table(table, spill, tau, qm,
-                                         sentinel=cap,
-                                         min_overlap=min_overlap)
-
-    per_q = jax.vmap(one, in_axes=(None, None, 0, 0))      # over queries
-    per_s = jax.vmap(per_q, in_axes=(0, 0, None, None))    # over shards
-    masks = per_s(tables, spills, q_tau, q_mask)           # (S, Q, cap)
-    return jnp.moveaxis(masks, 0, 1).reshape(q_tau.shape[0], -1)
-
-
-@partial(jax.jit, static_argnames=("kappa", "n_shards", "cap"))
-def _score_and_merge(users: jax.Array, factors: jax.Array, masks: jax.Array,
-                     *, kappa: int, n_shards: int, cap: int):
-    """Per-shard top-kappa + stable cross-shard merge (dense reference).
-
-    Returns (vals (Q, kappa'), rows (Q, kappa') global row ids,
-    shard_cand (Q, S) candidate counts) with kappa' = min(kappa, S*kk)."""
-    q = users.shape[0]
-    scores = gam_score(users, factors, masks)              # (Q, S*cap)
-    s3 = scores.reshape(q, n_shards, cap)
-    kk = min(kappa, cap)
-    vals, loc = jax.lax.top_k(s3, kk)                      # (Q, S, kk)
-    rows = loc + (jnp.arange(n_shards) * cap)[None, :, None]
-    cat_vals = vals.reshape(q, n_shards * kk)
-    cat_rows = rows.reshape(q, n_shards * kk)
-    # stable sort on -score: ties resolve by concat position, which is shard
-    # order then within-shard top_k order — i.e. ascending global row.  This
-    # reproduces lax.top_k's tie-break over the full score matrix.
-    order = jnp.argsort(-cat_vals, axis=-1, stable=True)[:, :kappa]
-    merged_vals = jnp.take_along_axis(cat_vals, order, axis=-1)
-    merged_rows = jnp.take_along_axis(cat_rows, order, axis=-1)
-    shard_cand = masks.reshape(q, n_shards, cap).sum(-1)
-    return merged_vals, merged_rows.astype(jnp.int32), shard_cand
+# host-merge row sentinel: sorts after every real global row on score ties
+_FAR_ROW = np.int64(1) << 40
 
 
 @dataclasses.dataclass
 class ShardTopK:
     """Result of a sharded query, still in global-row coordinates."""
-    scores: jax.Array       # (Q, kappa) f32, NEG in empty slots
-    rows: jax.Array         # (Q, kappa) int32 global rows, -1 in empty slots
-    shard_candidates: jax.Array  # (Q, S) int32 per-shard candidate counts
+    scores: np.ndarray      # (Q, kappa) f32, NEG in empty slots
+    rows: np.ndarray        # (Q, kappa) int32 global rows, -1 in empty slots
+    shard_candidates: np.ndarray  # (Q, S) per-shard candidate counts
+    block_candidates: np.ndarray | None = None  # (Q, n_blocks) per-block
     tiles_skipped_frac: float = 0.0  # fraction of (Q_blk, N_blk) tiles pruned
+
+
+# -------------------------------------------------------- staged build units
+
+
+def build_shard_segment(tau: np.ndarray, mask: np.ndarray,
+                        partition: Partition, s: int, p: int, bucket: int):
+    """Posting segment of shard ``s`` over its local rows.
+
+    ``tau``/``mask`` are the (n, k) mapped patterns of the whole id-sorted
+    catalog; the shard's slice is taken here so the compaction planner can
+    call one shard per step.  Returns ``(table, counts, spill)`` with the
+    shard's cap as the pad sentinel.
+    """
+    lo = partition.starts[s]
+    hi = lo + partition.lengths[s]
+    return build_segment(tau[lo:hi], p, bucket, mask[lo:hi],
+                         sentinel=partition.caps[s])
+
+
+def build_group_meta(tau: np.ndarray, mask: np.ndarray, p: int,
+                     partition: Partition, g: int,
+                     shard_spills) -> RetrievalMeta:
+    """Fused-kernel block metadata for group ``g``'s slab.
+
+    Each member shard's real-row patterns are placed at their PADDED flat
+    positions within the slab (pad rows keep empty patterns and can never
+    become candidates); ``shard_spills[s]`` are the shard-local spill rows
+    from :func:`build_shard_segment`.  For the uniform single-group
+    partition this reproduces ``kernels.gam_retrieve.build_retrieval_meta``
+    over the whole flat layout bit-for-bit.
+    """
+    s_lo, s_hi = partition.groups[g]
+    bn = partition.bns[s_lo]
+    row_lo, row_hi = partition.group_rows(g)
+    rows = row_hi - row_lo
+    words = -(-p // 32)
+    bits = np.zeros((rows, words), np.uint32)
+    spill = np.zeros(rows, bool)
+    for s in range(s_lo, s_hi):
+        off = partition.offsets[s] - row_lo
+        lo, ln = partition.starts[s], partition.lengths[s]
+        if ln:
+            bits[off:off + ln] = pack_patterns(tau[lo:lo + ln],
+                                               mask[lo:lo + ln], p)
+        sp = np.asarray(shard_spills[s], np.int64)
+        if sp.size:
+            spill[off + sp] = True
+    n_blocks = rows // bn
+    union = np.bitwise_or.reduce(bits.reshape(n_blocks, bn, words), axis=1)
+    return RetrievalMeta(
+        item_bits_t=jnp.asarray(np.ascontiguousarray(bits.T)),
+        block_union=jnp.asarray(union),
+        block_spill=jnp.asarray(spill.reshape(n_blocks, bn).any(axis=1)),
+        spill8=jnp.asarray(spill.astype(np.int8)[None, :]),
+        p=int(p), words=words, bn=bn, n_rows=rows, n_pad=rows,
+    )
 
 
 class ShardedGamIndex:
@@ -101,44 +129,72 @@ class ShardedGamIndex:
     def __init__(self, cfg: GamConfig, item_ids: np.ndarray,
                  tables: jax.Array, counts: jax.Array, spills: jax.Array,
                  factors: jax.Array, alive: np.ndarray,
-                 n_shards: int, shard_cap: int, min_overlap: int,
-                 bucket: int, mesh=None, meta=None):
+                 partition: Partition, min_overlap: int,
+                 bucket: int, mesh=None, metas=None):
         self.cfg = cfg
         self.item_ids = item_ids          # (N,) int64 sorted catalog ids
         self.tables = tables              # (S, p, bucket) int32
         self.counts = counts              # (S, p) int32
-        self.spills = spills              # (S, W) int32, padded with shard_cap
-        self.factors = factors            # (S*cap, k) f32, pad rows zero
-        self._alive_host = alive          # (S*cap,) bool numpy mirror
-        self.alive = jnp.asarray(alive)
-        self.n_shards = n_shards
-        self.shard_cap = shard_cap
+        self.spills = spills              # (S, W) int32, padded with caps[s]
+        self.partition = partition
+        self._alive_host = np.asarray(alive, bool)  # (n_rows,) numpy mirror
         self.min_overlap = min_overlap
         self.bucket = bucket
         self.mesh = mesh
-        self.meta = meta                  # fused-kernel block metadata
-        self._row_of = {int(i): r for r, i in enumerate(item_ids)}
+        self.metas: list[RetrievalMeta] = list(metas or [])
+        # per-group device slabs (single-group: the arrays themselves, so a
+        # mesh-placed flat factor matrix keeps its sharding)
+        factors = jnp.asarray(factors)
+        groups = partition.groups
+        if len(groups) == 1:
+            self.factors_g = [factors]
+            self.alive_g = [jnp.asarray(self._alive_host)]
+        else:
+            self.factors_g, self.alive_g = [], []
+            for g in range(len(groups)):
+                lo, hi = partition.group_rows(g)
+                self.factors_g.append(factors[lo:hi])
+                self.alive_g.append(jnp.asarray(self._alive_host[lo:hi]))
+        # flat row -> catalog id (-1 on pad rows), and id -> flat row
+        self._padded_ids = np.full(partition.n_rows, -1, np.int64)
+        self._row_of: dict[int, int] = {}
+        for s in range(partition.n_shards):
+            off, st, ln = (partition.offsets[s], partition.starts[s],
+                           partition.lengths[s])
+            self._padded_ids[off:off + ln] = item_ids[st:st + ln]
+            self._row_of.update(zip(item_ids[st:st + ln].tolist(),
+                                    range(off, off + ln)))
         # host mirrors of the per-row pattern bitsets and spill flags, so
         # kill() can recompute per-block metadata without a device gather.
-        # Derived from meta (not rebuilt from tau) so a restored snapshot —
-        # whose dead rows were already zeroed by earlier kills — stays
-        # consistent with what the device arrays actually contain.
-        self._bits_host = (np.ascontiguousarray(
-            np.asarray(meta.item_bits_t).T) if meta is not None else None)
-        self._spill_host = (np.asarray(meta.spill8[0]).astype(bool)
-                            if meta is not None else None)
+        # Derived from the metas (not rebuilt from tau) so a restored
+        # snapshot — whose dead rows were already zeroed by earlier kills —
+        # stays consistent with what the device arrays actually contain.
+        if self.metas:
+            self._bits_host = np.concatenate([
+                np.ascontiguousarray(np.asarray(m.item_bits_t).T)
+                for m in self.metas])
+            self._spill_host = np.concatenate([
+                np.asarray(m.spill8[0]).astype(bool) for m in self.metas])
+        else:
+            self._bits_host = None
+            self._spill_host = None
 
     # ------------------------------------------------------------- build
 
     @staticmethod
     def build(factors: np.ndarray, cfg: GamConfig, *,
               item_ids: np.ndarray | None = None, n_shards: int = 1,
-              min_overlap: int = 1, bucket: int = 256,
-              mesh=None) -> "ShardedGamIndex":
+              min_overlap: int = 1, bucket: int = 256, mesh=None,
+              partition: Partition | None = None,
+              premapped=None) -> "ShardedGamIndex":
+        """Eager build: the same staged units the background compaction
+        planner drives incrementally, run back to back.  ``premapped``:
+        optional (tau, mask) aligned with the CALLER's row order, when the
+        phi-mapping was already paid (e.g. by the repartitioner's weights)."""
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         factors = np.asarray(factors, np.float32)
-        n, k = factors.shape
+        n, _ = factors.shape
         if item_ids is None:
             item_ids = np.arange(n, dtype=np.int64)
         item_ids = np.asarray(item_ids, np.int64)
@@ -147,46 +203,71 @@ class ShardedGamIndex:
         order = np.argsort(item_ids)
         item_ids, factors = item_ids[order], factors[order]
 
-        tau, vals = sparse_map(jnp.asarray(factors), cfg)
-        tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+        if partition is None:
+            partition = Partition.uniform(n, n_shards)
+        elif partition.n != n:
+            raise ValueError(f"partition covers {partition.n} rows, "
+                             f"catalog has {n}")
 
-        # shard_cap rounds up to a whole number of kernel item blocks so the
-        # fused kernel's per-block candidate counts fold exactly into
-        # per-shard counts (rows stay globally contiguous: partition
-        # boundaries move, results don't)
-        cap0 = -(-n // n_shards) if n else 1
-        bn = min(256, -(-cap0 // 8) * 8)
-        cap = -(-cap0 // bn) * bn
-        tables, counts, spills = [], [], []
-        for s in range(n_shards):
-            lo, hi = s * cap, min((s + 1) * cap, n)
-            t, c, sp = build_segment(tau[lo:hi], cfg.p, bucket,
-                                     mask[lo:hi], sentinel=cap)
-            tables.append(t)
-            counts.append(c)
-            spills.append(sp)
-        spill_global = np.concatenate(
-            [s * cap + sp for s, sp in enumerate(spills)] or
-            [np.zeros(0, np.int64)]).astype(np.int64)
-        meta = build_retrieval_meta(tau, mask, cfg.p,
-                                    n_rows=n_shards * cap,
-                                    spill_rows=spill_global, bn=bn)
-        width = max((sp.size for sp in spills), default=0)
-        spills = np.stack([
-            np.concatenate([sp, np.full(width - sp.size, cap, np.int32)])
-            for sp in spills
-        ]) if width else np.full((n_shards, 0), cap, np.int32)
+        if premapped is None:
+            tau, vals = sparse_map(jnp.asarray(factors), cfg)
+            tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+        else:
+            tau, mask = premapped
+            tau = np.asarray(tau)[order]
+            mask = np.asarray(mask, bool)[order]
 
-        flat = np.zeros((n_shards * cap, k), np.float32)
-        flat[:n] = factors
-        alive = np.zeros(n_shards * cap, bool)
-        alive[:n] = True
+        segs = [build_shard_segment(tau, mask, partition, s, cfg.p, bucket)
+                for s in range(partition.n_shards)]
+        spill_list = [sp for _, _, sp in segs]
+        metas = [build_group_meta(tau, mask, cfg.p, partition, g, spill_list)
+                 for g in range(len(partition.groups))]
+        return ShardedGamIndex.assemble(
+            cfg, item_ids, factors, partition,
+            [t for t, _, _ in segs], [c for _, c, _ in segs], spill_list,
+            metas, min_overlap=min_overlap, bucket=bucket, mesh=mesh)
+
+    @staticmethod
+    def assemble(cfg: GamConfig, item_ids: np.ndarray, factors: np.ndarray,
+                 partition: Partition, tables, counts, spill_list, metas, *,
+                 min_overlap: int, bucket: int, mesh=None
+                 ) -> "ShardedGamIndex":
+        """Final stage: stack the per-shard segments, lay the factor slabs
+        into the padded flat matrix, upload, and construct the index."""
+        n, k = factors.shape
+        width = max((np.asarray(sp).size for sp in spill_list), default=0)
+        spills = (np.stack([
+            np.concatenate([np.asarray(sp, np.int32),
+                            np.full(width - np.asarray(sp).size,
+                                    partition.caps[s], np.int32)])
+            for s, sp in enumerate(spill_list)
+        ]) if width else np.full((partition.n_shards, 0),
+                                 partition.caps[0] if partition.caps else 0,
+                                 np.int32))
+
+        flat = np.zeros((partition.n_rows, k), np.float32)
+        alive = np.zeros(partition.n_rows, bool)
+        for s in range(partition.n_shards):
+            off, st, ln = (partition.offsets[s], partition.starts[s],
+                           partition.lengths[s])
+            flat[off:off + ln] = factors[st:st + ln]
+            alive[off:off + ln] = True
 
         tables_j = jnp.asarray(np.stack(tables))
         counts_j = jnp.asarray(np.stack(counts))
         spills_j = jnp.asarray(spills)
         factors_j = jnp.asarray(flat)
-        if mesh is not None:
+        if mesh is not None and len(partition.groups) > 1:
+            # index_shardings partitions the single flat layout only — a
+            # heterogeneous rebalance on a mesh deployment would otherwise
+            # silently drop the item-axis placement, so say it out loud
+            import warnings
+            warnings.warn(
+                "heterogeneous partition (multiple bn-groups) is not "
+                "mesh-partitioned yet; serving from local devices — plan "
+                "with a uniform bn to keep item-axis sharding",
+                RuntimeWarning, stacklevel=2)
+        if mesh is not None and len(partition.groups) == 1:
             from repro.sharding.specs import index_shardings
             arrs = {"tables": tables_j, "counts": counts_j,
                     "spills": spills_j, "factors": factors_j}
@@ -194,14 +275,26 @@ class ShardedGamIndex:
             tables_j, counts_j = arrs["tables"], arrs["counts"]
             spills_j, factors_j = arrs["spills"], arrs["factors"]
         return ShardedGamIndex(cfg, item_ids, tables_j, counts_j, spills_j,
-                               factors_j, alive, n_shards, cap, min_overlap,
-                               bucket, mesh, meta)
+                               factors_j, alive, partition, min_overlap,
+                               bucket, mesh, metas)
 
     # ------------------------------------------------------------- state
 
     @property
+    def n_shards(self) -> int:
+        return self.partition.n_shards
+
+    @property
     def n_live(self) -> int:
         return int(self._alive_host.sum())
+
+    @property
+    def meta(self) -> RetrievalMeta:
+        """The single-group block metadata (uniform partitions)."""
+        if len(self.metas) != 1:
+            raise ValueError("heterogeneous partition has one meta per "
+                             "bn-group; read .metas")
+        return self.metas[0]
 
     def kill(self, ids) -> None:
         """Tombstone catalog ids (deleted or superseded by a delta upsert).
@@ -209,91 +302,166 @@ class ShardedGamIndex:
         O(batch + touched blocks) — never re-uploads the full alive array.
         Besides flipping ``alive``, the dead rows' pattern bits and spill
         flags are removed from the fused kernel's block metadata (pattern
-        bitsets, block unions, block spill flags): the block-union popcount
-        must upper-bound the overlap of LIVE members only, otherwise long
-        tombstone streams erode the zero-candidate block-skip rate until
-        ``compact()`` (the ROADMAP staleness bug).  Candidate sets are
-        unchanged — dead rows were already excluded in-kernel via ``alive``
-        — so query results are bit-identical before and after the refresh.
+        bitsets, block unions, block spill flags) group by group: the
+        block-union popcount must upper-bound the overlap of LIVE members
+        only, otherwise long tombstone streams erode the zero-candidate
+        block-skip rate until ``compact()`` (the ROADMAP staleness bug).
+        Candidate sets are unchanged — dead rows were already excluded
+        in-kernel via ``alive`` — so query results are bit-identical before
+        and after the refresh.
         """
         rows = [r for i in np.asarray(ids).ravel()
                 if (r := self._row_of.get(int(i))) is not None]
         if not rows:
             return
-        self._alive_host[rows] = False
-        self.alive = self.alive.at[jnp.asarray(rows, jnp.int32)].set(False)
-        if self.meta is None:
-            return
         rows_a = np.asarray(rows, np.int64)
+        self._alive_host[rows_a] = False
+        if not self.metas:
+            return
         self._bits_host[rows_a] = 0
         self._spill_host[rows_a] = False
-        bn, words = self.meta.bn, self.meta.words
-        blocks = np.unique(rows_a // bn)
-        union = np.bitwise_or.reduce(
-            self._bits_host.reshape(-1, bn, words)[blocks], axis=1)
-        bspill = self._spill_host.reshape(-1, bn)[blocks].any(axis=1)
-        blocks_j = jnp.asarray(blocks, jnp.int32)
-        self.meta = dataclasses.replace(
-            self.meta,
-            item_bits_t=self.meta.item_bits_t.at[:, rows_a].set(0),
-            spill8=self.meta.spill8.at[0, rows_a].set(0),
-            block_union=self.meta.block_union.at[blocks_j].set(
-                jnp.asarray(union)),
-            block_spill=self.meta.block_spill.at[blocks_j].set(
-                jnp.asarray(bspill)),
-        )
+        for g, meta in enumerate(self.metas):
+            lo, hi = self.partition.group_rows(g)
+            sel = rows_a[(rows_a >= lo) & (rows_a < hi)] - lo
+            if sel.size == 0:
+                continue
+            sel_j = jnp.asarray(sel, jnp.int32)
+            self.alive_g[g] = self.alive_g[g].at[sel_j].set(False)
+            bn, words = meta.bn, meta.words
+            blocks = np.unique(sel // bn)
+            g_bits = self._bits_host[lo:hi]
+            g_spill = self._spill_host[lo:hi]
+            union = np.bitwise_or.reduce(
+                g_bits.reshape(-1, bn, words)[blocks], axis=1)
+            bspill = g_spill.reshape(-1, bn)[blocks].any(axis=1)
+            blocks_j = jnp.asarray(blocks, jnp.int32)
+            self.metas[g] = dataclasses.replace(
+                meta,
+                item_bits_t=meta.item_bits_t.at[:, sel_j].set(0),
+                spill8=meta.spill8.at[0, sel_j].set(0),
+                block_union=meta.block_union.at[blocks_j].set(
+                    jnp.asarray(union)),
+                block_spill=meta.block_spill.at[blocks_j].set(
+                    jnp.asarray(bspill)),
+            )
+
+    def block_index(self, rows) -> np.ndarray:
+        """Global flat rows -> global kernel block ids (blocks numbered
+        group by group) — maps the metrics' per-block candidate loads back
+        onto items for the repartitioner's weights."""
+        rows = np.asarray(rows, np.int64)
+        out = np.zeros(rows.shape, np.int64)
+        blk_off = 0
+        for g, meta in enumerate(self.metas):
+            lo, hi = self.partition.group_rows(g)
+            m = (rows >= lo) & (rows < hi)
+            out[m] = blk_off + (rows[m] - lo) // meta.bn
+            blk_off += meta.n_blocks
+        return out
 
     def posting_load(self) -> np.ndarray:
         """(S,) total posting entries per shard — the balance statistic."""
         return np.asarray(jnp.sum(self.counts, axis=-1))
 
+    def flat_factors(self) -> np.ndarray:
+        """(n_rows, k) host copy of the padded flat factor matrix."""
+        return np.concatenate([np.asarray(f) for f in self.factors_g])
+
     # ------------------------------------------------------------- query
+
+    def _shard_candidates(self, blk: np.ndarray) -> np.ndarray:
+        """(Q, n_blocks) per-block candidate counts -> (Q, S) per-shard."""
+        nb = [self.partition.caps[s] // self.partition.bns[s]
+              for s in range(self.n_shards)]
+        starts = np.concatenate([[0], np.cumsum(nb)[:-1]]).astype(int)
+        return np.add.reduceat(blk, starts, axis=1)
 
     def query(self, users: jax.Array, q_tau: jax.Array, q_mask: jax.Array,
               kappa: int, *, exact: bool = False) -> ShardTopK:
         """users (Q, k) f32 + mapped query patterns -> merged top-kappa.
 
-        One fused gam_retrieve pass over the flat factor matrix: candidate
-        pruning, scoring and the cross-shard top-kappa merge all happen on
-        chip (zero-candidate item blocks are skipped outright).
+        One fused gam_retrieve pass per bn-group (uniform partitions: exactly
+        one pass over the whole flat factor matrix): candidate pruning,
+        scoring and the in-group top-kappa merge all happen on chip
+        (zero-candidate item blocks are skipped outright); heterogeneous
+        partitions merge the per-group top-kappas on host under the same
+        (score desc, global row asc) total order, which is what keeps a
+        repartitioned catalog bit-identical to the single-launch layout.
         ``exact=True`` scores every live row through the same kernel
         (``min_overlap=0``) — the brute-force reference path."""
-        res = gam_retrieve(users, self.factors, q_tau, q_mask, self.meta,
-                           kappa, min_overlap=0 if exact else self.min_overlap,
-                           alive=self.alive)
-        shard_cand = res.blk_counts.reshape(
-            users.shape[0], self.n_shards, self.shard_cap // self.meta.bn
-        ).sum(axis=-1)
-        return ShardTopK(scores=res.vals, rows=res.rows,
-                         shard_candidates=shard_cand,
-                         tiles_skipped_frac=float(res.skipped.mean()))
+        mo = 0 if exact else self.min_overlap
+        results = [gam_retrieve(users, self.factors_g[g], q_tau, q_mask,
+                                meta, kappa, min_overlap=mo,
+                                alive=self.alive_g[g])
+                   for g, meta in enumerate(self.metas)]
+        if len(results) == 1:
+            res = results[0]
+            blk = np.asarray(res.blk_counts)
+            return ShardTopK(scores=np.asarray(res.vals, np.float32),
+                             rows=np.asarray(res.rows, np.int32),
+                             shard_candidates=self._shard_candidates(blk),
+                             block_candidates=blk,
+                             tiles_skipped_frac=float(res.skipped.mean()))
+        cat_s = np.concatenate(
+            [np.asarray(r.vals, np.float32) for r in results], axis=1)
+        cat_r = np.concatenate(
+            [np.where(np.asarray(r.rows, np.int64) >= 0,
+                      np.asarray(r.rows, np.int64)
+                      + self.partition.group_rows(g)[0], _FAR_ROW)
+             for g, r in enumerate(results)], axis=1)
+        order = np.lexsort((cat_r, -cat_s), axis=-1)[:, :kappa]
+        vals = np.take_along_axis(cat_s, order, axis=-1)
+        rows = np.take_along_axis(cat_r, order, axis=-1)
+        rows = np.where(vals <= NEG / 2, -1, rows).astype(np.int32)
+        blk = np.concatenate([np.asarray(r.blk_counts) for r in results],
+                             axis=1)
+        tiles = sum(np.asarray(r.skipped).size for r in results)
+        skipped = sum(int(np.asarray(r.skipped).sum()) for r in results)
+        return ShardTopK(scores=vals, rows=rows,
+                         shard_candidates=self._shard_candidates(blk),
+                         block_candidates=blk,
+                         tiles_skipped_frac=skipped / max(tiles, 1))
 
     def query_dense_reference(self, users: jax.Array, q_tau: jax.Array,
                               q_mask: jax.Array, kappa: int, *,
                               exact: bool = False) -> ShardTopK:
-        """The superseded (Q, N)-mask path, kept as the parity oracle."""
+        """The superseded (Q, N)-mask path, kept as the parity oracle.
+
+        Per-shard candidate masks from the posting tables, dense masked
+        scoring, one ``lax.top_k`` over the whole flat row space — ties break
+        by position, i.e. ascending global row, the same total order the
+        fused accumulator realises.  Works on any partition (heterogeneous
+        shards loop on host; this is a test oracle, not a serving path)."""
+        q = np.asarray(users).shape[0]
+        alive = jnp.asarray(self._alive_host)
         if exact:
-            masks = jnp.broadcast_to(self.alive[None, :],
-                                     (users.shape[0], self.alive.shape[0]))
+            masks = jnp.broadcast_to(alive[None, :],
+                                     (q, self.partition.n_rows))
         else:
-            masks = _shard_masks(self.tables, self.spills, q_tau, q_mask,
-                                 min_overlap=self.min_overlap,
-                                 cap=self.shard_cap)
-            masks = masks & self.alive[None, :]
-        vals, rows, shard_cand = _score_and_merge(
-            users, self.factors, masks, kappa=kappa,
-            n_shards=self.n_shards, cap=self.shard_cap)
-        # normalise lax.top_k's arbitrary filler rows in NEG-scored slots to
-        # the -1 empty-slot contract ShardTopK documents (the fused path
-        # emits -1 natively)
-        rows = jnp.where(vals <= NEG / 2, -1, rows)
+            cols = []
+            for s in range(self.n_shards):
+                cap = self.partition.caps[s]
+                per_q = jax.vmap(
+                    lambda tq, qm, t=self.tables[s], sp=self.spills[s],
+                    c=cap: candidate_mask_from_table(
+                        t, sp, tq, qm, sentinel=c,
+                        min_overlap=self.min_overlap))
+                cols.append(per_q(q_tau, q_mask))
+            masks = jnp.concatenate(cols, axis=1) & alive[None, :]
+        flat = jnp.asarray(self.flat_factors())
+        vals, rows = masked_topk(jnp.asarray(users), flat, masks, kappa)
+        vals = np.asarray(vals, np.float32)
+        rows = np.where(vals <= NEG / 2, -1, np.asarray(rows, np.int32))
+        masks_np = np.asarray(masks)
+        shard_cand = np.stack(
+            [masks_np[:, self.partition.offsets[s]:
+                      self.partition.offsets[s] + self.partition.caps[s]]
+             .sum(axis=1) for s in range(self.n_shards)], axis=1)
         return ShardTopK(scores=vals, rows=rows, shard_candidates=shard_cand)
 
     def rows_to_ids(self, rows: np.ndarray, scores: np.ndarray) -> np.ndarray:
         """Global rows -> catalog ids; empty (NEG-scored) slots -> -1."""
         rows = np.asarray(rows, np.int64)
-        padded_ids = np.full(self.n_shards * self.shard_cap, -1, np.int64)
-        padded_ids[: len(self.item_ids)] = self.item_ids
-        out = padded_ids[rows]
+        out = self._padded_ids[rows]
         out[np.asarray(scores) <= NEG / 2] = -1
         return out

@@ -1,0 +1,57 @@
+"""Shared test fixtures and catalog helpers.
+
+The retrieval suites all need the same ingredients — the standard 16-dim
+parse-tree mapping schema, unit-norm random factor catalogs, and a
+deterministic per-test RNG — which used to be copy-pasted per file
+(``_factors``/``CFG`` in test_service, test_retriever_contract,
+test_gam_retrieve, ...).  They live here now: module-scope helpers
+(importable as ``from conftest import CFG, unit_factors`` for use in
+parametrize lists and module-level constants) plus fixture spellings for
+test bodies.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import GamConfig
+
+# the standard mapping schema of the retrieval test suites
+CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
+
+
+def unit_factors(n: int, k: int = 16, seed: int = 0) -> np.ndarray:
+    """(n, k) unit-norm float32 factor rows, deterministic in ``seed``."""
+    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+
+@pytest.fixture(scope="session")
+def cfg() -> GamConfig:
+    return CFG
+
+
+@pytest.fixture
+def make_factors():
+    """Factory fixture: ``make_factors(n, k=16, seed=0)``."""
+    return unit_factors
+
+
+@pytest.fixture
+def rng(request) -> np.random.Generator:
+    """Per-test seeded RNG — deterministic across runs (the seed is a crc32
+    of the test's nodeid, stable unlike ``hash()``), independent across
+    tests."""
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
+
+
+@pytest.fixture
+def catalog() -> np.ndarray:
+    """The shared 300-item test catalog."""
+    return unit_factors(300, CFG.k, 0)
+
+
+@pytest.fixture
+def users() -> np.ndarray:
+    """The shared 12-row query batch."""
+    return unit_factors(12, CFG.k, 1)

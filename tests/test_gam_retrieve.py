@@ -10,22 +10,16 @@ the dense path parks arbitrary ``lax.top_k`` indices there).
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import CFG, unit_factors as _factors
 
 from repro.core.inverted_index import DeviceIndex
-from repro.core.mapping import GamConfig, sparse_map
+from repro.core.mapping import sparse_map
 from repro.core.retrieval import masked_topk
 from repro.retriever import RetrieverSpec, open_retriever
 from repro.kernels import ref
 from repro.kernels.gam_retrieve import (build_retrieval_meta, gam_retrieve,
                                         pack_patterns)
 from repro.kernels.gam_score import NEG
-
-CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
-
-
-def _factors(n, k, seed):
-    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
-    return z / np.linalg.norm(z, axis=1, keepdims=True)
 
 
 def _mapped(factors, cfg=CFG):
@@ -217,8 +211,9 @@ def test_device_retriever_equals_dense_reference_end_to_end():
 
 def test_sharded_merge_equals_dense_reference():
     """The service's fused sharded query == the retained dense-mask
-    reference (_shard_masks + _score_and_merge), bit for bit, including
-    per-shard candidate counts and tombstoned rows."""
+    reference (query_dense_reference: per-shard posting-table masks +
+    masked_topk), bit for bit, including per-shard candidate counts and
+    tombstoned rows."""
     items = _factors(350, 16, 16)
     users = _factors(9, 16, 17)
     svc = open_retriever(

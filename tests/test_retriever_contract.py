@@ -12,6 +12,7 @@ import os
 
 import numpy as np
 import pytest
+from conftest import CFG, unit_factors as _factors
 
 from repro.core.mapping import GamConfig
 from repro.retriever import (
@@ -23,13 +24,7 @@ from repro.retriever import (
     register_backend,
 )
 
-CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
 BACKENDS = ["brute", "gam", "gam-device", "sharded"]
-
-
-def _factors(n, k, seed):
-    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
-    return z / np.linalg.norm(z, axis=1, keepdims=True)
 
 
 def _spec(backend, **kw):
@@ -70,14 +65,13 @@ def test_register_backend_extends_registry():
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_full_lifecycle_scenario_against_brute_oracle(backend, tmp_path):
+def test_full_lifecycle_scenario_against_brute_oracle(backend, tmp_path,
+                                                      catalog, users):
     """The same scenario on every backend; after every mutation the
     exact-mode answers must agree with the brute oracle bit-for-bit."""
     k = CFG.k
-    items = _factors(300, k, 0)
-    users = _factors(12, k, 1)
+    items = catalog
     ids0 = np.arange(300, dtype=np.int64)
-    rng = np.random.default_rng(2)
 
     r = open_retriever(_spec(backend), items=items, ids=ids0)
     oracle = open_retriever(_spec("brute"), items=items, ids=ids0)
@@ -130,6 +124,47 @@ def test_full_lifecycle_scenario_against_brute_oracle(backend, tmp_path):
     np.testing.assert_array_equal(pruned_compacted.ids, pruned_before.ids)
     np.testing.assert_array_equal(pruned_compacted.scores,
                                   pruned_before.scores)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_background_compact_is_part_of_the_contract(backend):
+    """``compact(async_=True)`` is accepted everywhere: backends without a
+    delta tier complete instantly; the sharded backend runs the incremental
+    planner to completion under query-interleaved stepping, advancing its
+    generation — and answers never change along the way."""
+    items = _factors(200, CFG.k, 22)
+    users = _factors(6, CFG.k, 23)
+    r = open_retriever(_spec(backend), items=items)
+    oracle = open_retriever(_spec("brute"), items=items)
+    new = _factors(5, CFG.k, 24)
+    r.upsert(np.arange(300, 305), new)
+    oracle.upsert(np.arange(300, 305), new)
+    before = r.query(users, 10)
+    gen0 = r.maintenance_stats()["generation"]
+    r.compact(async_=True)
+    steps = 0
+    while r.maintenance_stats()["compaction"]["active"]:
+        got = r.query(users, 10, exact=True)
+        want = oracle.query(users, 10, exact=True)
+        np.testing.assert_array_equal(got.ids, want.ids)
+        steps += 1
+        assert steps < 100
+    after = r.query(users, 10)
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.scores, after.scores)
+    if backend == "sharded":
+        assert steps > 0
+        assert r.maintenance_stats()["generation"] == gen0 + 1
+        assert len(r.delta) == 0
+
+
+def test_maintenance_stats_surface():
+    items = _factors(64, CFG.k, 25)
+    for backend in BACKENDS:
+        ms = open_retriever(_spec(backend), items=items).maintenance_stats()
+        assert ms["backend"] == backend
+        assert ms["generation"] == 0
+        assert ms["compaction"]["active"] is False
 
 
 def test_sharded_snapshot_preserves_live_delta():
@@ -196,8 +231,8 @@ def test_query_default_kappa_comes_from_spec(backend):
     assert r.query(_factors(3, CFG.k, 12)).ids.shape == (3, 7)
 
 
-def test_stats_surface():
-    items = _factors(128, CFG.k, 13)
+def test_stats_surface(make_factors):
+    items = make_factors(128, CFG.k, 13)
     for backend in BACKENDS:
         st = open_retriever(_spec(backend), items=items).stats()
         assert st["backend"] == backend and st["n_items"] == 128

@@ -4,24 +4,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import CFG, unit_factors as _factors
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex, build_segment
-from repro.core.mapping import GamConfig, sparse_map
+from repro.core.mapping import sparse_map
 from repro.retriever import RetrieverSpec, open_retriever
 from repro.service import (
     DeltaSegment,
     Microbatcher,
+    Partition,
+    Repartitioner,
     ServiceMetrics,
     ShardedGamIndex,
 )
-
-
-def _factors(n, k, seed):
-    z = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
-    return z / np.linalg.norm(z, axis=1, keepdims=True)
-
-
-CFG = GamConfig(k=16, scheme="parse_tree", threshold=0.2)
 
 
 def _sharded(items, *, ids=None, n_shards=1, min_overlap=1, kappa=10,
@@ -141,9 +136,10 @@ def test_sharded_spill_preserves_recall():
     assert (res.ids[:, 0] == np.arange(32)).all()
 
 
-def test_shard_balance_and_posting_load():
-    items = _factors(256, 16, 8)
-    idx = ShardedGamIndex.build(items, CFG, n_shards=4, min_overlap=1)
+def test_shard_balance_and_posting_load(rng, cfg):
+    items = rng.normal(size=(256, 16)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    idx = ShardedGamIndex.build(items, cfg, n_shards=4, min_overlap=1)
     load = idx.posting_load()
     assert load.shape == (4,)
     assert load.sum() > 0
@@ -369,6 +365,110 @@ def test_delta_items_never_silently_dropped_property():
         assert not (np.isin(res.ids, sorted(dead))).any()
 
     check()
+
+
+# ------------------------------------------------- partition / repartitioner
+
+
+def test_partition_uniform_reproduces_legacy_layout():
+    """Partition.uniform is the pre-repartitioner arithmetic: one shared
+    cap rounded to whole kernel blocks, ragged only at the tail, a single
+    bn-group."""
+    p = Partition.uniform(350, 3)
+    assert p.lengths == (120, 120, 110)
+    assert p.bns == (120, 120, 120) and p.caps == (120, 120, 120)
+    assert p.groups == ((0, 3),) and p.n_rows == 360
+    p0 = Partition.uniform(0, 2)
+    assert p0.lengths == (0, 0) and p0.caps == (8, 8)
+
+
+def test_partition_validation_is_loud():
+    with pytest.raises(ValueError, match="multiple of 8"):
+        Partition((10,), (12,), (12,))
+    with pytest.raises(ValueError, match="multiple of bn"):
+        Partition((10,), (8,), (12,))
+    with pytest.raises(ValueError, match="one entry per shard"):
+        Partition((10, 10), (8,), (16,))
+
+
+def test_repartitioner_balances_weights_and_sizes_bn():
+    """Heavy head of the catalog -> shorter head shards with narrower
+    blocks; every shard carries ~equal total weight."""
+    w = np.concatenate([np.full(200, 10.0), np.full(800, 1.0)])
+    part = Repartitioner(target_blocks=8).plan(w, 4)
+    assert part.n == 1000 and part.n_shards == 4
+    totals = [w[s:s + ln].sum()
+              for s, ln in zip(part.starts, part.lengths)]
+    assert max(totals) <= 1.6 * min(totals), totals
+    assert part.lengths[0] < part.lengths[-1]
+    assert part.bns[0] < part.bns[-1]
+    assert all(b % 8 == 0 for b in part.bns)
+    # skew statistic
+    assert Repartitioner.skew([1, 1, 1, 1]) == 1.0
+    assert Repartitioner.skew([3, 1, 1, 1]) == 2.0
+    assert Repartitioner.skew([]) == 1.0
+
+
+@pytest.mark.parametrize("lengths,bns", [
+    ((100, 150, 100), (16, 64, 24)),      # three bn-groups
+    ((50, 300), (8, 8)),                  # one group, ragged lengths
+    ((0, 350), (16, 256)),                # empty first shard
+])
+def test_heterogeneous_partition_bit_identical_to_uniform(lengths, bns):
+    """A repartitioned layout changes performance knobs only: pruned AND
+    exact answers stay bit-identical to the uniform single-launch layout."""
+    items = _factors(350, 16, 3)
+    users = _factors(8, 16, 4)
+    ref = _sharded(items, n_shards=2, min_overlap=2, bucket=512)
+    svc = _sharded(items, n_shards=len(lengths), min_overlap=2, bucket=512)
+    svc.compact(partition=Partition.from_lengths(lengths, bns))
+    for exact in (False, True):
+        a = ref.query(users, 10, exact=exact)
+        b = svc.query(users, 10, exact=exact)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+        np.testing.assert_array_equal(a.n_scored, b.n_scored)
+
+
+def test_heterogeneous_partition_dense_reference_parity():
+    """The dense (Q, N)-mask oracle agrees with the fused multi-group
+    launch on a heterogeneous partition, including per-shard counts."""
+    items = _factors(300, 16, 5)
+    users = _factors(6, 16, 6)
+    svc = _sharded(items, n_shards=3, min_overlap=2, bucket=512)
+    svc.compact(partition=Partition.from_lengths((60, 180, 60), (16, 64, 8)))
+    svc.delete([10, 100, 299])            # exercise kill across groups
+    base = svc.base
+    tau, vals = sparse_map(jnp.asarray(users), CFG)
+    q_mask = jnp.asarray(np.asarray(vals) != 0.0)
+    got = base.query(jnp.asarray(users), tau, q_mask, 10)
+    want = base.query_dense_reference(jnp.asarray(users), tau, q_mask, 10)
+    np.testing.assert_array_equal(np.asarray(got.rows),
+                                  np.asarray(want.rows))
+    real = np.asarray(want.scores) > -1e37
+    np.testing.assert_array_equal(np.asarray(got.scores)[real],
+                                  np.asarray(want.scores)[real])
+    np.testing.assert_array_equal(np.asarray(got.shard_candidates),
+                                  np.asarray(want.shard_candidates))
+
+
+def test_metrics_maintenance_counters_and_block_skew():
+    m = ServiceMetrics()
+    m.record_compact()
+    m.record_compact(async_=True)
+    m.record_compact_slice()
+    m.record_repartition(skew_before=2.5)
+    m.record_query_stats(block_candidates=np.array([[3, 1], [1, 1]]))
+    snap = m.snapshot()
+    assert snap["n_compactions"] == 2
+    assert snap["n_async_compactions"] == 1
+    assert snap["n_compact_slices"] == 1
+    assert snap["n_repartitions"] == 1
+    assert snap["last_repartition_skew"] == 2.5
+    assert snap["block_balance"] == pytest.approx(4 / 3)
+    # a repartition that changes the block count restarts the accumulator
+    m.record_query_stats(block_candidates=np.array([[1, 1, 1]]))
+    assert m.block_candidates.shape == (3,)
 
 
 # ------------------------------------------------------- device placement
