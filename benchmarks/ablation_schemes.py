@@ -8,7 +8,6 @@ matched thresholds.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig

@@ -1,0 +1,195 @@
+"""Benchmark regression gate: current BENCH_*.json vs committed baselines.
+
+Two kinds of checks:
+
+* **Invariants** (no tolerance — these are correctness, not speed): fused
+  kernel recall parity on every retrieval point, multi-host answers
+  bit-identical to single-host, background compaction p99 strictly below
+  the synchronous stop-the-world rebuild.
+* **Regressions** (tolerance-gated — CI machines are noisy, so the default
+  tolerance is generous; catching 3x cliffs is the goal, not 5% drift):
+  service-curve p99 per (mode, batch size), compaction-scenario async p99,
+  multi-host p99, and the fused kernel's speedup over the dense baseline.
+
+Usage (what the CI jobs run after their benchmark smoke steps):
+
+    python benchmarks/check_regression.py --kind service \\
+        --current BENCH_service.json \\
+        --baseline benchmarks/baselines/BENCH_service.json
+    python benchmarks/check_regression.py --kind retrieval \\
+        --current BENCH_retrieval.json \\
+        --baseline benchmarks/baselines/BENCH_retrieval.json
+
+Exit code 1 with a per-check report on any failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+class Gate:
+    def __init__(self) -> None:
+        self.failures: list[str] = []
+        self.passes: list[str] = []
+
+    def check(self, ok: bool, label: str, detail: str = "") -> None:
+        if ok:
+            self.passes.append(label)
+        else:
+            self.failures.append(f"{label}: {detail}" if detail else label)
+
+    def ratio(
+        self, label: str, current: float, baseline: float, tolerance: float
+    ) -> None:
+        """Fail when current exceeds baseline by more than tolerance x."""
+        if baseline is None or current is None:
+            self.check(False, label, "metric missing")
+            return
+        if baseline <= 0:
+            self.check(current <= 0, label, f"baseline {baseline} degenerate")
+            return
+        detail = (
+            f"current {current:.2f} > baseline {baseline:.2f} "
+            f"x tolerance {tolerance}"
+        )
+        self.check(current <= baseline * tolerance, label, detail)
+
+    def report(self) -> int:
+        for p in self.passes:
+            print(f"  ok   {p}")
+        for f in self.failures:
+            print(f"  FAIL {f}")
+        n = len(self.passes) + len(self.failures)
+        if self.failures:
+            print(f"regression gate: {len(self.failures)}/{n} checks failed")
+            return 1
+        print(f"regression gate: all {n} checks passed")
+        return 0
+
+
+def check_service(current: dict, baseline: dict, tol: float) -> Gate:
+    gate = Gate()
+    comp = current.get("compaction", {})
+    gate.check(
+        bool(current.get("curves", {}).get("exact"))
+        and bool(current.get("curves", {}).get("gam")),
+        "service curves present",
+    )
+    sync_p99 = comp.get("sync", {}).get("p99_ms")
+    async_p99 = comp.get("async", {}).get("p99_ms")
+    gate.check(
+        sync_p99 is not None and async_p99 is not None and async_p99 < sync_p99,
+        "background compaction beats stop-the-world on p99",
+        f"async {async_p99} vs sync {sync_p99}",
+    )
+    mh = current.get("multihost")
+    gate.check(bool(mh), "multihost scenario recorded")
+    if mh:
+        gate.check(
+            bool(mh.get("parity")),
+            "multihost bit-identical to single-host sharded",
+            f"mode={mh.get('mode')}",
+        )
+        if mh.get("n_hosts", 1) > 1:  # 1 host: nothing to fail over to
+            gate.check(
+                mh.get("failover", {}).get("n_failovers", 0) >= 1,
+                "failover exercised in multihost scenario",
+            )
+
+    base_curves = baseline.get("curves", {})
+    for mode, points in current.get("curves", {}).items():
+        base_points = {p["batch_size"]: p for p in base_curves.get(mode, [])}
+        for p in points:
+            b = base_points.get(p["batch_size"])
+            if b is None:
+                continue
+            gate.ratio(
+                f"curve {mode} bs={p['batch_size']} p99",
+                p.get("p99_ms"),
+                b.get("p99_ms"),
+                tol,
+            )
+    b_comp = baseline.get("compaction", {})
+    gate.ratio(
+        "compaction async p99",
+        async_p99,
+        b_comp.get("async", {}).get("p99_ms"),
+        tol,
+    )
+    b_mh = baseline.get("multihost")
+    if mh and b_mh:
+        gate.ratio("multihost p99", mh.get("p99_ms"), b_mh.get("p99_ms"), tol)
+        gate.ratio(
+            "multihost failover p99",
+            mh.get("failover", {}).get("p99_ms"),
+            b_mh.get("failover", {}).get("p99_ms"),
+            tol,
+        )
+    return gate
+
+
+def check_retrieval(current: dict, baseline: dict, tol: float) -> Gate:
+    gate = Gate()
+    points = current.get("points", [])
+    gate.check(bool(points), "retrieval points present")
+    for p in points:
+        gate.check(
+            bool(p.get("recall_parity")),
+            f"recall parity at n_items={p.get('n_items')}",
+        )
+    base_points = {p["n_items"]: p for p in baseline.get("points", [])}
+    for p in points:
+        b = base_points.get(p["n_items"])
+        if b is None:
+            continue
+        gate.ratio(
+            f"fused kernel ms at n_items={p['n_items']}",
+            p.get("fused_ms"),
+            b.get("fused_ms"),
+            tol,
+        )
+        # speedup shrinking by more than tol is a regression even if
+        # absolute times moved with the machine
+        gate.ratio(
+            f"dense/fused speedup at n_items={p['n_items']} (inverted)",
+            b.get("speedup"),
+            p.get("speedup"),
+            tol,
+        )
+    return gate
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", choices=["service", "retrieval"], required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    tolerance_help = (
+        "max allowed current/baseline ratio on latency metrics "
+        "(generous: CI machines are noisy; the gate exists to catch "
+        "cliffs and broken invariants, not jitter)"
+    )
+    ap.add_argument("--tolerance", type=float, default=3.0, help=tolerance_help)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    header = (
+        f"checking {args.kind}: {args.current} vs {args.baseline} "
+        f"(tolerance {args.tolerance}x)"
+    )
+    print(header)
+    if args.kind == "service":
+        gate = check_service(current, baseline, args.tolerance)
+    else:
+        gate = check_retrieval(current, baseline, args.tolerance)
+    return gate.report()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,6 @@
 accuracy (2b).  U, V ~ N(0,1), R = U V^T, Z = [U; V] (§6.1)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import KAPPA, build_methods, evaluate
 from repro.data import synthetic_ratings

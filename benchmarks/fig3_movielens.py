@@ -3,7 +3,6 @@ recovery accuracy (3b).  Factors learned by the JAX MF trainer on the
 MovieLens100k-statistics surrogate (DESIGN.md §7)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import KAPPA, build_methods, evaluate
 from repro.configs.gam_mf import MF

@@ -2,7 +2,6 @@
 achieved sparsity for the GAM method, swept over (threshold, min_overlap)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig

@@ -2,9 +2,6 @@
 vocab rows scored per decode step vs exact, with next-token agreement."""
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 

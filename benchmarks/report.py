@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import json
-import os
 
 ARCH_ORDER = ["qwen2-1.5b", "whisper-tiny", "internvl2-26b", "olmoe-1b-7b",
               "mamba2-780m", "tinyllama-1.1b", "deepseek-67b",

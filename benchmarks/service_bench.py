@@ -1,5 +1,6 @@
 """Retrieval-service benchmark: throughput-vs-latency curve, exact vs GAM,
-plus the skewed-catalog compaction scenario (p99 under maintenance).
+the skewed-catalog compaction scenario (p99 under maintenance), and the
+multi-host scenario (collective merge + failover across real processes).
 
 Streams single-user requests through the ``Microbatcher`` front-end at a
 sweep of batch sizes, for both the brute-force (``exact=True``) and the
@@ -7,6 +8,14 @@ GAM candidate-masked service path of a unified-API ``sharded`` retriever,
 and records QPS + p50/p99 per-request latency per point to
 ``BENCH_service.json`` — the service-tier counterpart of the paper's
 retrieval-speedup tables.
+
+The multi-host scenario spawns ``--multihost-procs`` real worker processes
+(``jax.distributed`` + gloo CPU collectives), serves the same catalog from
+the ``sharded-multihost`` backend (replication 2), marks one host down
+mid-stream, and records p50/p99 before/after the failover plus a parity
+flag (every answer bit-identical to an in-process single-host ``sharded``
+oracle).  Where process spawning is unavailable the same measurement runs
+in-process over the simulated placement (``mode`` records which ran).
 
 The compaction scenario builds a SKEWED clustered catalog (hot region,
 delete-heavy mutation burst), then replays one fixed arrival process
@@ -24,6 +33,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -170,6 +181,124 @@ def run_compaction_scenario(args) -> dict:
     return out
 
 
+# ------------------------------------------------------------- multi-host
+
+
+def _multihost_specs(args) -> tuple[RetrieverSpec, RetrieverSpec]:
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+    common = dict(cfg=cfg, n_shards=max(args.shards, 2 * args.multihost_procs),
+                  min_overlap=args.min_overlap, kappa=args.kappa)
+    multi = RetrieverSpec(backend="sharded-multihost",
+                          n_hosts=args.multihost_procs,
+                          replication=min(2, args.multihost_procs),
+                          **common)
+    single = RetrieverSpec(backend="sharded", **common)
+    return multi, single
+
+
+def _multihost_measure(args, *, distributed: bool) -> dict:
+    """The shared measurement body: serve one fixed query stream from the
+    multi-host backend, fail one host halfway, and check every answer
+    bit-identical against an in-process single-host oracle."""
+    rng = np.random.default_rng(11)
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    multi_spec, single_spec = _multihost_specs(args)
+    svc = open_retriever(multi_spec, items=items)
+    oracle = open_retriever(single_spec, items=items)
+
+    bs = 8
+    n_batches = max(args.requests // bs, 12)
+    fail_at = n_batches // 2
+    warm = rng.normal(size=(bs, args.dim)).astype(np.float32)
+    svc.query(warm)
+    oracle.query(warm)
+    svc.metrics.reset()
+
+    # a single host has no surviving replica to fail over to — the
+    # failover leg then just measures the second half of the stream
+    fail_host = args.multihost_procs - 1 if args.multihost_procs > 1 else None
+    lats, parity = [], True
+    for b in range(n_batches):
+        users = rng.normal(size=(bs, args.dim)).astype(np.float32)
+        if b == fail_at and fail_host is not None:
+            svc.mark_down(fail_host)
+        t0 = time.perf_counter()
+        got = svc.query(users)
+        lats.append(time.perf_counter() - t0)
+        want = oracle.query(users)
+        parity = parity and bool(
+            np.array_equal(got.ids, want.ids)
+            and np.array_equal(got.scores, want.scores))
+    before = np.asarray(lats[:fail_at]) * 1e3
+    after = np.asarray(lats[fail_at:]) * 1e3
+    hosts = svc.maintenance_stats()["hosts"]
+    return {
+        "mode": "processes" if distributed else "simulated",
+        "n_hosts": args.multihost_procs,
+        "replication": min(2, args.multihost_procs),
+        "n_slices": hosts["n_slices"],
+        "n_requests": n_batches * bs,
+        "parity": parity,
+        "p50_ms": float(np.percentile(before, 50)),
+        "p99_ms": float(np.percentile(before, 99)),
+        "failover": {
+            "p50_ms": float(np.percentile(after, 50)),
+            "p99_ms": float(np.percentile(after, 99)),
+            "n_failovers": hosts["n_failovers"],
+            "routing": hosts["routing"],
+        },
+    }
+
+
+def _multihost_worker(args) -> None:
+    import jax
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(args.coordinator, args.multihost_procs,
+                               args.worker_id)
+    res = _multihost_measure(args, distributed=True)
+    if jax.process_index() == 0:
+        print("MULTIHOST_RESULT " + json.dumps(res), flush=True)
+
+
+def _spawn_multihost(args) -> dict | None:
+    from repro.launch.procs import free_coordinator, run_workers
+
+    base = [sys.executable, os.path.abspath(__file__),
+            "--multihost-worker", "--coordinator", free_coordinator(),
+            "--multihost-procs", str(args.multihost_procs),
+            "--items", str(args.items), "--dim", str(args.dim),
+            "--shards", str(args.shards), "--requests", str(args.requests),
+            "--kappa", str(args.kappa), "--threshold", str(args.threshold),
+            "--min-overlap", str(args.min_overlap)]
+    codes, outs = run_workers(
+        [base + ["--worker-id", str(i)]
+         for i in range(args.multihost_procs)], capture=True)
+    if any(codes):
+        return None
+    for out in outs:
+        for line in out.splitlines():
+            if line.startswith("MULTIHOST_RESULT "):
+                return json.loads(line[len("MULTIHOST_RESULT "):])
+    return None
+
+
+def run_multihost_scenario(args) -> dict:
+    out = None
+    if args.multihost_procs > 1:
+        out = _spawn_multihost(args)
+        if out is None:
+            print("multihost: worker spawn failed — measuring the "
+                  "in-process placement instead")
+    if out is None:
+        out = _multihost_measure(args, distributed=False)
+    print(f"multihost ({out['mode']}, {out['n_hosts']} hosts): "
+          f"p99={out['p99_ms']:.2f}ms, after failover "
+          f"p99={out['failover']['p99_ms']:.2f}ms, "
+          f"parity={'bit-identical' if out['parity'] else 'DIVERGED'}")
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, default=2048)
@@ -181,8 +310,20 @@ def main(argv=None) -> None:
                     default=[1, 4, 8, 16])
     ap.add_argument("--threshold", type=float, default=0.2)
     ap.add_argument("--min-overlap", type=int, default=2)
+    ap.add_argument("--multihost-procs", type=int, default=2,
+                    help="host processes for the multi-host scenario "
+                         "(1 = in-process placement only)")
+    ap.add_argument("--multihost-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--worker-id", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default="", help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_service.json")
     args = ap.parse_args(argv)
+
+    if args.multihost_worker:
+        _multihost_worker(args)
+        return
 
     rng = np.random.default_rng(0)
     items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
@@ -209,6 +350,7 @@ def main(argv=None) -> None:
         discard_mean = float(res.discarded_frac.mean())
 
     compaction = run_compaction_scenario(args)
+    multihost = run_multihost_scenario(args)
 
     out = {
         "config": {
@@ -219,6 +361,7 @@ def main(argv=None) -> None:
         "discard_mean": discard_mean,
         "curves": curves,
         "compaction": compaction,
+        "multihost": multihost,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

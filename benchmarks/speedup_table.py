@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import KAPPA, brute_oracle
 from repro.core.mapping import GamConfig

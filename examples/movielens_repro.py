@@ -4,7 +4,6 @@ accuracy-vs-discard comparison against all four baselines.
 
 Run:  PYTHONPATH=src python examples/movielens_repro.py
 """
-import numpy as np
 
 from benchmarks.common import build_methods, evaluate
 from repro.configs.gam_mf import MF

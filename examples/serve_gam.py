@@ -35,7 +35,7 @@ r_gam = gam.generate(batch)
 t_gam = time.time() - t0
 
 agree = float(np.mean(r_exact.tokens == r_gam.tokens))
-print(f"batch of 8, 16 new tokens each")
+print("batch of 8, 16 new tokens each")
 print(f"exact head: scored {cfg.vocab} vocab rows/step")
 print(f"GAM head:   scored {r_gam.n_scored_vocab:.0f} vocab rows/step "
       f"({r_gam.discard_frac:.1%} discarded -> "

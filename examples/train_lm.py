@@ -12,7 +12,7 @@ import tempfile
 
 import jax
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import restore_checkpoint
 from repro.configs.registry import get_config
 from repro.launch.train import train
 from repro.models.model import Model

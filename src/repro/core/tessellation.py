@@ -104,7 +104,8 @@ def enumerate_gamma(k: int, d: int = 1) -> np.ndarray:
     return rows / np.linalg.norm(rows, axis=1, keepdims=True)
 
 
-def exhaustive_tess_vector(z: np.ndarray, k: int | None = None, d: int = 1) -> np.ndarray:
+def exhaustive_tess_vector(z: np.ndarray, k: int | None = None,
+                           d: int = 1) -> np.ndarray:
     """Brute-force argmin_{a in Gamma} d(a, z) — the oracle for Lemmas 1 and 2."""
     z = np.asarray(z, dtype=np.float64)
     squeeze = z.ndim == 1

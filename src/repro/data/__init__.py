@@ -1,1 +1,4 @@
-from repro.data.pipeline import TokenPipeline, movielens_like_ratings, synthetic_ratings
+from repro.data.pipeline import (TokenPipeline, movielens_like_ratings,
+                                 synthetic_ratings)
+
+__all__ = ["TokenPipeline", "movielens_like_ratings", "synthetic_ratings"]

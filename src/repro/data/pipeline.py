@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["TokenPipeline", "synthetic_ratings", "movielens_like_ratings"]

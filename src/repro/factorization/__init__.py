@@ -1,1 +1,3 @@
 from repro.factorization.mf import MfConfig, train_mf
+
+__all__ = ["MfConfig", "train_mf"]

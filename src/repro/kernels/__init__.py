@@ -6,3 +6,5 @@ scores and top-kappa-reduces candidate blocks on chip (O(Q*kappa) HBM output);
 reference path."""
 from repro.kernels.ops import (decode_attention, gam_retrieve, gam_score,
                                tess_project)
+
+__all__ = ["decode_attention", "gam_retrieve", "gam_score", "tess_project"]

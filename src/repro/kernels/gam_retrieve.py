@@ -56,13 +56,40 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.gam_score import NEG
 
-__all__ = ["RetrievalMeta", "GamRetrieveResult", "build_retrieval_meta",
-           "gam_retrieve", "pack_patterns"]
+__all__ = ["RetrievalMeta", "GamRetrieveResult", "TOPK_EMPTY_ROW",
+           "build_retrieval_meta", "export_topk", "gam_retrieve",
+           "pack_patterns"]
 
 # Row sentinel for non-candidate tile entries: larger than any real global row
 # (catalogs < 2^30 rows) so the (score desc, row asc) tie-break at NEG always
 # prefers an accumulator "empty" slot (negative row) over a discarded item.
 _NO_ROW = np.int32(1 << 30)
+
+# Exported-accumulator sentinel for EMPTY top-kappa slots: the largest int32,
+# so it sorts after every real global row (< 2^30 + any shard offset < 2^31)
+# under the (score desc, row asc) total order while staying collective-safe
+# (int32 survives cross-host all-gathers that would truncate an int64 pad).
+TOPK_EMPTY_ROW = np.int32(np.iinfo(np.int32).max)
+
+
+def export_topk(vals, rows, *, offset: int = 0
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Accumulator export: kernel-local (vals, rows) -> merge-ready arrays.
+
+    Maps shard/group-local accumulator rows to GLOBAL rows by ``offset`` and
+    pins empty slots (score <= NEG, row -1) to :data:`TOPK_EMPTY_ROW`, so
+    any number of exported accumulators — per-bn-group launches on one host,
+    or per-host accumulators gathered by a cross-host collective — merge
+    under one ``lexsort((rows, -scores))`` into exactly the kernel's
+    (score desc, row asc) total order.  Output is (Q, kappa) f32 scores and
+    (Q, kappa) int32 global rows (int32 on purpose: the multi-host merge
+    all-gathers these, and int32 is exact under default-precision jax).
+    """
+    scores = np.asarray(vals, np.float32)
+    r = np.asarray(rows, np.int64)
+    r = np.where((r < 0) | (scores <= NEG / 2), int(TOPK_EMPTY_ROW),
+                 r + int(offset))
+    return scores, r.astype(np.int32)
 
 
 # --------------------------------------------------------------- metadata

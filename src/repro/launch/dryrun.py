@@ -53,6 +53,20 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalised across jax versions.
+
+    Older jaxlibs return one properties dict per device program (a list);
+    newer ones return the dict directly.  Every consumer (dry-run ledger,
+    perf probe, roofline, tests) reads through here so the jax pin can move
+    without breaking the launchers again.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device bytes moved by each collective kind, parsed from the SPMD
     per-partition HLO module."""
@@ -125,7 +139,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     rec["compile_s"] = round(time.time() - t0, 1)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     rec["bytes_per_device"] = {
         "argument": getattr(mem, "argument_size_in_bytes", None),
         "output": getattr(mem, "output_size_in_bytes", None),

@@ -29,7 +29,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES
-from repro.launch.dryrun import build_lowered, collective_bytes
+from repro.launch.dryrun import (build_lowered, collective_bytes,
+                                 cost_analysis_dict)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS, _with_layers, model_flops)
@@ -100,10 +101,11 @@ def build_gam_lowered(cfg: ModelConfig, shape, mesh, *, coarse_k=128,
 
 
 def _probe(cfg, shape, mesh, *, gam_head=False):
-    build = (lambda c: build_gam_lowered(c, shape, mesh) if gam_head
-             else build_lowered(c, shape, mesh))
+    def build(c):
+        return (build_gam_lowered(c, shape, mesh) if gam_head
+                else build_lowered(c, shape, mesh))
     compiled = build(cfg).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     return {"flops": cost.get("flops", 0.0),

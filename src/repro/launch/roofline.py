@@ -24,7 +24,8 @@ import json
 from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES
-from repro.launch.dryrun import SKIPS, build_lowered, collective_bytes
+from repro.launch.dryrun import (SKIPS, build_lowered, collective_bytes,
+                                 cost_analysis_dict)
 from repro.launch.mesh import make_production_mesh
 
 PEAK_FLOPS = 197e12      # bf16 / chip
@@ -56,7 +57,7 @@ def _costs(cfg, shape_name, mesh):
     shape = SHAPES[shape_name]
     lowered = build_lowered(cfg, shape, mesh)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     return {

@@ -1,5 +1,6 @@
 """Serving launcher: batched generation with optional GAM-accelerated head,
-or (with ``--service``) the sharded streaming retrieval service.
+or (with ``--service``) the sharded streaming retrieval service —
+single-process, or spanning real host processes with ``--hosts N``.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
@@ -7,10 +8,22 @@ Usage:
 
   PYTHONPATH=src python -m repro.launch.serve --service \
       --items 2000 --dim 16 --shards 2 --requests 64 --service-batch 8
+
+  PYTHONPATH=src python -m repro.launch.serve --service --hosts 2 \
+      --replication 2 --items 2000 --shards 4 [--fail-host 1]
+
+``--hosts N`` spawns N local worker processes, joins them into one
+``jax.distributed`` mesh (gloo CPU collectives) and serves the catalog from
+the ``sharded-multihost`` backend: every worker drives the identical SPMD
+request stream, each computes only the placement slices routed to it, and
+the top-kappa accumulators merge through the cross-host collective.
+``--fail-host H`` marks host H down halfway through the stream to
+demonstrate exact failover onto the surviving replicas.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -108,6 +121,116 @@ def serve_retrieval(args):
               f"{len(restored.delta)}; probe queries bit-identical)")
 
 
+def _spawn_hosts(args) -> int:
+    """Driver half of ``--hosts N``: spawn N copies of this launcher as
+    worker processes sharing one local coordinator, and aggregate their
+    exit codes (demo/CI — a real deployment launches one worker per
+    machine with the same flags)."""
+    from repro.launch.procs import free_coordinator, run_workers
+
+    coordinator = free_coordinator()
+    codes, _ = run_workers(
+        [[sys.executable, "-m", "repro.launch.serve", *sys.argv[1:],
+          "--host-id", str(i), "--coordinator", coordinator]
+         for i in range(args.hosts)])
+    if any(codes):
+        print(f"FAILED: host exit codes {codes}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def serve_retrieval_multihost(args):
+    """SPMD worker body of ``--hosts N``: every process runs this function
+    with identical arguments, so catalogs, mutations and queries line up
+    across the mesh (the microbatcher front-end stays out of the loop —
+    its deadline coalescing is wall-clock dependent and would diverge)."""
+    from repro.core.mapping import GamConfig
+    from repro.retriever import RetrieverSpec, open_retriever
+
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(args.coordinator, args.hosts, args.host_id)
+    me = jax.process_index()
+
+    rng = np.random.default_rng(0)       # same catalog on every host
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree",
+                    threshold=args.gam_item_threshold)
+    spec = RetrieverSpec(
+        cfg=cfg, backend="sharded-multihost", n_shards=args.shards,
+        n_hosts=args.hosts, replication=args.replication,
+        min_overlap=args.gam_min_overlap, kappa=args.kappa,
+        batch_size=args.service_batch)
+    svc = open_retriever(spec, items=items)
+
+    bs = args.service_batch
+    warm = rng.normal(size=(bs, args.dim)).astype(np.float32)
+    svc.query(warm)                       # exclude compiles from the clock
+    svc.metrics.reset()
+
+    n_batches = max(1, args.requests // bs)
+    lat = []
+    for b in range(n_batches):
+        users = rng.normal(size=(bs, args.dim)).astype(np.float32)
+        if args.fail_host is not None and b == n_batches // 2:
+            svc.mark_down(args.fail_host)
+        if b % 4 == 3:                    # interleaved SPMD upserts
+            svc.upsert([args.items + b],
+                       rng.normal(size=(1, args.dim)).astype(np.float32))
+        t0 = time.perf_counter()
+        svc.query(users)
+        lat.append(time.perf_counter() - t0)
+        # feed the skew signal (the microbatcher does this on the
+        # single-host path); the gathered per-shard candidate counts are
+        # identical on every host, so the rebalance trigger stays SPMD
+        svc.record_last_query_stats()
+        if args.auto_compact and len(svc.delta) >= args.auto_compact:
+            svc.compact(async_=True)
+        if args.rebalance:
+            svc.maybe_rebalance(args.rebalance)
+    while svc.maintenance_stats()["compaction"]["active"]:
+        svc.compaction_step()
+
+    if me == 0:
+        ms = svc.maintenance_stats()
+        hosts = ms["hosts"]
+        lat_ms = np.asarray(lat) * 1e3
+        print(f"multihost service: {args.items} items, {args.shards} shards "
+              f"on {args.hosts} hosts (replication={args.replication}, "
+              f"{hosts['n_slices']} slices)")
+        if args.rebalance:
+            print(f"rebalance: {ms['repartition']['n_repartitions']} "
+                  f"repartitions (threshold {args.rebalance})")
+        print(f"served {n_batches * bs} requests  "
+              f"p50={np.percentile(lat_ms, 50):.2f}ms "
+              f"p99={np.percentile(lat_ms, 99):.2f}ms")
+        print(f"routing={hosts['routing']}  down={hosts['down']}  "
+              f"failovers={hosts['n_failovers']}  "
+              f"host load={hosts['host_load']}")
+    if args.snapshot and args.replication != args.hosts:
+        # the backend would raise UnsupportedOp (no host holds every
+        # placement slice) — say so instead of silently dropping the flag
+        if me == 0:
+            print(f"--snapshot skipped: requires --replication == --hosts "
+                  f"(got {args.replication} != {args.hosts}) so one host "
+                  f"holds every placement slice")
+    elif args.snapshot:
+        # SPMD snapshot demo: host 0 writes (it holds every slice), a
+        # barrier publishes the file, then EVERY host restores and probes
+        # (queries are collective — all processes must participate)
+        from jax.experimental import multihost_utils
+        if me == 0:
+            svc.snapshot(args.snapshot)
+        multihost_utils.sync_global_devices("snapshot written")
+        restored = open_retriever(spec, snapshot=args.snapshot)
+        probe = rng.normal(size=(4, args.dim)).astype(np.float32)
+        a, b = svc.query(probe), restored.query(probe)
+        assert (np.array_equal(a.ids, b.ids)
+                and np.array_equal(a.scores, b.scores))
+        if me == 0:
+            print(f"snapshot v3 -> {args.snapshot} (probe bit-identical)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
@@ -132,6 +255,19 @@ def main():
     ap.add_argument("--service-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--gam-item-threshold", type=float, default=0.2)
+    ap.add_argument("--hosts", type=int, default=1, metavar="N",
+                    help="serve from N host processes (sharded-multihost "
+                         "backend over jax.distributed; spawns N local "
+                         "workers for demo/CI)")
+    ap.add_argument("--replication", type=int, default=1, metavar="R",
+                    help="replicas per placement slice (failover capacity)")
+    ap.add_argument("--fail-host", type=int, default=None, metavar="H",
+                    help="mark host H down halfway through the stream "
+                         "(demonstrates exact failover)")
+    ap.add_argument("--host-id", type=int, default=None,
+                    help=argparse.SUPPRESS)     # worker-internal
+    ap.add_argument("--coordinator", default=None,
+                    help=argparse.SUPPRESS)     # worker-internal
     ap.add_argument("--auto-compact", type=int, default=0, metavar="N",
                     help="start a background compaction whenever the delta "
                          "segment reaches N rows (0 = never)")
@@ -143,6 +279,21 @@ def main():
                          "verify a restore answers bit-identically")
     args = ap.parse_args()
 
+    if args.service and args.hosts > 1:
+        if args.fail_host is not None:
+            # fail fast (not NoLiveReplica tracebacks halfway through the
+            # stream): failing a host needs a surviving replica, and the
+            # failed host must exist
+            if args.replication < 2:
+                ap.error("--fail-host needs --replication >= 2 (a failed "
+                         "host's slices must have a surviving replica)")
+            if not 0 <= args.fail_host < args.hosts:
+                ap.error(f"--fail-host {args.fail_host} out of range "
+                         f"[0, {args.hosts})")
+        if args.host_id is None:
+            sys.exit(_spawn_hosts(args))
+        serve_retrieval_multihost(args)
+        return
     if args.service:
         serve_retrieval(args)
         return

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, rope, truncated_normal
+from repro.models.layers import dense_init, rope
 
 __all__ = ["attn_init", "attention_train", "attention_decode", "init_kv_cache",
            "mla_init", "mla_train", "mla_decode", "init_mla_cache",
@@ -223,7 +223,7 @@ def attention_decode(params, x, cfg: ModelConfig, layer_cache: dict, *,
     return out, {"k": kc, "v": vc, "len": layer_cache["len"]}
 
 
-# ------------------------------------------------------------------ cross-attention (whisper decoder)
+# ------------------------------------------ cross-attention (whisper decoder)
 
 
 def cross_attn_init(key, cfg: ModelConfig, dtype) -> dict:

@@ -14,7 +14,6 @@ Caches are dicts of stacked per-layer arrays plus a scalar write cursor
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ hybrid family scans period-3 groups (rec, rec, attn) per RecurrentGemma.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

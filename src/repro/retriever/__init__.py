@@ -34,6 +34,10 @@ gam-device  fused ``gam_retrieve`` kernel: bit-packed patterns,
             block skipping, on-chip top-kappa
 sharded     item-axis shards + delta segment + microbatcher +
             metrics (the streaming service tier)
+sharded-multihost
+            the service tier spanning host processes: placement
+            slices with replication/failover, cross-host collective
+            top-kappa merge — bit-identical to ``sharded``
 srp-lsh / superbit-lsh / cro / pca-tree
             §5.1 baselines, build+query only
 ========== ========================================================
@@ -63,6 +67,7 @@ __all__ = [
     "BaselineRetriever",
     "BruteRetriever",
     "GamIndexRetriever",
+    "MultiHostShardedRetriever",
     "RetrievalResult",
     "Retriever",
     "RetrieverSpec",
@@ -77,6 +82,7 @@ _LAZY_CLASSES = {
     "BruteRetriever": "repro.retriever.brute",
     "GamIndexRetriever": "repro.retriever.gam",
     "ShardedRetriever": "repro.retriever.sharded",
+    "MultiHostShardedRetriever": "repro.retriever.multihost",
     "BaselineRetriever": "repro.retriever.baselines",
 }
 

@@ -44,6 +44,8 @@ class RetrieverSpec:
     bucket: int = 256             # posting-table bucket width
     whiten: bool = False          # per-coordinate 1/std rescale before phi
     n_shards: int = 1             # item-axis shards (sharded backend)
+    n_hosts: int = 1              # host processes (sharded-multihost backend)
+    replication: int = 1          # replicas per placement slice (multihost)
     delta_bucket: int | None = None   # delta-segment bucket (None = bucket)
     batch_size: int = 8           # microbatch size (fixed jit shape)
     max_delay_s: float = 2e-3     # microbatch deadline trigger
@@ -154,6 +156,8 @@ _MODULES: dict[str, tuple[str, str]] = {
     "gam": ("repro.retriever.gam", "GamIndexRetriever"),
     "gam-device": ("repro.retriever.gam", "GamIndexRetriever"),
     "sharded": ("repro.retriever.sharded", "ShardedRetriever"),
+    "sharded-multihost": ("repro.retriever.multihost",
+                          "MultiHostShardedRetriever"),
     "srp-lsh": ("repro.retriever.baselines", "BaselineRetriever"),
     "superbit-lsh": ("repro.retriever.baselines", "BaselineRetriever"),
     "cro": ("repro.retriever.baselines", "BaselineRetriever"),

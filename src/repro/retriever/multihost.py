@@ -1,0 +1,471 @@
+"""``sharded-multihost`` backend: the service tier spanning host processes.
+
+Extends the single-process ``sharded`` backend (everything about the
+lifecycle — catalog, delta tier, background compaction, repartitioner,
+microbatcher — is inherited unchanged) with a *placement* layer: the
+partition's shards are grouped into contiguous **placement slices**, each
+slice is replicated onto ``spec.replication`` hosts, and queries run the
+fused ``gam_retrieve`` kernel once per local slice, exporting the O(Q*kappa)
+accumulator through ``kernels.gam_retrieve.export_topk`` and merging across
+hosts with the collective in ``service.collective`` — an all-gather of the
+exported accumulators followed by the kernel's own (score desc, row asc)
+total order.  The result is bit-identical to the single-host ``sharded``
+backend over the same catalog, for any host count and any live-replica
+routing: replicas are exact copies, the router serves every slice exactly
+once, and the merge realises the same total order as one in-process kernel
+pass.
+
+Two deployment modes share one code path:
+
+  * **Distributed** (``jax.distributed`` initialised, ``jax.process_count()
+    == spec.n_hosts``): this process builds and holds only the slices it
+    replicates; the merge all-gathers accumulators across processes.  Every
+    process must drive the SAME lifecycle calls in the same order (SPMD
+    serving — the launcher ``launch/serve.py --hosts N`` and the CI
+    multi-process runner do exactly that).
+  * **Single-process placement** (the default, and what tier-1 tests run):
+    all slices live in this process; the "gather" degenerates to a
+    host-side stack.  Routing, replication and failover behave identically,
+    which is what makes the failover contract testable without real
+    processes.
+
+**Failover:** ``mark_down(host)`` / ``mark_up(host)`` update the health set;
+the deterministic router re-routes each affected slice to its first
+surviving replica (counted in ``ServiceMetrics.n_failovers``), and answers
+stay exact because replicas are byte-identical.  A slice whose every
+replica is down raises the typed
+:class:`~repro.service.collective.NoLiveReplica` — never a silently
+truncated answer.
+
+**Snapshots** are format v3 and carry the placement; a host that replicates
+every slice (always true single-process, and with ``replication ==
+n_hosts``) can snapshot, and a single-host ``sharded`` snapshot restores
+into this backend unchanged (the scale-out upgrade path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gam_retrieve import export_topk
+from repro.kernels.gam_score import NEG
+from repro.retriever.api import RetrieverSpec
+from repro.retriever.sharded import ShardedRetriever
+from repro.retriever.types import UnsupportedOp
+from repro.service import collective
+from repro.service.collective import HostPlacement
+from repro.service.repartition import Partition
+from repro.service.sharded_index import ShardedGamIndex
+
+__all__ = ["MultiHostIndex", "MultiHostShardedRetriever"]
+
+
+def _global_group_of(partition: Partition, row: int) -> int:
+    for g in range(len(partition.groups)):
+        lo, hi = partition.group_rows(g)
+        if lo <= row < hi:
+            return g
+    raise ValueError(f"row {row} outside partition")
+
+
+def _slice_index(g: ShardedGamIndex, placement: HostPlacement,
+                 sl: int) -> ShardedGamIndex:
+    """Carve placement slice ``sl`` out of a globally built index.
+
+    Pure array slicing — slice boundaries sit on shard boundaries, shard
+    caps are whole kernel blocks, and each of the slice's bn-groups lies
+    inside exactly one global bn-group — so the sub-index's device state is
+    byte-identical to what a from-scratch build of the slice would produce,
+    and every replica of a slice is an exact copy by construction.
+    """
+    part = g.partition
+    s_lo, s_hi = placement.slices[sl]
+    sub_part = Partition(part.lengths[s_lo:s_hi], part.bns[s_lo:s_hi],
+                         part.caps[s_lo:s_hi])
+    row_lo = part.offsets[s_lo]
+    cat_lo = part.starts[s_lo]
+    factor_parts, metas = [], []
+    for gg in range(len(sub_part.groups)):
+        glo, ghi = sub_part.group_rows(gg)       # slice-local flat rows
+        a, b = row_lo + glo, row_lo + ghi        # global flat rows
+        pg = _global_group_of(part, a)
+        p_lo, _ = part.group_rows(pg)
+        meta = g.metas[pg]
+        o, n = a - p_lo, b - a
+        factor_parts.append(g.factors_g[pg][o:o + n])
+        metas.append(dataclasses.replace(
+            meta,
+            item_bits_t=meta.item_bits_t[:, o:o + n],
+            block_union=meta.block_union[o // meta.bn:(o + n) // meta.bn],
+            block_spill=meta.block_spill[o // meta.bn:(o + n) // meta.bn],
+            spill8=meta.spill8[:, o:o + n],
+            n_rows=n, n_pad=n))
+    flat = (factor_parts[0] if len(factor_parts) == 1
+            else jnp.concatenate(factor_parts))
+    return ShardedGamIndex(
+        g.cfg, g.item_ids[cat_lo:cat_lo + sub_part.n],
+        g.tables[s_lo:s_hi], g.counts[s_lo:s_hi], g.spills[s_lo:s_hi],
+        flat, g._alive_host[row_lo:row_lo + sub_part.n_rows],
+        sub_part, g.min_overlap, g.bucket, None, metas)
+
+
+class MultiHostIndex:
+    """The multi-host main segment: per-slice sub-indexes + global mirrors.
+
+    Holds one :class:`ShardedGamIndex` per placement slice this host
+    replicates — carved lazily from the retained global index when every
+    slice is held (single-process mode; also keeps snapshots supported),
+    eagerly when remote slices were dropped — plus cheap host-side global
+    metadata (item ids, alive mask, row maps, per-shard posting loads) so
+    the maintenance subsystem keeps working against the full catalog
+    either way.
+    """
+
+    def __init__(self, global_index: ShardedGamIndex | None,
+                 slices: dict[int, ShardedGamIndex],
+                 placement: HostPlacement, partition: Partition,
+                 item_ids: np.ndarray, alive: np.ndarray,
+                 padded_ids: np.ndarray, row_of: dict[int, int],
+                 posting: np.ndarray, bucket: int, min_overlap: int, cfg):
+        self.global_index = global_index
+        self.slices = slices
+        self.placement = placement
+        self.partition = partition
+        self.item_ids = item_ids
+        self._alive_global = alive
+        self._padded_ids = padded_ids
+        self._row_of = row_of
+        self._posting = posting
+        self.bucket = bucket
+        self.min_overlap = min_overlap
+        self.cfg = cfg
+
+    @staticmethod
+    def from_global(g: ShardedGamIndex, placement: HostPlacement,
+                    local_host: int | None = None) -> "MultiHostIndex":
+        """Place a globally built index: hold the slices ``local_host``
+        replicates (all of them when ``local_host`` is None), plus global
+        host-side mirrors either way.
+
+        When every slice is held the global device index is retained (that
+        is what makes snapshots possible) and sub-indexes carve LAZILY on
+        first use — carving is a pure function of the (kill-maintained)
+        global state, so a late carve is bit-identical to an eager one and
+        routed-away or single-slice deployments never pay a second copy of
+        the device arrays.  When slices are missing the global index is
+        dropped and the held slices are carved now — they become the only
+        copy."""
+        held = [sl for sl in range(placement.n_slices)
+                if local_host is None
+                or local_host in placement.replicas[sl]]
+        keep_global = len(held) == placement.n_slices
+        slices = ({} if keep_global
+                  else {sl: _slice_index(g, placement, sl) for sl in held})
+        return MultiHostIndex(
+            g if keep_global else None, slices, placement, g.partition,
+            g.item_ids, np.array(g._alive_host, bool),
+            np.array(g._padded_ids), dict(g._row_of),
+            np.asarray(g.posting_load()), g.bucket, g.min_overlap, g.cfg)
+
+    def get_slice(self, sl: int) -> ShardedGamIndex:
+        """The sub-index serving placement slice ``sl`` (carved on demand
+        while the global index is retained; a slice spanning the whole
+        partition aliases the global index outright)."""
+        sub = self.slices.get(sl)
+        if sub is None:
+            if self.global_index is None:
+                raise ValueError(f"slice {sl} is not local to this host "
+                                 f"(held: {sorted(self.slices)})")
+            s_lo, s_hi = self.placement.slices[sl]
+            if (s_lo, s_hi) == (0, self.partition.n_shards):
+                sub = self.global_index
+            else:
+                sub = _slice_index(self.global_index, self.placement, sl)
+            self.slices[sl] = sub
+        return sub
+
+    # ------------------------------------------------------------- state
+
+    @property
+    def n_shards(self) -> int:
+        return self.partition.n_shards
+
+    @property
+    def n_live(self) -> int:
+        return int(self._alive_global.sum())
+
+    @property
+    def has_all_slices(self) -> bool:
+        return self.global_index is not None
+
+    # snapshot proxies (parent payload reads these off ``self.base``)
+    @property
+    def tables(self):
+        return self.global_index.tables
+
+    @property
+    def counts(self):
+        return self.global_index.counts
+
+    @property
+    def spills(self):
+        return self.global_index.spills
+
+    @property
+    def metas(self):
+        return self.global_index.metas if self.global_index is not None else []
+
+    @property
+    def _alive_host(self) -> np.ndarray:
+        return self._alive_global
+
+    def flat_factors(self) -> np.ndarray:
+        return self.global_index.flat_factors()
+
+    def posting_load(self) -> np.ndarray:
+        return self._posting
+
+    def total_blocks(self) -> int:
+        p = self.partition
+        return sum(p.caps[s] // p.bns[s] for s in range(p.n_shards))
+
+    def block_index(self, rows) -> np.ndarray:
+        """Global flat rows -> global kernel block ids (partition-derived,
+        so it works even without the global device index)."""
+        rows = np.asarray(rows, np.int64)
+        out = np.zeros(rows.shape, np.int64)
+        blk_off = 0
+        p = self.partition
+        for g in range(len(p.groups)):
+            lo, hi = p.group_rows(g)
+            bn = p.bns[p.groups[g][0]]
+            m = (rows >= lo) & (rows < hi)
+            out[m] = blk_off + (rows[m] - lo) // bn
+            blk_off += (hi - lo) // bn
+        return out
+
+    def slice_row_offset(self, sl: int) -> int:
+        return self.partition.offsets[self.placement.slices[sl][0]]
+
+    def slice_block_offset(self, sl: int) -> int:
+        p = self.partition
+        return sum(p.caps[s] // p.bns[s]
+                   for s in range(self.placement.slices[sl][0]))
+
+    def kill(self, ids) -> None:
+        """Tombstone catalog ids on every local replica (and the retained
+        global index), keeping the host-side global alive mirror in step."""
+        ids = np.asarray(ids, np.int64).ravel()
+        rows = [r for i in ids if (r := self._row_of.get(int(i))) is not None]
+        if rows:
+            self._alive_global[np.asarray(rows, np.int64)] = False
+        if self.global_index is not None:
+            self.global_index.kill(ids)
+        for sub in self.slices.values():
+            if sub is not self.global_index:    # whole-partition alias
+                sub.kill(ids)
+
+    def rows_to_ids(self, rows: np.ndarray, scores: np.ndarray) -> np.ndarray:
+        """Global rows -> catalog ids; empty (NEG-scored / sentinel) slots
+        -> -1.  Works on any host: the id map is a global mirror."""
+        rows = np.asarray(rows, np.int64)
+        safe = np.where((rows >= 0) & (rows < self._padded_ids.size), rows, 0)
+        out = self._padded_ids[safe]
+        out[np.asarray(scores) <= NEG / 2] = -1
+        return out
+
+    # ------------------------------------------------------------- query
+
+    def slices_topk(self, slice_ids, users_j, q_tau, q_mask, kappa: int,
+                    exact: bool) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, dict]:
+        """One host's contribution: fused-kernel top-kappa over each listed
+        local slice, exported to global rows and merged into a single
+        (Q, kappa) accumulator (score desc, row asc).  Also returns the
+        (Q, S) per-shard candidate counts (zeros outside the listed slices)
+        and per-slice block stats for the metrics."""
+        q = int(users_j.shape[0])
+        cand = np.zeros((q, self.partition.n_shards), np.int64)
+        stats = {"blocks": {}, "tiles": []}
+        if not slice_ids:
+            s, r = collective.empty_accumulators(q, kappa)
+            return s, r, cand, stats
+        parts_s, parts_r = [], []
+        for sl in slice_ids:
+            res = self.get_slice(sl).query(users_j, q_tau, q_mask, kappa,
+                                           exact=exact)
+            s, r = export_topk(res.scores, res.rows,
+                               offset=self.slice_row_offset(sl))
+            parts_s.append(s)
+            parts_r.append(r)
+            s_lo, s_hi = self.placement.slices[sl]
+            cand[:, s_lo:s_hi] = res.shard_candidates
+            stats["blocks"][sl] = res.block_candidates
+            nb = self.slice_blocks(sl)
+            stats["tiles"].append((res.tiles_skipped_frac, nb))
+        scores, rows = collective.merge_topk(
+            np.concatenate(parts_s, axis=1), np.concatenate(parts_r, axis=1),
+            kappa)
+        return scores, rows, cand, stats
+
+    def slice_blocks(self, sl: int) -> int:
+        p = self.partition
+        s_lo, s_hi = self.placement.slices[sl]
+        return sum(p.caps[s] // p.bns[s] for s in range(s_lo, s_hi))
+
+
+class MultiHostShardedRetriever(ShardedRetriever):
+    def __init__(self, spec: RetrieverSpec, **kw):
+        if spec.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {spec.n_hosts}")
+        if not 1 <= spec.replication <= spec.n_hosts:
+            raise ValueError(
+                f"replication must be in [1, n_hosts={spec.n_hosts}], "
+                f"got {spec.replication}")
+        self._distributed = jax.process_count() > 1
+        if self._distributed and spec.n_hosts != jax.process_count():
+            raise ValueError(
+                f"spec.n_hosts={spec.n_hosts} but jax.distributed runs "
+                f"{jax.process_count()} processes — they must match")
+        self._local_host = (jax.process_index() if self._distributed
+                            else None)
+        self._down: frozenset[int] = frozenset()
+        super().__init__(spec, **kw)
+
+    # ------------------------------------------------------------ placement
+
+    def _wrap(self, base: ShardedGamIndex) -> MultiHostIndex:
+        placement = HostPlacement.from_partition(
+            base.partition, self.spec.n_hosts, self.spec.replication)
+        return MultiHostIndex.from_global(base, placement,
+                                          local_host=self._local_host)
+
+    def _build_base(self, factors, ids, partition=None, premapped=None):
+        return self._wrap(super()._build_base(factors, ids,
+                                              partition=partition,
+                                              premapped=premapped))
+
+    def _adopt_base(self, base) -> None:
+        self.base = (base if isinstance(base, MultiHostIndex)
+                     else self._wrap(base))
+
+    # ------------------------------------------------------------ health
+
+    def mark_down(self, host: int) -> dict:
+        """Health hook: mark ``host`` down and re-route its slices to their
+        surviving replicas (idempotent; counted in the failover metric).
+        Queries stay exact afterwards; a slice left with NO live replica
+        raises :class:`NoLiveReplica` at query time."""
+        placement = self.base.placement
+        if not 0 <= host < placement.n_hosts:
+            raise ValueError(f"host {host} out of range "
+                             f"[0, {placement.n_hosts})")
+        if host not in self._down:
+            before = placement.route(self._down)
+            self._down = frozenset(self._down | {host})
+            after = placement.route(self._down)
+            n_fail = sum(1 for b, a in zip(before, after)
+                         if b == host and a is not None)
+            if n_fail:
+                self.metrics.record_failover(n_fail)
+        return self.host_status()
+
+    def mark_up(self, host: int) -> dict:
+        self._down = frozenset(self._down - {host})
+        return self.host_status()
+
+    def host_status(self) -> dict:
+        placement = self.base.placement
+        return {
+            "n_hosts": placement.n_hosts,
+            "replication": placement.replication,
+            "n_slices": placement.n_slices,
+            "local_host": self._local_host,
+            "down": sorted(self._down),
+            "routing": list(placement.route(self._down)),
+            "n_failovers": self.metrics.n_failovers,
+        }
+
+    # ------------------------------------------------------------ queries
+
+    def _base_topk(self, users_j, q_tau, q_mask, kappa, exact):
+        """Routed per-host kernel passes + collective accumulator merge.
+
+        Bit-identical to the parent's single-index path: each slice is
+        served by exactly one live replica, per-slice accumulators are
+        exported to global rows, and the merge realises the same
+        (score desc, row asc) total order the kernel itself uses."""
+        base: MultiHostIndex = self.base
+        placement = base.placement
+        routing = placement.route_strict(self._down)
+        q = int(users_j.shape[0])
+        per_host = np.zeros(placement.n_hosts, np.int64)
+        for h in routing:
+            per_host[h] += q
+        if self._distributed:
+            me = self._local_host
+            mine = tuple(sl for sl in range(placement.n_slices)
+                         if routing[sl] == me)
+            s, r, cand, st = base.slices_topk(mine, users_j, q_tau, q_mask,
+                                              kappa, exact)
+            local_tiles = np.array(
+                [sum(f * nb for f, nb in st["tiles"]),
+                 sum(nb for _, nb in st["tiles"])], np.float32)
+            cat_s, cat_r, g_cand, g_tiles = \
+                collective.allgather_accumulators(s, r, cand, local_tiles)
+            scores, rows = collective.merge_topk(cat_s, cat_r, kappa)
+            blocks = None              # remote block loads are not gathered
+            tile_num, tile_den = float(g_tiles[0]), float(g_tiles[1])
+            cand = g_cand.astype(np.int64)
+        else:
+            parts_s, parts_r, tiles = [], [], []
+            cand = np.zeros((q, base.partition.n_shards), np.int64)
+            blocks = np.zeros((q, base.total_blocks()), np.int64)
+            for h in sorted(set(routing)):
+                mine = tuple(sl for sl in range(placement.n_slices)
+                             if routing[sl] == h)
+                s, r, cand_h, st = base.slices_topk(mine, users_j, q_tau,
+                                                    q_mask, kappa, exact)
+                parts_s.append(s)
+                parts_r.append(r)
+                cand += cand_h
+                tiles.extend(st["tiles"])
+                for sl, bc in st["blocks"].items():
+                    if bc is not None:
+                        off = base.slice_block_offset(sl)
+                        blocks[:, off:off + bc.shape[1]] = bc
+            scores, rows = collective.merge_topk(
+                np.concatenate(parts_s, axis=1),
+                np.concatenate(parts_r, axis=1), kappa)
+            tile_num = sum(f * nb for f, nb in tiles)
+            tile_den = sum(nb for _, nb in tiles)
+        self.metrics.record_host_queries(per_host)
+        ids = base.rows_to_ids(rows, scores)
+        frac = tile_num / tile_den if tile_den else 0.0
+        stats = {"shard_candidates": cand, "block_candidates": blocks,
+                 "tiles_skipped_frac": float(frac)}
+        return scores, ids, stats
+
+    # ------------------------------------------------------------ state
+
+    def maintenance_stats(self) -> dict:
+        out = super().maintenance_stats()
+        out["hosts"] = self.host_status()
+        out["hosts"]["host_load"] = (
+            self.metrics.host_queries.tolist()
+            if self.metrics.host_queries is not None else None)
+        return out
+
+    def _snapshot_payload(self):
+        if not self.base.has_all_slices:
+            raise UnsupportedOp(
+                self.spec.backend, "snapshot",
+                "this host does not replicate every placement slice "
+                "(snapshot from a host with replication == n_hosts, or "
+                "from a single-process deployment)")
+        arrays, extra = super()._snapshot_payload()
+        extra["placement"] = self.base.placement.describe()
+        return arrays, extra

@@ -55,7 +55,7 @@ from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher
-from repro.service.repartition import Partition, Repartitioner
+from repro.service.repartition import MapCache, Partition, Repartitioner
 from repro.service.sharded_index import ShardedGamIndex
 
 __all__ = ["ShardedRetriever"]
@@ -76,6 +76,8 @@ class ShardedRetriever(Retriever):
         self._rebalanced = False       # a repartition plan governs the layout
         self.repartitioner = Repartitioner(
             target_blocks=int(spec.opt("rebalance_target_blocks", 8)))
+        # incremental phi-map cache: repartitions re-map only changed items
+        self._map_cache = MapCache(spec.cfg)
         self.base = self._build_base(
             np.zeros((0, spec.cfg.k), np.float32), np.zeros(0, np.int64))
         self.delta = DeltaSegment(
@@ -94,6 +96,13 @@ class ShardedRetriever(Retriever):
             n_shards=self.spec.n_shards, min_overlap=self.spec.min_overlap,
             bucket=self.spec.bucket, mesh=self.mesh, partition=partition,
             premapped=premapped)
+
+    def _adopt_base(self, base) -> None:
+        """Install a freshly built main segment (the swap point shared by
+        background compaction and restore).  Subclasses that serve the base
+        tier through a different placement (``sharded-multihost``) wrap the
+        incoming index here."""
+        self.base = base
 
     def _catalog_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """The merged (base ∪ delta) truth as id-sorted arrays."""
@@ -114,6 +123,7 @@ class ShardedRetriever(Retriever):
         self._planner = None           # a full build supersedes any in-flight
         self._rebalanced = False
         self.catalog = {int(i): f for i, f in zip(ids, items)}
+        self._map_cache.clear()
         self.base = self._build_base(items, ids)
         self.delta.clear()
         return self
@@ -125,6 +135,7 @@ class ShardedRetriever(Retriever):
             ids.size, self.spec.cfg.k)
         for i, f in zip(ids, factors):
             self.catalog[int(i)] = f
+        self._map_cache.invalidate(ids)     # changed rows re-map lazily
         self.base.kill(ids)                 # superseded main rows, if any
         self.delta.upsert(ids, factors)
         if self._planner is not None:       # replayed after the swap
@@ -135,6 +146,7 @@ class ShardedRetriever(Retriever):
         ids = np.asarray(ids, np.int64).ravel()
         for i in ids:
             self.catalog.pop(int(i), None)
+        self._map_cache.invalidate(ids)
         self.base.kill(ids)
         self.delta.delete(ids)
         if self._planner is not None:
@@ -238,7 +250,7 @@ class ShardedRetriever(Retriever):
         """The atomic flip: one reference assignment, then replay the
         journal of mutations that raced the build."""
         planner, self._planner = self._planner, None
-        self.base = planner.result()
+        self._adopt_base(planner.result())
         journal = planner.journal
         if journal:
             # every journaled id supersedes (or deletes) its frozen row
@@ -303,17 +315,22 @@ class ShardedRetriever(Retriever):
         """Per-item load estimate in id-sorted order: 1 + pattern nnz,
         times the observed per-block candidate traffic of the item's
         current block (when the metrics have seen any).  Returns
-        ``(weights, tau, mask)`` so the caller can reuse the mapping."""
+        ``(weights, tau, mask)`` so the caller can reuse the mapping.
+
+        The phi-mapping comes from the incremental :class:`MapCache`: only
+        rows whose factors changed since the last plan are re-mapped
+        (bit-identical to mapping the whole catalog — ``sparse_map`` is
+        row-wise), so repeated ``repartition()``/``maybe_rebalance()``
+        cycles on a large mostly-static catalog stop paying O(N) maps."""
         k = self.spec.cfg.k
         if ids.size == 0:
             return (np.zeros(0, np.float64), np.zeros((0, k), np.int32),
                     np.zeros((0, k), bool))
-        tau_j, vals = sparse_map(jnp.asarray(factors), self.spec.cfg)
-        tau, mask = np.asarray(tau_j), np.asarray(vals) != 0.0
+        tau, mask = self._map_cache.lookup(ids, factors)
         w = mask.sum(axis=1).astype(np.float64) + 1.0
         bc = self.metrics.block_candidates
         if bc is not None and bc.sum() > 0 and \
-                bc.size == sum(m.n_blocks for m in self.base.metas):
+                bc.size == self.base.total_blocks():
             rows = np.array([self.base._row_of.get(int(i), -1) for i in ids],
                             np.int64)
             m = rows >= 0
@@ -333,6 +350,7 @@ class ShardedRetriever(Retriever):
             "compaction": comp,
             "repartition": {
                 "rebalanced": self._rebalanced,
+                "map_cache": self._map_cache.stats(),
                 "n_repartitions": self.metrics.n_repartitions,
                 "shard_skew": self.metrics.shard_skew(),
                 "block_skew": self.metrics.block_skew(),
@@ -362,9 +380,8 @@ class ShardedRetriever(Retriever):
         tau, vals = sparse_map(users_j, self.spec.cfg)
         q_mask = vals != 0.0
 
-        base_res = self.base.query(users_j, tau, q_mask, kappa, exact=exact)
-        b_scores = np.asarray(base_res.scores, np.float32)
-        b_ids = self.base.rows_to_ids(np.asarray(base_res.rows), b_scores)
+        b_scores, b_ids, base_stats = self._base_topk(
+            users_j, tau, q_mask, kappa, exact)
         d_scores, d_ids, d_cand = self.delta.query(
             users_j, tau, q_mask, kappa, exact=exact)
 
@@ -384,30 +401,54 @@ class ShardedRetriever(Retriever):
         sc_out[:, :kk] = np.where(real, top_scores, -np.inf)
 
         n_live = self.base.n_live + len(self.delta)
-        n_cand = np.asarray(base_res.shard_candidates).sum(axis=-1) + d_cand
+        n_cand = base_stats["shard_candidates"].sum(axis=-1) + d_cand
         discard = 1.0 - n_cand / max(n_live, 1)
-        self._last_query_stats = {
-            "discard": discard,
-            "shard_candidates": np.asarray(base_res.shard_candidates),
-            "block_candidates": base_res.block_candidates,
-            "tiles_skipped_frac": base_res.tiles_skipped_frac,
-        }
+        self._last_query_stats = dict(base_stats, discard=discard)
         return RetrievalResult(
             ids=ids_out, scores=sc_out,
             n_scored=np.asarray(n_cand, np.int64),
             discarded_frac=discard,
         )
 
+    def _base_topk(self, users_j, q_tau, q_mask, kappa: int, exact: bool
+                   ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Top-kappa of the compacted base tier, in catalog-id space.
+
+        Returns ``(scores, ids, stats)`` with stats carrying the per-shard /
+        per-block candidate counts.  The ``sharded-multihost`` backend
+        overrides this with the routed per-host computation + collective
+        merge; everything around it (phi-mapping, delta merge, padding,
+        metrics) is shared."""
+        res = self.base.query(users_j, q_tau, q_mask, kappa, exact=exact)
+        scores = np.asarray(res.scores, np.float32)
+        ids = self.base.rows_to_ids(np.asarray(res.rows), scores)
+        stats = {"shard_candidates": np.asarray(res.shard_candidates),
+                 "block_candidates": res.block_candidates,
+                 "tiles_skipped_frac": res.tiles_skipped_frac}
+        return scores, ids, stats
+
+    def record_last_query_stats(self, n_real: int | None = None) -> None:
+        """Fold the most recent ``query()``'s discard / per-shard /
+        per-block candidate stats into the metrics — the skew signal
+        :meth:`maybe_rebalance` reads.  The microbatcher calls this per
+        batch with the count of real (non-padding) rows; direct-query
+        callers (e.g. the SPMD multi-host serve loop) call it with no
+        argument."""
+        st = self._last_query_stats
+        if not st:
+            return
+        sl = slice(None) if n_real is None else slice(n_real)
+        bc = st.get("block_candidates")
+        self.metrics.record_query_stats(
+            st["discard"][sl], st["shard_candidates"][sl],
+            bc[sl] if bc is not None else None)
+
     def _batch_query_fn(self, users: np.ndarray, n_real: int):
         """Fixed-shape step for the microbatcher; folds per-query discard,
         shard-balance and block-load stats into the metrics — real rows
         only, never the zero-vector padding."""
         res = self.query(users)
-        st = self._last_query_stats
-        bc = st.get("block_candidates")
-        self.metrics.record_query_stats(
-            st["discard"][:n_real], st["shard_candidates"][:n_real],
-            bc[:n_real] if bc is not None else None)
+        self.record_last_query_stats(n_real)
         return res.ids, res.scores
 
     def candidate_masks(self, users):
@@ -437,6 +478,12 @@ class ShardedRetriever(Retriever):
         return out
 
     def snapshot(self, path: str) -> None:
+        arrays, extra = self._snapshot_payload()
+        write_snapshot(path, self.spec, arrays, extra)
+
+    def _snapshot_payload(self) -> tuple[dict, dict]:
+        """The (arrays, extra) pair ``snapshot`` persists — split out so the
+        multi-host backend can append its placement before writing."""
         cat_ids, cat_fac = self._catalog_arrays()
         base, part = self.base, self.base.partition
         arrays = {
@@ -463,7 +510,7 @@ class ShardedRetriever(Retriever):
                  "meta": {"n_groups": len(base.metas),
                           "per_group": per_group},
                  "generation": self.generation}
-        write_snapshot(path, self.spec, arrays, extra)
+        return arrays, extra
 
     def restore(self, path: str) -> "ShardedRetriever":
         """Reconstruct the exact serving state — including tombstones, the
@@ -487,17 +534,18 @@ class ShardedRetriever(Retriever):
                 spill8=jnp.asarray(arrays[f"meta{g}_spill8"]),
                 p=self.spec.cfg.p, words=int(m["words"]), bn=int(m["bn"]),
                 n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"])))
-        self.base = ShardedGamIndex(
+        self._adopt_base(ShardedGamIndex(
             self.spec.cfg, np.asarray(arrays["base_item_ids"], np.int64),
             jnp.asarray(arrays["base_tables"]),
             jnp.asarray(arrays["base_counts"]),
             jnp.asarray(arrays["base_spills"]),
             jnp.asarray(arrays["base_factors"]),
             np.asarray(arrays["base_alive"], bool),
-            part, self.spec.min_overlap, int(b["bucket"]), None, metas)
+            part, self.spec.min_overlap, int(b["bucket"]), None, metas))
         self.catalog = {int(i): f for i, f in zip(
             np.asarray(arrays["catalog_ids"], np.int64),
             np.asarray(arrays["catalog_factors"], np.float32))}
+        self._map_cache.clear()
         # DeltaSegment state is a deterministic function of its sorted
         # (ids, factors) — re-deriving it reproduces the packed patterns
         # and posting table bit-for-bit

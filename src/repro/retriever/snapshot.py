@@ -18,11 +18,13 @@ from repro.retriever.api import RetrieverSpec
 
 __all__ = ["read_snapshot", "write_snapshot"]
 
-# v2: sharded payload carries the partition (lengths/bns/caps), per-bn-group
-# meta arrays (meta<g>_*) and the serving generation instead of v1's single
-# n_shards/shard_cap + flat meta_* block — readers reject v1 files loudly
-# here rather than KeyError-ing mid-restore.
-SNAPSHOT_FORMAT = "repro.retriever/v2"
+# v3: adds the optional multi-host placement (``state["placement"]``) the
+# ``sharded-multihost`` backend writes.  v2 files (partition + per-bn-group
+# metas + generation) read unchanged — the placement is a deployment knob
+# re-derived from the opening spec, never result-bearing.  v1 files are
+# still rejected loudly here rather than KeyError-ing mid-restore.
+SNAPSHOT_FORMAT = "repro.retriever/v3"
+_READ_COMPAT = (SNAPSHOT_FORMAT, "repro.retriever/v2")
 
 # spec fields that change query RESULTS (not just performance): a snapshot
 # taken under one of these must not silently serve under another.
@@ -30,6 +32,12 @@ SNAPSHOT_FORMAT = "repro.retriever/v2"
 # unconditional candidates, so a different width changes candidate sets.
 _RESULT_FIELDS = ("backend", "min_overlap", "bucket", "whiten",
                   "delta_bucket")
+
+# result-equivalent backend upgrades a snapshot may cross: the multi-host
+# backend answers bit-identically to single-host ``sharded`` over the same
+# catalog, so a ``sharded`` file may scale OUT into a multi-host deployment
+# (the reverse stays rejected — scaling in silently would drop placement).
+_BACKEND_UPGRADES = {"sharded-multihost": ("sharded",)}
 
 
 def _cfg_meta(cfg: GamConfig) -> dict:
@@ -54,15 +62,18 @@ def read_snapshot(path: str, spec: RetrieverSpec
     """Load + validate a snapshot against the opening spec -> (arrays,
     backend state dict)."""
     arrays, header = load_arrays(path)
-    if header.get("format") != SNAPSHOT_FORMAT:
-        raise ValueError(f"{path}: not a retriever snapshot "
-                         f"(format={header.get('format')!r})")
+    if header.get("format") not in _READ_COMPAT:
+        raise ValueError(f"{path}: not a readable retriever snapshot "
+                         f"(format={header.get('format')!r}, "
+                         f"readers accept {list(_READ_COMPAT)})")
     if header["cfg"] != _cfg_meta(spec.cfg):
         raise ValueError(
             f"{path}: snapshot mapping schema {header['cfg']} does not match "
             f"spec cfg {_cfg_meta(spec.cfg)}")
-    saved = header["spec"]
+    saved = dict(header["spec"])
     mine = {f: getattr(spec, f) for f in _RESULT_FIELDS}
+    if saved["backend"] in _BACKEND_UPGRADES.get(spec.backend, ()):
+        saved["backend"] = spec.backend       # sanctioned scale-out restore
     if saved != mine:
         diff = {f: (saved[f], mine[f]) for f in _RESULT_FIELDS
                 if saved[f] != mine[f]}

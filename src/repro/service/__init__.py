@@ -74,13 +74,25 @@ Components
     per-item load weights; ``ServiceMetrics`` skew (max/mean candidate
     load) decides when rebalancing is worth a compaction.
 
-Not yet here (see ROADMAP): multi-host serving, shard replication/failover.
+``HostPlacement`` / collective merge (``collective.py``)
+    The multi-host layer: contiguous shard runs become placement slices
+    replicated onto host processes; the deterministic router serves each
+    slice from its first live replica, and per-host O(Q*kappa) exported
+    accumulators merge under the kernel's (score desc, row asc) total
+    order — the ``sharded-multihost`` backend
+    (``repro.retriever.multihost``) is bit-identical to single-host
+    ``sharded``, including after ``mark_down`` failovers.
+
+``MapCache`` (``repartition.py``)
+    Incremental per-item phi-map cache: ``repartition()`` re-maps only
+    items whose factors changed since the last plan.
 """
+from repro.service.collective import HostPlacement, NoLiveReplica
 from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher, QueryResult
-from repro.service.repartition import Partition, Repartitioner
+from repro.service.repartition import MapCache, Partition, Repartitioner
 from repro.service.service import GamService, ServiceConfig
 from repro.service.sharded_index import ShardedGamIndex, ShardTopK
 
@@ -88,7 +100,10 @@ __all__ = [
     "CompactionPlanner",
     "DeltaSegment",
     "GamService",
+    "HostPlacement",
+    "MapCache",
     "Microbatcher",
+    "NoLiveReplica",
     "Partition",
     "QueryResult",
     "Repartitioner",

@@ -54,6 +54,7 @@ reports the serving generation and the in-flight target generation.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mapping import GamConfig, sparse_map
@@ -62,8 +63,6 @@ from repro.service.sharded_index import (ShardedGamIndex, build_group_meta,
                                          build_shard_segment)
 
 __all__ = ["CompactionPlanner"]
-
-import jax.numpy as jnp
 
 # phase order of the state machine; "ready" is terminal
 PHASES = ("map", "segments", "meta", "finalize", "ready")

@@ -37,7 +37,9 @@ class ServiceMetrics:
         self.n_compact_slices = 0
         self.n_compact_aborts = 0
         self.n_repartitions = 0
+        self.n_failovers = 0                   # slice reroutes after mark_down
         self.last_repartition_skew = None      # shard skew that triggered it
+        self._host_queries = None              # (H,) queries served per host
         self._occupancy: list[float] = []      # real / padded per batch
         self._latencies: list[float] = []      # seconds, per request
         self._discards: list[float] = []       # fraction, per request
@@ -104,6 +106,20 @@ class ServiceMetrics:
     def record_compact_abort(self) -> None:
         self.n_compact_aborts += 1
 
+    def record_host_queries(self, per_host) -> None:
+        """(H,) queries served per host for one batch — the multi-host
+        load-balance signal (window restarts when H changes)."""
+        ph = np.asarray(per_host, np.float64)
+        if self._host_queries is not None and \
+                self._host_queries.shape != ph.shape:
+            self._host_queries = None
+        self._host_queries = (ph if self._host_queries is None
+                              else self._host_queries + ph)
+
+    def record_failover(self, n: int = 1) -> None:
+        """Placement slices rerouted to a surviving replica by mark_down."""
+        self.n_failovers += int(n)
+
     def record_repartition(self, skew_before: float | None = None) -> None:
         self.n_repartitions += 1
         if skew_before is not None:
@@ -137,6 +153,14 @@ class ServiceMetrics:
         repartition trigger statistic (None before any traffic)."""
         return self._skew(self._shard_cand)
 
+    @property
+    def host_queries(self) -> np.ndarray | None:
+        """(H,) accumulated queries served per host (None pre-traffic)."""
+        return self._host_queries
+
+    def host_skew(self) -> float | None:
+        return self._skew(self._host_queries)
+
     def block_skew(self) -> float | None:
         return self._skew(self._block_cand)
 
@@ -168,4 +192,8 @@ class ServiceMetrics:
             "n_compact_aborts": self.n_compact_aborts,
             "n_repartitions": self.n_repartitions,
             "last_repartition_skew": self.last_repartition_skew,
+            "n_failovers": self.n_failovers,
+            "host_load": (self._host_queries.tolist()
+                          if self._host_queries is not None else None),
+            "host_balance": self.host_skew(),
         }

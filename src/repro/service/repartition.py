@@ -16,6 +16,11 @@ per-item load weights and decides, from :class:`ServiceMetrics` skew
 statistics, when rebalancing is worth a compaction.  The plan is consumed by
 ``ShardedGamIndex.build(partition=...)`` (directly or through the background
 :class:`~repro.service.compaction.CompactionPlanner`).
+
+:class:`MapCache` is the repartitioner's incremental weight/map cache: the
+per-item phi-mapping (tau destinations + non-zero mask) is a pure per-row
+function of the factor row, so ``repartition()``'s plan step only needs to
+re-map items that changed since the last plan instead of the whole catalog.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["Partition", "Repartitioner"]
+__all__ = ["MapCache", "Partition", "Repartitioner"]
 
 
 def _round8(x: int) -> int:
@@ -139,6 +144,80 @@ class Partition:
                      for ln, bn in zip(lengths, bns))
         return Partition(tuple(int(x) for x in lengths),
                          tuple(int(b) for b in bns), caps)
+
+
+class MapCache:
+    """Incremental per-item phi-mapping cache (id -> (tau row, mask row)).
+
+    ``sparse_map`` is row-wise — each catalog row's (tau, mask) depends only
+    on that row's factors and the schema — so cached rows are bit-identical
+    to a fresh full-catalog mapping.  The service invalidates an id on every
+    upsert/delete; :meth:`lookup` then maps ONLY the missing rows (padded to
+    a power of two so the jit cache sees a bounded set of shapes) and
+    answers the rest from the cache.  This is the ROADMAP's incremental
+    weight/map cache: a repartition of an N-item catalog with M changed
+    items costs O(M) mapping work, not O(N).
+    """
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self._tau: dict[int, np.ndarray] = {}
+        self._mask: dict[int, np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._tau)
+
+    def clear(self) -> None:
+        self._tau.clear()
+        self._mask.clear()
+
+    def invalidate(self, ids) -> None:
+        """Drop cached rows (changed or deleted items)."""
+        for i in np.asarray(ids, np.int64).ravel():
+            self._tau.pop(int(i), None)
+            self._mask.pop(int(i), None)
+
+    def retain(self, live_ids) -> None:
+        """Bound memory: keep only the given (live) catalog ids."""
+        live = {int(i) for i in live_ids}
+        for i in [i for i in self._tau if i not in live]:
+            del self._tau[i], self._mask[i]
+
+    def lookup(self, ids: np.ndarray,
+               factors: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(tau, mask) rows for ``ids`` (aligned with ``factors``), mapping
+        only the cache misses.  Bit-identical to mapping the whole batch."""
+        import jax.numpy as jnp
+
+        from repro.core.mapping import sparse_map
+
+        ids = np.asarray(ids, np.int64).ravel()
+        n, k = ids.size, self.cfg.k
+        tau = np.zeros((n, k), np.int32)
+        mask = np.zeros((n, k), bool)
+        miss = [j for j, i in enumerate(ids) if int(i) not in self._tau]
+        self.misses += len(miss)
+        self.hits += n - len(miss)
+        if miss:
+            m = len(miss)
+            pad = 1 << (m - 1).bit_length()      # bounded jit-shape set
+            batch = np.zeros((pad, k), np.float32)
+            batch[:m] = factors[miss]
+            t_j, v_j = sparse_map(jnp.asarray(batch), self.cfg)
+            t = np.asarray(t_j)[:m].astype(np.int32)
+            v = np.asarray(v_j)[:m] != 0.0
+            for row, j in enumerate(miss):
+                self._tau[int(ids[j])] = t[row]
+                self._mask[int(ids[j])] = v[row]
+        for j, i in enumerate(ids):
+            tau[j] = self._tau[int(i)]
+            mask[j] = self._mask[int(i)]
+        return tau, mask
+
+    def stats(self) -> dict:
+        return {"size": len(self), "hits": self.hits, "misses": self.misses}
 
 
 class Repartitioner:

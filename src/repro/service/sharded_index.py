@@ -44,16 +44,13 @@ import numpy as np
 from repro.core.inverted_index import build_segment, candidate_mask_from_table
 from repro.core.mapping import GamConfig, sparse_map
 from repro.core.retrieval import masked_topk
-from repro.kernels.gam_retrieve import RetrievalMeta, pack_patterns
+from repro.kernels.gam_retrieve import RetrievalMeta, export_topk, pack_patterns
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
 from repro.service.repartition import Partition
 
 __all__ = ["ShardTopK", "ShardedGamIndex", "build_group_meta",
            "build_shard_segment"]
-
-# host-merge row sentinel: sorts after every real global row on score ties
-_FAR_ROW = np.int64(1) << 40
 
 
 @dataclasses.dataclass
@@ -359,6 +356,10 @@ class ShardedGamIndex:
             blk_off += meta.n_blocks
         return out
 
+    def total_blocks(self) -> int:
+        """Kernel blocks across every bn-group (the block-metrics width)."""
+        return sum(m.n_blocks for m in self.metas)
+
     def posting_load(self) -> np.ndarray:
         """(S,) total posting entries per shard — the balance statistic."""
         return np.asarray(jnp.sum(self.counts, axis=-1))
@@ -402,13 +403,11 @@ class ShardedGamIndex:
                              shard_candidates=self._shard_candidates(blk),
                              block_candidates=blk,
                              tiles_skipped_frac=float(res.skipped.mean()))
-        cat_s = np.concatenate(
-            [np.asarray(r.vals, np.float32) for r in results], axis=1)
-        cat_r = np.concatenate(
-            [np.where(np.asarray(r.rows, np.int64) >= 0,
-                      np.asarray(r.rows, np.int64)
-                      + self.partition.group_rows(g)[0], _FAR_ROW)
-             for g, r in enumerate(results)], axis=1)
+        exported = [export_topk(r.vals, r.rows,
+                                offset=self.partition.group_rows(g)[0])
+                    for g, r in enumerate(results)]
+        cat_s = np.concatenate([s for s, _ in exported], axis=1)
+        cat_r = np.concatenate([r for _, r in exported], axis=1)
         order = np.lexsort((cat_r, -cat_s), axis=-1)[:, :kappa]
         vals = np.take_along_axis(cat_s, order, axis=-1)
         rows = np.take_along_axis(cat_r, order, axis=-1)

@@ -3,3 +3,7 @@ from repro.training.optimizer import (
     AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_schedule,
     global_norm, sgd_update,
 )
+
+__all__ = ["AdamWConfig", "AdamWState", "EvalResult", "adamw_init",
+           "adamw_update", "cosine_schedule", "eval_batches", "global_norm",
+           "sgd_update"]

@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

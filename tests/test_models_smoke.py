@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import reduced
 from repro.configs.registry import ARCH_IDS, get_config, get_reduced_config
 from repro.models.model import Model
 

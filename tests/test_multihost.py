@@ -1,0 +1,365 @@
+"""Multi-host serving tier: placement, collective merge order, failover.
+
+Single-process placement mode (the default deployment of the
+``sharded-multihost`` backend) runs the identical routing/merge code the
+``jax.distributed`` deployment uses — the gather degenerates to a host-side
+stack — so the cross-host merge order, replication and failover contracts
+are all pinned here in tier-1; ``tests/multihost/run_multiprocess.py``
+re-runs the same scenario under real separate processes in CI.
+"""
+import os
+
+import numpy as np
+import pytest
+from conftest import CFG, unit_factors as _factors
+
+from repro.kernels.gam_retrieve import TOPK_EMPTY_ROW, export_topk
+from repro.kernels.gam_score import NEG
+from repro.retriever import RetrieverSpec, open_retriever
+from repro.service.collective import (
+    HostPlacement,
+    NoLiveReplica,
+    merge_topk,
+)
+from repro.service.repartition import MapCache, Partition
+
+
+def _spec(backend="sharded-multihost", **kw):
+    kw.setdefault("min_overlap", 2)
+    kw.setdefault("bucket", 512)
+    kw.setdefault("n_shards", 4)
+    if backend == "sharded-multihost":
+        kw.setdefault("n_hosts", 2)
+        kw.setdefault("replication", 2)
+    return RetrieverSpec(cfg=CFG, backend=backend, **kw)
+
+
+def _assert_same(a, b, tag=""):
+    np.testing.assert_array_equal(a.ids, b.ids, err_msg=tag)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=tag)
+
+
+# ---------------------------------------------------------------- placement
+
+
+def test_placement_from_partition_balances_and_replicates():
+    part = Partition.from_lengths((100, 100, 100, 100), (8, 8, 8, 8))
+    pl = HostPlacement.from_partition(part, n_hosts=2, replication=2)
+    assert pl.slices == ((0, 2), (2, 4))
+    assert pl.replicas == ((0, 1), (1, 0))
+    assert pl.slices_of(0) == (0, 1) and pl.slices_of(1) == (0, 1)
+
+
+def test_placement_skewed_lengths_balance_rows_not_shards():
+    part = Partition.from_lengths((600, 8, 8, 8), (8, 8, 8, 8))
+    pl = HostPlacement.from_partition(part, n_hosts=2, replication=1)
+    # the heavy shard alone outweighs the rest: it gets its own slice
+    assert pl.slices == ((0, 1), (1, 4))
+
+
+def test_placement_never_emits_empty_slices():
+    part = Partition.from_lengths((100, 0, 0), (8, 8, 8))
+    pl = HostPlacement.from_partition(part, n_hosts=3, replication=1)
+    assert all(hi > lo for lo, hi in pl.slices)
+    assert pl.n_slices == 3
+
+
+def test_placement_hot_shard_collapsing_all_cuts_stays_nonempty():
+    """One shard so heavy that every quantile cut lands on it: the fix-up
+    must still hand every slice a non-empty run (and the constructor now
+    rejects empty runs outright)."""
+    part = Partition.from_lengths((8, 8, 8, 1000, 8, 8, 8, 8), (8,) * 8)
+    pl = HostPlacement.from_partition(part, n_hosts=4, replication=2)
+    assert all(hi > lo for lo, hi in pl.slices)
+    assert pl.slices[-1][1] == 8 and pl.n_slices == 4
+    with pytest.raises(ValueError, match="non-empty"):
+        HostPlacement(2, 1, ((0, 2), (2, 2)), ((0,), (1,)))
+    # end-to-end: the skewed layout builds and serves
+    lengths = (8, 8, 8, 120, 8, 8, 8, 8)
+    items = _factors(sum(lengths), CFG.k, 13)
+    users = _factors(6, CFG.k, 14)
+    spec = _spec(n_shards=8, n_hosts=4, replication=2)
+    part = Partition.from_lengths(lengths, (8,) * 8)
+    single = open_retriever(_spec("sharded", n_shards=8), items=items)
+    multi = open_retriever(spec, items=items)
+    single.compact(partition=part)
+    multi.compact(partition=part)
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "hot-shard partition")
+
+
+def test_placement_fewer_shards_than_hosts():
+    part = Partition.from_lengths((50,), (8,))
+    pl = HostPlacement.from_partition(part, n_hosts=4, replication=2)
+    assert pl.n_slices == 1 and pl.replicas == ((0, 1),)
+
+
+def test_placement_routing_and_failover_order():
+    pl = HostPlacement(3, 2, ((0, 1), (1, 2), (2, 3)),
+                       ((0, 1), (1, 2), (2, 0)))
+    assert pl.route() == (0, 1, 2)
+    assert pl.route({1}) == (0, 2, 2)
+    assert pl.route({1, 2}) == (0, None, 0)
+    with pytest.raises(NoLiveReplica, match="slice 1"):
+        pl.route_strict({1, 2})
+
+
+def test_placement_validation():
+    with pytest.raises(ValueError, match="replication"):
+        HostPlacement(2, 3, ((0, 1),), ((0, 1),))
+    with pytest.raises(ValueError, match="contiguous"):
+        HostPlacement(2, 1, ((0, 1), (2, 3)), ((0,), (1,)))
+    with pytest.raises(ValueError, match="distinct"):
+        HostPlacement(2, 2, ((0, 2),), ((0, 0),))
+    with pytest.raises(ValueError, match="out of range"):
+        HostPlacement(2, 2, ((0, 2),), ((0, 5),))
+
+
+# ------------------------------------------------------------ merge order
+
+
+def test_merge_topk_realises_score_desc_row_asc():
+    neg = float(NEG)
+    scores = np.array([[3.0, 1.0, neg], [2.0, 2.0, 2.0]], np.float32)
+    rows = np.array([[7, 9, TOPK_EMPTY_ROW], [5, 1, 3]], np.int32)
+    s2 = np.array([[3.0, 2.0, neg], [2.0, neg, neg]], np.float32)
+    r2 = np.array([[4, 8, TOPK_EMPTY_ROW], [2, TOPK_EMPTY_ROW,
+                                            TOPK_EMPTY_ROW]], np.int32)
+    ms, mr = merge_topk(np.concatenate([scores, s2], axis=1),
+                        np.concatenate([rows, r2], axis=1), 4)
+    np.testing.assert_array_equal(mr[0], [4, 7, 8, 9])     # ties: row asc
+    np.testing.assert_array_equal(mr[1], [1, 2, 3, 5])
+    np.testing.assert_array_equal(ms[0], [3.0, 3.0, 2.0, 1.0])
+
+
+def test_export_topk_offsets_and_sentinels():
+    vals = np.array([[1.0, NEG]], np.float32)
+    rows = np.array([[2, -1]], np.int32)
+    s, r = export_topk(vals, rows, offset=100)
+    assert r.dtype == np.int32
+    np.testing.assert_array_equal(r, [[102, TOPK_EMPTY_ROW]])
+    np.testing.assert_array_equal(s, vals)
+
+
+# ------------------------------------------------------------ query parity
+
+
+@pytest.mark.parametrize("n_hosts,replication",
+                         [(1, 1), (2, 1), (2, 2), (4, 2)])
+def test_multihost_bit_identical_to_sharded(n_hosts, replication,
+                                            catalog, users):
+    single = open_retriever(_spec("sharded"), items=catalog)
+    multi = open_retriever(
+        _spec(n_hosts=n_hosts, replication=replication), items=catalog)
+    _assert_same(single.query(users, 10), multi.query(users, 10))
+    got = multi.query(users, 10, exact=True)
+    want = single.query(users, 10, exact=True)
+    _assert_same(want, got, "exact mode")
+    np.testing.assert_array_equal(got.n_scored, want.n_scored)
+    np.testing.assert_array_equal(got.discarded_frac, want.discarded_frac)
+
+
+def test_cross_host_tie_break_is_id_asc(users):
+    """Duplicate factor rows land in DIFFERENT placement slices, forcing
+    exact score ties across the host boundary — the collective merge must
+    break them by ascending catalog id exactly like one host would."""
+    base = _factors(60, CFG.k, 3)
+    items = np.concatenate([base, base])          # ids 0..59 == 60..119
+    single = open_retriever(_spec("sharded"), items=items)
+    multi = open_retriever(_spec(n_hosts=2, replication=1), items=items)
+    brute = open_retriever(_spec("brute"), items=items)
+    kappa = 13                                     # odd: splits tie groups
+    got = multi.query(base[:6], kappa, exact=True)
+    _assert_same(single.query(base[:6], kappa, exact=True), got)
+    np.testing.assert_array_equal(
+        brute.query(base[:6], kappa, exact=True).ids, got.ids)
+
+
+def test_multihost_lifecycle_parity(catalog, users):
+    single = open_retriever(_spec("sharded"), items=catalog)
+    multi = open_retriever(_spec(), items=catalog)
+    new = _factors(10, CFG.k, 4)
+    for r in (single, multi):
+        r.upsert(np.arange(500, 510), new)
+        r.delete([1, 2, 501])
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "after mutations")
+    for r in (single, multi):
+        r.compact()
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "after compact")
+
+
+def test_multihost_mid_compaction_and_post_repartition_parity(users):
+    items = _factors(260, CFG.k, 5)
+    single = open_retriever(_spec("sharded"), items=items)
+    multi = open_retriever(_spec(), items=items)
+    for r in (single, multi):
+        r.upsert(np.arange(400, 412), _factors(12, CFG.k, 6))
+        r.compact(async_=True)
+    steps = 0
+    while multi.maintenance_stats()["compaction"]["active"]:
+        _assert_same(single.query(users, 10), multi.query(users, 10),
+                     f"mid-compaction step {steps}")
+        steps += 1
+        assert steps < 100
+    while single.maintenance_stats()["compaction"]["active"]:
+        single.compaction_step()
+    assert steps > 0
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "after swap")
+    assert single.repartition(async_=False) == multi.repartition(async_=False)
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "after repartition")
+    _assert_same(single.query(users, 10, exact=True),
+                 multi.query(users, 10, exact=True),
+                 "after repartition (exact)")
+
+
+# ------------------------------------------------------------ failover
+
+
+def test_failover_reroutes_and_stays_exact(catalog, users):
+    multi = open_retriever(_spec(n_hosts=2, replication=2), items=catalog)
+    before = multi.query(users, 10)
+    st = multi.mark_down(0)
+    assert 0 in st["down"] and all(h == 1 for h in st["routing"])
+    assert multi.metrics.n_failovers >= 1
+    _assert_same(before, multi.query(users, 10), "served by replica")
+    multi.mark_up(0)
+    multi.mark_down(1)
+    _assert_same(before, multi.query(users, 10), "served by primary again")
+
+
+def test_failover_during_background_compaction(users):
+    items = _factors(220, CFG.k, 7)
+    single = open_retriever(_spec("sharded"), items=items)
+    multi = open_retriever(_spec(n_hosts=2, replication=2), items=items)
+    for r in (single, multi):
+        r.upsert(np.arange(300, 308), _factors(8, CFG.k, 8))
+        r.compact(async_=True)
+    multi.mark_down(0)
+    while multi.maintenance_stats()["compaction"]["active"]:
+        _assert_same(single.query(users, 10), multi.query(users, 10),
+                     "failed over, mid-compaction")
+    while single.maintenance_stats()["compaction"]["active"]:
+        single.compaction_step()
+    _assert_same(single.query(users, 10), multi.query(users, 10),
+                 "failed over, post-swap")
+
+
+def test_all_replicas_down_is_a_loud_error(catalog, users):
+    multi = open_retriever(_spec(n_hosts=2, replication=1), items=catalog)
+    multi.mark_down(0)
+    with pytest.raises(NoLiveReplica):
+        multi.query(users, 10)
+    multi.mark_up(0)
+    assert multi.query(users, 10).ids.shape == (len(users), 10)
+
+
+def test_mark_down_is_idempotent_and_validated(catalog):
+    multi = open_retriever(_spec(), items=catalog)
+    multi.mark_down(0)
+    n = multi.metrics.n_failovers
+    multi.mark_down(0)                       # no double-count
+    assert multi.metrics.n_failovers == n
+    with pytest.raises(ValueError, match="out of range"):
+        multi.mark_down(7)
+
+
+def test_host_load_metrics_and_status(catalog, users):
+    multi = open_retriever(_spec(n_hosts=2, replication=2), items=catalog)
+    multi.query(users, 10)
+    ms = multi.maintenance_stats()
+    assert ms["hosts"]["n_hosts"] == 2
+    assert ms["hosts"]["routing"] == [0, 1]
+    load = np.asarray(ms["hosts"]["host_load"])
+    assert load.shape == (2,) and load.sum() == 2 * len(users)
+    snap = multi.metrics.snapshot()
+    assert snap["n_failovers"] == 0 and snap["host_balance"] == 1.0
+
+
+# ------------------------------------------------------------ spec guards
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="replication"):
+        open_retriever(_spec(n_hosts=2, replication=3))
+    with pytest.raises(ValueError, match="n_hosts"):
+        open_retriever(_spec(n_hosts=0, replication=1))
+
+
+def test_stream_from_empty_multihost(users):
+    r = open_retriever(_spec())
+    res = r.query(users, 5)
+    assert (res.ids == -1).all()
+    r.upsert(np.arange(8), _factors(8, CFG.k, 9))
+    assert (r.query(users, 5, exact=True).ids >= 0).all()
+
+
+# ------------------------------------------------------------ snapshots
+
+
+def test_snapshot_v3_round_trip_and_rehosting(tmp_path, catalog, users):
+    multi = open_retriever(_spec(n_hosts=2, replication=2), items=catalog)
+    multi.upsert(np.arange(500, 506), _factors(6, CFG.k, 10))
+    before = multi.query(users, 10)
+    path = os.fspath(tmp_path / "mh.npz")
+    multi.snapshot(path)
+    for n_hosts, repl in [(2, 2), (1, 1), (4, 2)]:
+        restored = open_retriever(
+            _spec(n_hosts=n_hosts, replication=repl), snapshot=path)
+        _assert_same(before, restored.query(users, 10),
+                     f"restored on {n_hosts} hosts")
+
+
+def test_sharded_snapshot_scales_out_to_multihost(tmp_path, catalog, users):
+    single = open_retriever(_spec("sharded"), items=catalog)
+    before = single.query(users, 10)
+    path = os.fspath(tmp_path / "s.npz")
+    single.snapshot(path)
+    multi = open_retriever(_spec(n_hosts=2, replication=2), snapshot=path)
+    _assert_same(before, multi.query(users, 10), "scaled out from sharded")
+
+
+def test_multihost_snapshot_does_not_scale_in_silently(tmp_path, catalog):
+    multi = open_retriever(_spec(), items=catalog)
+    path = os.fspath(tmp_path / "mh.npz")
+    multi.snapshot(path)
+    with pytest.raises(ValueError, match="mismatch"):
+        open_retriever(_spec("sharded"), snapshot=path)
+
+
+# ------------------------------------------------------------ map cache
+
+
+def test_map_cache_only_remaps_changed_items(catalog):
+    multi = open_retriever(_spec(), items=catalog)
+    multi.repartition(async_=False)
+    st = multi.maintenance_stats()["repartition"]["map_cache"]
+    assert st["misses"] == len(catalog) and st["hits"] == 0
+    multi.upsert([7, 9], _factors(2, CFG.k, 11))
+    multi.compact()          # rebalanced layout: re-plans through the cache
+    st = multi.maintenance_stats()["repartition"]["map_cache"]
+    assert st["misses"] == len(catalog) + 2       # only the changed rows
+    assert st["hits"] >= len(catalog) - 2
+
+
+def test_map_cache_rows_match_full_mapping():
+    import jax.numpy as jnp
+
+    from repro.core.mapping import sparse_map
+
+    items = _factors(37, CFG.k, 12)
+    ids = np.arange(37, dtype=np.int64)
+    cache = MapCache(CFG)
+    tau_c, mask_c = cache.lookup(ids[::2], items[::2])   # warm odd subset
+    tau, mask = cache.lookup(ids, items)                 # mixed hit/miss
+    t_j, v_j = sparse_map(jnp.asarray(items), CFG)
+    np.testing.assert_array_equal(tau, np.asarray(t_j))
+    np.testing.assert_array_equal(mask, np.asarray(v_j) != 0.0)
+    np.testing.assert_array_equal(tau_c, np.asarray(t_j)[::2])
+    cache.invalidate([0])
+    assert len(cache) == 36
+    cache.retain(ids[:5])
+    assert len(cache) == 4                               # id 0 invalidated

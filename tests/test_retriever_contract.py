@@ -24,7 +24,7 @@ from repro.retriever import (
     register_backend,
 )
 
-BACKENDS = ["brute", "gam", "gam-device", "sharded"]
+BACKENDS = ["brute", "gam", "gam-device", "sharded", "sharded-multihost"]
 
 
 def _spec(backend, **kw):
@@ -32,6 +32,10 @@ def _spec(backend, **kw):
     kw.setdefault("bucket", 512)
     if backend == "sharded":
         kw.setdefault("n_shards", 2)
+    if backend == "sharded-multihost":
+        kw.setdefault("n_shards", 4)
+        kw.setdefault("n_hosts", 2)
+        kw.setdefault("replication", 2)
     return RetrieverSpec(cfg=CFG, backend=backend, **kw)
 
 
@@ -152,7 +156,7 @@ def test_background_compact_is_part_of_the_contract(backend):
     after = r.query(users, 10)
     np.testing.assert_array_equal(before.ids, after.ids)
     np.testing.assert_array_equal(before.scores, after.scores)
-    if backend == "sharded":
+    if backend in ("sharded", "sharded-multihost"):
         assert steps > 0
         assert r.maintenance_stats()["generation"] == gen0 + 1
         assert len(r.delta) == 0
@@ -175,7 +179,8 @@ def test_sharded_snapshot_preserves_live_delta():
     assert len(r.delta) == 10
 
 
-@pytest.mark.parametrize("backend", ["gam", "gam-device", "sharded"])
+@pytest.mark.parametrize("backend", ["gam", "gam-device", "sharded",
+                                     "sharded-multihost"])
 def test_pruned_mode_matches_gam_candidate_semantics(backend):
     """All index backends share one candidate definition (pattern overlap +
     spill), so with a common generous bucket their pruned answers are
@@ -187,7 +192,8 @@ def test_pruned_mode_matches_gam_candidate_semantics(backend):
     np.testing.assert_array_equal(got.ids, ref.ids)
     np.testing.assert_array_equal(got.n_scored, ref.n_scored)
     np.testing.assert_allclose(got.scores, ref.scores, rtol=1e-5, atol=1e-6)
-    if backend == "sharded":   # same fused kernel as gam-device: bit-equal
+    if backend in ("sharded", "sharded-multihost"):
+        # same fused kernel as gam-device: bit-equal
         dev = open_retriever(_spec("gam-device"), items=items).query(users, 10)
         np.testing.assert_array_equal(got.ids, dev.ids)
         np.testing.assert_array_equal(got.scores, dev.scores)
@@ -266,7 +272,7 @@ def test_candidate_masks_support_matrix():
     dev = open_retriever(_spec("gam-device"), items=items)
     masks = np.asarray(dev.candidate_masks(users))
     assert masks.shape == (3, 100) and masks.dtype == bool
-    for backend in ["brute", "gam", "sharded"]:
+    for backend in ["brute", "gam", "sharded", "sharded-multihost"]:
         with pytest.raises(UnsupportedOp):
             open_retriever(_spec(backend), items=items).candidate_masks(users)
 

@@ -1,9 +1,6 @@
 """Unit tests for dry-run/roofline machinery that need no big compiles."""
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES
 from repro.launch.dryrun import collective_bytes

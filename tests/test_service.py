@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from conftest import CFG, unit_factors as _factors
 
-from repro.core.inverted_index import DeviceIndex, InvertedIndex, build_segment
+from repro.core.inverted_index import build_segment
 from repro.core.mapping import sparse_map
 from repro.retriever import RetrieverSpec, open_retriever
 from repro.service import (

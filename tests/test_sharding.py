@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_reduced_config
 from repro.launch.steps import (
-    abstract_params, abstract_opt_state, input_specs, make_serve_step,
+    abstract_params, make_serve_step,
     make_train_step, shape_adapted_config,
 )
 from repro.models.model import Model

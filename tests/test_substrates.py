@@ -10,7 +10,7 @@ from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.data import TokenPipeline, movielens_like_ratings, synthetic_ratings
 from repro.factorization import MfConfig, train_mf
 from repro.training import (
-    AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm,
+    AdamWConfig, adamw_init, adamw_update, cosine_schedule,
 )
 
 
