@@ -93,11 +93,32 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
             "multihost bit-identical to single-host sharded",
             f"mode={mh.get('mode')}",
         )
+        gate.check(
+            bool(mh.get("explain_parity")),
+            "explain=True answers bit-identical on multihost",
+            f"mode={mh.get('mode')}",
+        )
         if mh.get("n_hosts", 1) > 1:  # 1 host: nothing to fail over to
             gate.check(
                 mh.get("failover", {}).get("n_failovers", 0) >= 1,
                 "failover exercised in multihost scenario",
             )
+    # instrumentation invariants: the stage breakdown must be recorded, and
+    # tracing at the steady-state 1% sample rate must not move p50 — the
+    # bound is generous for CI noise; the honest number rides in the JSON
+    stages = current.get("stages", {})
+    gate.check(
+        all(stages.get(k) is not None for k in ("map", "base", "merge")),
+        "per-stage latency breakdown recorded",
+        f"stages={sorted(k for k, v in stages.items() if v is not None)}",
+    )
+    overhead = current.get("overhead", {})
+    ratio = overhead.get("p50_overhead_ratio")
+    gate.check(
+        ratio is not None and ratio <= 1.5,
+        "tracing overhead at 1% sampling within bound",
+        f"traced/untraced p50 ratio {ratio}",
+    )
 
     base_curves = baseline.get("curves", {})
     for mode, points in current.get("curves", {}).items():
@@ -112,6 +133,14 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
                 b.get("p99_ms"),
                 tol,
             )
+    # stage-level attribution: when a curve p99 moves, these localise the
+    # movement to queue/kernel/merge.  Sub-0.05ms baseline stages are skipped
+    # (pure scheduler jitter at that scale).
+    b_stages = baseline.get("stages", {})
+    for name in ("queue_wait", "map", "base", "delta", "merge"):
+        c, b = stages.get(name), b_stages.get(name)
+        if c is not None and b is not None and b >= 0.05:
+            gate.ratio(f"stage {name} p50", c, b, tol)
     b_comp = baseline.get("compaction", {})
     gate.ratio(
         "compaction async p99",

@@ -81,6 +81,87 @@ def run_point(svc: Retriever, users: np.ndarray, *, exact: bool) -> dict:
     }
 
 
+def _stream(svc: Retriever, users: np.ndarray) -> dict:
+    """Push rows through the service's OWN batcher (so its tracer and
+    queue-wait split are exercised) and return the metrics snapshot."""
+    svc.query(np.zeros((svc.spec.batch_size, svc.spec.cfg.k), np.float32))
+    svc.metrics.reset()
+    for row in users:
+        svc.batcher.submit(row)
+        svc.batcher.poll()
+    while svc.batcher.pending:
+        svc.batcher.flush()
+    return svc.metrics.snapshot()
+
+
+def run_overhead_scenario(args) -> dict:
+    """Instrumentation overhead: the same stream untraced vs traced at a 1%
+    sample rate (the steady-state deployment setting).  The acceptance
+    number is the traced/untraced p50 ratio — the noop-span fast path plus
+    one RNG draw per batch should be invisible next to a kernel launch."""
+    rng = np.random.default_rng(3)
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    n_req = max(args.requests, 64)
+    users = rng.normal(size=(n_req, args.dim)).astype(np.float32)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+
+    out: dict = {"sample_rate": 0.01, "n_requests": n_req}
+    for label, options in (("untraced", ()),
+                           ("traced", (("trace_sample", 0.01),))):
+        svc = open_retriever(
+            RetrieverSpec(cfg=cfg, backend="sharded", n_shards=args.shards,
+                          min_overlap=args.min_overlap, kappa=args.kappa,
+                          batch_size=8, max_delay_s=5e-3, options=options),
+            items=items)
+        snap = _stream(svc, users)
+        out[label] = {"p50_ms": snap["latency_p50_ms"],
+                      "p99_ms": snap["latency_p99_ms"],
+                      "qps": snap["qps"]}
+    out["p50_overhead_ratio"] = (out["traced"]["p50_ms"]
+                                 / max(out["untraced"]["p50_ms"], 1e-9))
+    print(f"tracing overhead @1%: p50 {out['untraced']['p50_ms']:.2f}ms -> "
+          f"{out['traced']['p50_ms']:.2f}ms "
+          f"(ratio {out['p50_overhead_ratio']:.3f})")
+    return out
+
+
+def run_stage_scenario(args) -> dict:
+    """Per-stage latency breakdown from a fully sampled trace of the same
+    stream: p50 milliseconds spent in queue wait, phi-map, base kernel,
+    delta query and top-kappa merge — the attribution the regression gate
+    uses to localise a p99 movement."""
+    rng = np.random.default_rng(5)
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    n_req = max(args.requests, 32)
+    users = rng.normal(size=(n_req, args.dim)).astype(np.float32)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+    svc = open_retriever(
+        RetrieverSpec(cfg=cfg, backend="sharded", n_shards=args.shards,
+                      min_overlap=args.min_overlap, kappa=args.kappa,
+                      batch_size=8, max_delay_s=5e-3,
+                      options=(("trace_sample", 1.0),)),
+        items=items)
+    # stream some live mutations so the delta stage is non-trivial
+    svc.upsert(np.arange(args.items, args.items + 16),
+               rng.normal(size=(16, args.dim)).astype(np.float32))
+    _stream(svc, users)
+    stages: dict[str, list] = {"queue_wait": [], "map": [], "base": [],
+                               "delta": [], "merge": []}
+    for root in svc.tracer.finished:
+        for name, acc in stages.items():
+            acc.extend(sp.duration_s for sp in root.find(name)
+                       if sp.duration_s is not None)
+    out = {name: (float(np.percentile(v, 50)) * 1e3 if v else None)
+           for name, v in stages.items()}
+    out["n_traces"] = len(svc.tracer.finished)
+    print("stage p50 ms: " + "  ".join(
+        f"{k}={v:.3f}" for k, v in out.items()
+        if isinstance(v, float)))
+    return out
+
+
 def skewed_catalog(n: int, dim: int, rng) -> tuple[np.ndarray, np.ndarray]:
     """Clustered catalog with geometric cluster sizes (one hot region) and
     users concentrated on the hottest clusters — the workload that erodes
@@ -230,6 +311,15 @@ def _multihost_measure(args, *, distributed: bool) -> dict:
         parity = parity and bool(
             np.array_equal(got.ids, want.ids)
             and np.array_equal(got.scores, want.scores))
+    # explain must be pure observation: identical answers with it on —
+    # including across the collective merge path and post-failover routing
+    probe = rng.normal(size=(bs, args.dim)).astype(np.float32)
+    plain = svc.query(probe)
+    explained = svc.query(probe, explain=True)
+    explain_parity = bool(
+        np.array_equal(plain.ids, explained.ids)
+        and np.array_equal(plain.scores, explained.scores)
+        and explained.explain is not None)
     before = np.asarray(lats[:fail_at]) * 1e3
     after = np.asarray(lats[fail_at:]) * 1e3
     hosts = svc.maintenance_stats()["hosts"]
@@ -240,6 +330,7 @@ def _multihost_measure(args, *, distributed: bool) -> dict:
         "n_slices": hosts["n_slices"],
         "n_requests": n_batches * bs,
         "parity": parity,
+        "explain_parity": explain_parity,
         "p50_ms": float(np.percentile(before, 50)),
         "p99_ms": float(np.percentile(before, 99)),
         "failover": {
@@ -295,7 +386,8 @@ def run_multihost_scenario(args) -> dict:
     print(f"multihost ({out['mode']}, {out['n_hosts']} hosts): "
           f"p99={out['p99_ms']:.2f}ms, after failover "
           f"p99={out['failover']['p99_ms']:.2f}ms, "
-          f"parity={'bit-identical' if out['parity'] else 'DIVERGED'}")
+          f"parity={'bit-identical' if out['parity'] else 'DIVERGED'}, "
+          f"explain={'pure' if out.get('explain_parity') else 'DIVERGED'}")
     return out
 
 
@@ -349,6 +441,8 @@ def main(argv=None) -> None:
         res = svc.query(users[:1], args.kappa)  # discard stat at this config
         discard_mean = float(res.discarded_frac.mean())
 
+    stages = run_stage_scenario(args)
+    overhead = run_overhead_scenario(args)
     compaction = run_compaction_scenario(args)
     multihost = run_multihost_scenario(args)
 
@@ -360,6 +454,8 @@ def main(argv=None) -> None:
         },
         "discard_mean": discard_mean,
         "curves": curves,
+        "stages": stages,
+        "overhead": overhead,
         "compaction": compaction,
         "multihost": multihost,
     }

@@ -57,8 +57,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.gam_score import NEG
 
 __all__ = ["RetrievalMeta", "GamRetrieveResult", "TOPK_EMPTY_ROW",
-           "build_retrieval_meta", "export_topk", "gam_retrieve",
-           "pack_patterns"]
+           "build_retrieval_meta", "effective_bq", "expand_tile_skips",
+           "export_topk", "gam_retrieve", "pack_patterns"]
 
 # Row sentinel for non-candidate tile entries: larger than any real global row
 # (catalogs < 2^30 rows) so the (score desc, row asc) tie-break at NEG always
@@ -70,6 +70,28 @@ _NO_ROW = np.int32(1 << 30)
 # under the (score desc, row asc) total order while staying collective-safe
 # (int32 survives cross-host all-gathers that would truncate an int64 pad).
 TOPK_EMPTY_ROW = np.int32(np.iinfo(np.int32).max)
+
+
+def effective_bq(q: int, bq: int = 32) -> int:
+    """The query-block height the kernel actually tiles with: the requested
+    ``bq`` clamped to the padded query count (multiple of 8, minimum 8).
+    Single source of the clamp — :func:`_gam_retrieve` tiles with it and
+    :func:`expand_tile_skips` inverts the tiling, so the two can never
+    disagree about which queries shared a skip row."""
+    return max(8, min(int(bq), -(-int(q) // 8) * 8))
+
+
+def expand_tile_skips(skipped, q: int, bq: int = 32) -> np.ndarray:
+    """(q_blocks, n_blocks) kernel skip map -> (q, n_blocks) per-query bool.
+
+    The block-union prepass decides skips per QUERY BLOCK (all ``bq`` rows
+    of a tile share the decision); this repeats each decision across its
+    block's real query rows so ``explain`` can report, per query, which
+    item blocks the prepass pruned.  Pure host-side numpy on an existing
+    kernel output — the compute path is untouched.
+    """
+    sk = np.asarray(skipped, bool)
+    return np.repeat(sk, effective_bq(q, bq), axis=0)[:q]
 
 
 def export_topk(vals, rows, *, offset: int = 0
@@ -276,7 +298,7 @@ def _gam_retrieve(users, factors, q_tau, q_mask, alive, ibT, union, bspill,
                   spill8, *, kappa, min_overlap, bq, bn, words, n_pad,
                   interpret, loop_merge):
     q, k = users.shape
-    bq = max(8, min(bq, -(-q // 8) * 8))
+    bq = effective_bq(q, bq)
     qp = -(-q // bq) * bq
     nb = n_pad // bn
 

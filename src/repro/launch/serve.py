@@ -35,6 +35,50 @@ from repro.models.model import Model
 from repro.serving import Engine, ServeConfig
 
 
+def _trace_options(args) -> tuple:
+    """Spec options carrying the tracing knobs (empty when tracing is off,
+    so specs stay byte-identical to pre-observability ones)."""
+    if not args.trace_sample:
+        return ()
+    return (("trace_sample", args.trace_sample),)
+
+
+def _open_metrics_writer(args, suffix: str = ""):
+    """A periodic JSON-lines metrics writer for ``--metrics-out`` (None when
+    the flag is absent or names a ``.prom`` file — Prometheus text is a
+    point-in-time exposition, written once at exit)."""
+    if not args.metrics_out or args.metrics_out.endswith(".prom"):
+        return None
+    from repro.obs.exporters import JsonlMetricsWriter
+    return JsonlMetricsWriter(args.metrics_out + suffix, interval_s=0.25)
+
+
+def _finish_observability(args, svc, writer, suffix: str = "") -> None:
+    """Final ``--metrics-out`` / ``--trace-out`` dump after the stream."""
+    if args.metrics_out:
+        if writer is not None:
+            writer.write(svc.metrics.snapshot(), svc.metrics.histograms())
+            print(f"metrics (jsonl) -> {writer.path}")
+        else:
+            from repro.obs.exporters import snapshot_to_prometheus
+            path = args.metrics_out + suffix
+            with open(path, "w") as f:
+                f.write(snapshot_to_prometheus(svc.metrics.snapshot(),
+                                               svc.metrics.histograms()))
+            print(f"metrics (prometheus) -> {path}")
+    if args.trace_out:
+        export = getattr(svc.tracer, "export_jsonl", None)
+        if export is None:
+            print("--trace-out ignored: tracing is off "
+                  "(pass --trace-sample > 0)")
+        else:
+            path = args.trace_out + suffix
+            n = export(path)
+            st = svc.tracer.stats()
+            print(f"traces -> {path} ({n} roots; sampled "
+                  f"{st['n_sampled']}/{st['n_started']})")
+
+
 def serve_retrieval(args):
     """Open a unified-API retriever (default backend: the sharded streaming
     service), stream upserts + microbatched queries, print the
@@ -57,8 +101,10 @@ def serve_retrieval(args):
     spec = RetrieverSpec(
         cfg=cfg, backend="sharded", n_shards=args.shards,
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
-        batch_size=args.service_batch, max_delay_s=args.max_delay_ms * 1e-3)
+        batch_size=args.service_batch, max_delay_s=args.max_delay_ms * 1e-3,
+        options=_trace_options(args))
     svc = open_retriever(spec, items=items)
+    writer = _open_metrics_writer(args)
 
     # warm the base-path jit cache, then restart the clock: index build and
     # base compile time are excluded from QPS/latency.  Delta-path shapes
@@ -69,24 +115,34 @@ def serve_retrieval(args):
     svc.metrics.reset()
 
     pending = []
-    for r in range(args.requests):
-        pending.append(svc.batcher.submit(
-            rng.normal(size=args.dim).astype(np.float32)))
-        if r % 16 == 15:                       # interleave streamed upserts
-            new_id = args.items + r
-            svc.upsert([new_id],
-                       rng.normal(size=(1, args.dim)).astype(np.float32))
-        svc.batcher.poll()
-        # maintenance triggers: mechanism lives on the retriever, policy here
-        if args.auto_compact and len(svc.delta) >= args.auto_compact:
-            svc.compact(async_=True)
-        if args.rebalance:
-            svc.maybe_rebalance(args.rebalance)
-    while svc.batcher.pending:
-        svc.batcher.flush()
-    # drain any still-running background build so the demo exits compacted
-    while svc.maintenance_stats()["compaction"]["active"]:
-        svc.compaction_step()
+    try:
+        for r in range(args.requests):
+            pending.append(svc.batcher.submit(
+                rng.normal(size=args.dim).astype(np.float32)))
+            if r % 16 == 15:                   # interleave streamed upserts
+                new_id = args.items + r
+                svc.upsert([new_id],
+                           rng.normal(size=(1, args.dim)).astype(np.float32))
+            svc.batcher.poll()
+            # maintenance triggers: mechanism on the retriever, policy here
+            if args.auto_compact and len(svc.delta) >= args.auto_compact:
+                svc.compact(async_=True)
+            if args.rebalance:
+                svc.maybe_rebalance(args.rebalance)
+            if writer is not None:
+                writer.maybe_write(svc.metrics.snapshot,
+                                   svc.metrics.histograms)
+        while svc.batcher.pending:
+            svc.batcher.flush()
+        # drain a still-running background build so the demo exits compacted
+        while svc.maintenance_stats()["compaction"]["active"]:
+            svc.compaction_step()
+    except Exception:
+        # flight-recorder dump: the recent lifecycle events, oldest first
+        print(f"--- event journal ({len(svc.events)} events) ---",
+              file=sys.stderr)
+        svc.events.dump_jsonl(sys.stderr)
+        raise
     served = sum(svc.batcher.result(p) is not None for p in pending)
 
     snap = svc.metrics.snapshot()
@@ -108,6 +164,7 @@ def serve_retrieval(args):
               f"({snap['n_compact_slices']} slices)  "
               f"repartitions={snap['n_repartitions']}  "
               f"shard bns={ms['repartition']['partition']['bns']}")
+    _finish_observability(args, svc, writer)
 
     if args.snapshot:
         svc.snapshot(args.snapshot)
@@ -160,8 +217,11 @@ def serve_retrieval_multihost(args):
         cfg=cfg, backend="sharded-multihost", n_shards=args.shards,
         n_hosts=args.hosts, replication=args.replication,
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
-        batch_size=args.service_batch)
+        batch_size=args.service_batch, options=_trace_options(args))
     svc = open_retriever(spec, items=items)
+    # per-host artifact files; same tracer seed everywhere, so the h*.jsonl
+    # files share trace ids and reassemble into cross-host traces
+    writer = _open_metrics_writer(args, suffix=f".h{me}")
 
     bs = args.service_batch
     warm = rng.normal(size=(bs, args.dim)).astype(np.float32)
@@ -170,26 +230,35 @@ def serve_retrieval_multihost(args):
 
     n_batches = max(1, args.requests // bs)
     lat = []
-    for b in range(n_batches):
-        users = rng.normal(size=(bs, args.dim)).astype(np.float32)
-        if args.fail_host is not None and b == n_batches // 2:
-            svc.mark_down(args.fail_host)
-        if b % 4 == 3:                    # interleaved SPMD upserts
-            svc.upsert([args.items + b],
-                       rng.normal(size=(1, args.dim)).astype(np.float32))
-        t0 = time.perf_counter()
-        svc.query(users)
-        lat.append(time.perf_counter() - t0)
-        # feed the skew signal (the microbatcher does this on the
-        # single-host path); the gathered per-shard candidate counts are
-        # identical on every host, so the rebalance trigger stays SPMD
-        svc.record_last_query_stats()
-        if args.auto_compact and len(svc.delta) >= args.auto_compact:
-            svc.compact(async_=True)
-        if args.rebalance:
-            svc.maybe_rebalance(args.rebalance)
-    while svc.maintenance_stats()["compaction"]["active"]:
-        svc.compaction_step()
+    try:
+        for b in range(n_batches):
+            users = rng.normal(size=(bs, args.dim)).astype(np.float32)
+            if args.fail_host is not None and b == n_batches // 2:
+                svc.mark_down(args.fail_host)
+            if b % 4 == 3:                    # interleaved SPMD upserts
+                svc.upsert([args.items + b],
+                           rng.normal(size=(1, args.dim)).astype(np.float32))
+            t0 = time.perf_counter()
+            svc.query(users)
+            lat.append(time.perf_counter() - t0)
+            # feed the skew signal (the microbatcher does this on the
+            # single-host path); the gathered per-shard candidate counts are
+            # identical on every host, so the rebalance trigger stays SPMD
+            svc.record_last_query_stats()
+            if args.auto_compact and len(svc.delta) >= args.auto_compact:
+                svc.compact(async_=True)
+            if args.rebalance:
+                svc.maybe_rebalance(args.rebalance)
+            if writer is not None:
+                writer.maybe_write(svc.metrics.snapshot,
+                                   svc.metrics.histograms)
+        while svc.maintenance_stats()["compaction"]["active"]:
+            svc.compaction_step()
+    except Exception:
+        print(f"--- host {me} event journal ({len(svc.events)} events) ---",
+              file=sys.stderr)
+        svc.events.dump_jsonl(sys.stderr)
+        raise
 
     if me == 0:
         ms = svc.maintenance_stats()
@@ -207,6 +276,7 @@ def serve_retrieval_multihost(args):
         print(f"routing={hosts['routing']}  down={hosts['down']}  "
               f"failovers={hosts['n_failovers']}  "
               f"host load={hosts['host_load']}")
+    _finish_observability(args, svc, writer, suffix=f".h{me}")
     if args.snapshot and args.replication != args.hosts:
         # the backend would raise UnsupportedOp (no host holds every
         # placement slice) — say so instead of silently dropping the flag
@@ -277,6 +347,19 @@ def main():
     ap.add_argument("--snapshot", metavar="PATH",
                     help="after serving, snapshot the catalog there and "
                          "verify a restore answers bit-identically")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="export service metrics: *.prom writes Prometheus "
+                         "text at exit, any other path appends periodic "
+                         "JSON-lines snapshots during the stream "
+                         "(multi-host runs suffix .hN per host)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="export sampled request traces as JSON-lines at "
+                         "exit (needs --trace-sample > 0; multi-host runs "
+                         "suffix .hN per host)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    metavar="RATE",
+                    help="probability of tracing a request batch end-to-end "
+                         "(0 = tracing off, its default noop path)")
     args = ap.parse_args()
 
     if args.service and args.hosts > 1:

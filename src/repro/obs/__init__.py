@@ -1,0 +1,17 @@
+"""Observability layer: streaming histograms, request tracing, the event
+journal and metric exporters.
+
+A deliberately light package — numpy + stdlib only, no jax and no imports
+from the rest of ``repro`` — so the service tier (``repro.service``), the
+retriever backends and the launchers can all depend on it without cycles,
+and recording on the request hot path never touches device state.
+"""
+from repro.obs.events import EventJournal
+from repro.obs.exporters import (JsonlMetricsWriter, histogram_to_prometheus,
+                                 snapshot_to_prometheus)
+from repro.obs.histogram import LogHistogram
+from repro.obs.tracing import NOOP_SPAN, NOOP_TRACER, Span, Tracer
+
+__all__ = ["EventJournal", "JsonlMetricsWriter", "LogHistogram", "NOOP_SPAN",
+           "NOOP_TRACER", "Span", "Tracer", "histogram_to_prometheus",
+           "snapshot_to_prometheus"]

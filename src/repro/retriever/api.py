@@ -108,10 +108,15 @@ class Retriever(abc.ABC):
 
     @abc.abstractmethod
     def query(self, users: np.ndarray, kappa: int | None = None, *,
-              exact: bool = False) -> RetrievalResult:
+              exact: bool = False, explain: bool = False) -> RetrievalResult:
         """(Q, k) user factors -> :class:`RetrievalResult` in catalog-id
         space.  ``exact=True`` scores every live item (the brute-force
-        reference path, supported by every backend)."""
+        reference path, supported by every backend).  ``explain=True`` asks
+        the backend to attach a provenance dict (per-shard candidate counts,
+        prepass block skips, delta-vs-base hit origin, winning replica) to
+        ``result.explain`` WITHOUT changing the answers — backends that
+        cannot explain raise :class:`UnsupportedOp` rather than silently
+        returning ``explain=None``."""
 
     def candidate_masks(self, users) -> Any:
         """(Q, N) dense candidate masks on device (jit-traceable).  Only

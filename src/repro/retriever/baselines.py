@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.baselines import CroHash, PcaTree, SrpLsh, SuperBitLsh
 from repro.retriever.api import Retriever, RetrieverSpec
 from repro.retriever.brute import exact_topk
-from repro.retriever.types import RetrievalResult
+from repro.retriever.types import RetrievalResult, UnsupportedOp
 
 __all__ = ["BaselineRetriever"]
 
@@ -61,7 +61,12 @@ class BaselineRetriever(Retriever):
         self._impl = _make(self.spec, self.items) if ids.size else None
         return self
 
-    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+    def query(self, users, kappa=None, *, exact=False,
+              explain=False) -> RetrievalResult:
+        if explain:
+            raise UnsupportedOp(self.spec.backend, "query",
+                                "hash/tree baselines keep no per-shard or "
+                                "per-block provenance to explain")
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         q, n = users.shape[0], self.ids.size

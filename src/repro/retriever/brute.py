@@ -77,7 +77,8 @@ class BruteRetriever(Retriever):
 
     # ------------------------------------------------------------ queries
 
-    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+    def query(self, users, kappa=None, *, exact=False,
+              explain=False) -> RetrievalResult:
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         q, n = users.shape[0], self.items.shape[0]
@@ -89,10 +90,17 @@ class BruteRetriever(Retriever):
                                              kappa)
             ids_out[:, :kk] = top_ids
             sc_out[:, :kk] = top_scores
+        exp = None
+        if explain:
+            # there is no pruning structure: every item is a candidate
+            exp = {"backend": "brute",
+                   "n_candidates": [n] * q,
+                   "shard_candidates": [[n]] * q}
         return RetrievalResult(
             ids=ids_out, scores=sc_out,
             n_scored=np.full(q, n, np.int64),
             discarded_frac=np.zeros(q),
+            explain=exp,
         )
 
     # ------------------------------------------------------------ state

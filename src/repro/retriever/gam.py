@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core.inverted_index import DeviceIndex, InvertedIndex
 from repro.core.mapping import GamConfig, sparse_map
-from repro.kernels.gam_retrieve import RetrievalMeta, build_retrieval_meta
+from repro.kernels.gam_retrieve import (RetrievalMeta, build_retrieval_meta,
+                                        expand_tile_skips)
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
 from repro.retriever.api import Retriever, RetrieverSpec
@@ -138,20 +139,25 @@ class GamIndexRetriever(Retriever):
         tau, vals = sparse_map(jnp.asarray(users), self.spec.cfg)
         return np.asarray(tau), np.asarray(vals) != 0.0
 
-    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+    def query(self, users, kappa=None, *, exact=False,
+              explain=False) -> RetrievalResult:
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         if self.n_items == 0:
             q = users.shape[0]
+            exp = ({"backend": self.spec.backend, "n_candidates": [0] * q}
+                   if explain else None)
             return RetrievalResult(np.full((q, kappa), -1, np.int64),
                                    np.full((q, kappa), -np.inf, np.float32),
-                                   np.zeros(q, np.int64), np.zeros(q))
+                                   np.zeros(q, np.int64), np.zeros(q),
+                                   explain=exp)
         if self.device:
-            return self._query_device(users, kappa, exact=exact)
-        return self._query_cpu(users, kappa, exact=exact)
+            return self._query_device(users, kappa, exact=exact,
+                                      explain=explain)
+        return self._query_cpu(users, kappa, exact=exact, explain=explain)
 
     def _query_cpu(self, users: np.ndarray, kappa: int, *,
-                   exact: bool) -> RetrievalResult:
+                   exact: bool, explain: bool = False) -> RetrievalResult:
         q_tau, q_mask = self.map_queries(users)
         n = self.items.shape[0]
         q = users.shape[0]
@@ -183,13 +189,18 @@ class GamIndexRetriever(Retriever):
             ids_out[qi, :kk] = self.ids[cand[top]]
             sc_out[qi, :kk] = scores[top]
             n_scored[qi] = cand.size
+        exp = None
+        if explain:
+            exp = {"backend": "gam",
+                   "n_candidates": n_scored.tolist()}
         return RetrievalResult(
             ids=ids_out, scores=sc_out, n_scored=n_scored,
             discarded_frac=1.0 - n_scored / n,
+            explain=exp,
         )
 
     def _query_device(self, users: np.ndarray, kappa: int, *,
-                      exact: bool) -> RetrievalResult:
+                      exact: bool, explain: bool = False) -> RetrievalResult:
         """Streaming jit path: one fused gam_retrieve call over the query
         batch — candidate pruning, exact scoring and the top-kappa reduction
         happen on chip, so nothing of size (Q, N) ever reaches HBM."""
@@ -210,10 +221,24 @@ class GamIndexRetriever(Retriever):
         ids_out[:, :kk] = np.where(empty, -1,
                                    self.ids[np.clip(rows, 0, n - 1)])
         sc_out[:, :kk] = np.where(empty, -np.inf, vals)
-        n_scored = np.asarray(res.blk_counts, np.int64).sum(axis=1)
+        blk_counts = np.asarray(res.blk_counts, np.int64)
+        n_scored = blk_counts.sum(axis=1)
+        exp = None
+        if explain:
+            # the kernel already surfaces its per-block counts and the
+            # block-union prepass decisions — explain re-labels them, it
+            # never re-runs or alters the compute
+            skips = expand_tile_skips(np.asarray(res.skipped), q,
+                                      self.spec.bq)
+            exp = {"backend": "gam-device",
+                   "n_candidates": n_scored.tolist(),
+                   "block_candidates": blk_counts.tolist(),
+                   "blocks_skipped": skips.sum(axis=1).tolist(),
+                   "n_blocks": int(blk_counts.shape[1])}
         return RetrievalResult(
             ids=ids_out, scores=sc_out, n_scored=n_scored,
             discarded_frac=1.0 - n_scored / n,
+            explain=exp,
         )
 
     def candidate_masks(self, users) -> jax.Array:

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.kernels.gam_retrieve import export_topk
 from repro.kernels.gam_score import NEG
+from repro.obs.tracing import NOOP_TRACER, Tracer
 from repro.retriever.api import RetrieverSpec
 from repro.retriever.sharded import ShardedRetriever
 from repro.retriever.types import UnsupportedOp
@@ -280,23 +281,27 @@ class MultiHostIndex:
     # ------------------------------------------------------------- query
 
     def slices_topk(self, slice_ids, users_j, q_tau, q_mask, kappa: int,
-                    exact: bool) -> tuple[np.ndarray, np.ndarray,
-                                          np.ndarray, dict]:
+                    exact: bool, tracer=None, collect_tile_skips: bool = False
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
         """One host's contribution: fused-kernel top-kappa over each listed
         local slice, exported to global rows and merged into a single
         (Q, kappa) accumulator (score desc, row asc).  Also returns the
         (Q, S) per-shard candidate counts (zeros outside the listed slices)
-        and per-slice block stats for the metrics."""
+        and per-slice block stats for the metrics (plus per-slice prepass
+        tile skips under ``collect_tile_skips``)."""
+        tracer = NOOP_TRACER if tracer is None else tracer
         q = int(users_j.shape[0])
         cand = np.zeros((q, self.partition.n_shards), np.int64)
-        stats = {"blocks": {}, "tiles": []}
+        stats: dict = {"blocks": {}, "tiles": [], "skips": {}}
         if not slice_ids:
             s, r = collective.empty_accumulators(q, kappa)
             return s, r, cand, stats
         parts_s, parts_r = [], []
         for sl in slice_ids:
-            res = self.get_slice(sl).query(users_j, q_tau, q_mask, kappa,
-                                           exact=exact)
+            with tracer.span("slice_topk", slice=sl):
+                res = self.get_slice(sl).query(
+                    users_j, q_tau, q_mask, kappa, exact=exact,
+                    tracer=tracer, collect_tile_skips=collect_tile_skips)
             s, r = export_topk(res.scores, res.rows,
                                offset=self.slice_row_offset(sl))
             parts_s.append(s)
@@ -304,6 +309,8 @@ class MultiHostIndex:
             s_lo, s_hi = self.placement.slices[sl]
             cand[:, s_lo:s_hi] = res.shard_candidates
             stats["blocks"][sl] = res.block_candidates
+            if collect_tile_skips:
+                stats["skips"][sl] = res.tile_skips
             nb = self.slice_blocks(sl)
             stats["tiles"].append((res.tiles_skipped_frac, nb))
         scores, rows = collective.merge_topk(
@@ -334,6 +341,13 @@ class MultiHostShardedRetriever(ShardedRetriever):
                             else None)
         self._down: frozenset[int] = frozenset()
         super().__init__(spec, **kw)
+        if self._distributed:
+            # host-id-annotate this process's spans and events so the
+            # per-host JSONL exports reassemble into one cross-host trace
+            # (same seed + same SPMD call order -> same trace ids)
+            if isinstance(self.tracer, Tracer):
+                self.tracer.host = self._local_host
+            self.events.host = self._local_host
 
     # ------------------------------------------------------------ placement
 
@@ -371,9 +385,14 @@ class MultiHostShardedRetriever(ShardedRetriever):
                          if b == host and a is not None)
             if n_fail:
                 self.metrics.record_failover(n_fail)
+            self.events.emit("mark_down", down_host=host, n_rerouted=n_fail,
+                             down=sorted(self._down))
         return self.host_status()
 
     def mark_up(self, host: int) -> dict:
+        if host in self._down:
+            self.events.emit("mark_up", up_host=host,
+                             down=sorted(self._down - {host}))
         self._down = frozenset(self._down - {host})
         return self.host_status()
 
@@ -391,7 +410,8 @@ class MultiHostShardedRetriever(ShardedRetriever):
 
     # ------------------------------------------------------------ queries
 
-    def _base_topk(self, users_j, q_tau, q_mask, kappa, exact):
+    def _base_topk(self, users_j, q_tau, q_mask, kappa, exact,
+                   explain=False):
         """Routed per-host kernel passes + collective accumulator merge.
 
         Bit-identical to the parent's single-index path: each slice is
@@ -405,18 +425,24 @@ class MultiHostShardedRetriever(ShardedRetriever):
         per_host = np.zeros(placement.n_hosts, np.int64)
         for h in routing:
             per_host[h] += q
+        skips = None
         if self._distributed:
             me = self._local_host
             mine = tuple(sl for sl in range(placement.n_slices)
                          if routing[sl] == me)
-            s, r, cand, st = base.slices_topk(mine, users_j, q_tau, q_mask,
-                                              kappa, exact)
+            with self.tracer.span("host_topk", host=me, n_slices=len(mine)):
+                s, r, cand, st = base.slices_topk(
+                    mine, users_j, q_tau, q_mask, kappa, exact,
+                    tracer=self.tracer)
             local_tiles = np.array(
                 [sum(f * nb for f, nb in st["tiles"]),
                  sum(nb for _, nb in st["tiles"])], np.float32)
-            cat_s, cat_r, g_cand, g_tiles = \
-                collective.allgather_accumulators(s, r, cand, local_tiles)
-            scores, rows = collective.merge_topk(cat_s, cat_r, kappa)
+            with self.tracer.span("collective_gather", host=me,
+                                  n_hosts=placement.n_hosts):
+                cat_s, cat_r, g_cand, g_tiles = \
+                    collective.allgather_accumulators(s, r, cand, local_tiles)
+            with self.tracer.span("collective_merge", host=me):
+                scores, rows = collective.merge_topk(cat_s, cat_r, kappa)
             blocks = None              # remote block loads are not gathered
             tile_num, tile_den = float(g_tiles[0]), float(g_tiles[1])
             cand = g_cand.astype(np.int64)
@@ -424,11 +450,16 @@ class MultiHostShardedRetriever(ShardedRetriever):
             parts_s, parts_r, tiles = [], [], []
             cand = np.zeros((q, base.partition.n_shards), np.int64)
             blocks = np.zeros((q, base.total_blocks()), np.int64)
+            if explain:
+                skips = np.zeros((q, base.total_blocks()), bool)
             for h in sorted(set(routing)):
                 mine = tuple(sl for sl in range(placement.n_slices)
                              if routing[sl] == h)
-                s, r, cand_h, st = base.slices_topk(mine, users_j, q_tau,
-                                                    q_mask, kappa, exact)
+                with self.tracer.span("host_topk", host=h,
+                                      n_slices=len(mine)):
+                    s, r, cand_h, st = base.slices_topk(
+                        mine, users_j, q_tau, q_mask, kappa, exact,
+                        tracer=self.tracer, collect_tile_skips=explain)
                 parts_s.append(s)
                 parts_r.append(r)
                 cand += cand_h
@@ -437,9 +468,15 @@ class MultiHostShardedRetriever(ShardedRetriever):
                     if bc is not None:
                         off = base.slice_block_offset(sl)
                         blocks[:, off:off + bc.shape[1]] = bc
-            scores, rows = collective.merge_topk(
-                np.concatenate(parts_s, axis=1),
-                np.concatenate(parts_r, axis=1), kappa)
+                for sl, sk in st["skips"].items():
+                    if sk is not None:
+                        off = base.slice_block_offset(sl)
+                        skips[:, off:off + sk.shape[1]] = sk
+            with self.tracer.span("collective_merge",
+                                  n_hosts=len(set(routing))):
+                scores, rows = collective.merge_topk(
+                    np.concatenate(parts_s, axis=1),
+                    np.concatenate(parts_r, axis=1), kappa)
             tile_num = sum(f * nb for f, nb in tiles)
             tile_den = sum(nb for _, nb in tiles)
         self.metrics.record_host_queries(per_host)
@@ -447,7 +484,29 @@ class MultiHostShardedRetriever(ShardedRetriever):
         frac = tile_num / tile_den if tile_den else 0.0
         stats = {"shard_candidates": cand, "block_candidates": blocks,
                  "tiles_skipped_frac": float(frac)}
+        if explain:
+            # distributed mode keeps block-skip detail local (accumulators,
+            # not skip matrices, cross the collective) -> None there
+            stats["tile_skips"] = skips
         return scores, ids, stats
+
+    def _explain_base(self, ids_out, from_base, base_stats) -> dict:
+        """Adds the serving placement slice and the replica host that
+        actually answered (under the current routing) for every base hit."""
+        out = super()._explain_base(ids_out, from_base, base_stats)
+        placement = self.base.placement
+        routing = placement.route(self._down)
+        shard = np.asarray(out["shard"], np.int64)
+        slc = np.full(shard.shape, -1, np.int64)
+        replica = np.full(shard.shape, -1, np.int64)
+        for sl, (s_lo, s_hi) in enumerate(placement.slices):
+            m = (shard >= s_lo) & (shard < s_hi)
+            slc[m] = sl
+            if routing[sl] is not None:
+                replica[m] = routing[sl]
+        out["slice"] = slc.tolist()
+        out["replica"] = replica.tolist()
+        return out
 
     # ------------------------------------------------------------ state
 

@@ -48,6 +48,8 @@ import numpy as np
 from repro.core.mapping import sparse_map
 from repro.kernels.gam_retrieve import RetrievalMeta
 from repro.kernels.gam_score import NEG
+from repro.obs.events import EventJournal
+from repro.obs.tracing import NOOP_TRACER, Tracer
 from repro.retriever.api import Retriever, RetrieverSpec
 from repro.retriever.snapshot import read_snapshot, write_snapshot
 from repro.retriever.types import RetrievalResult, UnsupportedOp
@@ -65,12 +67,27 @@ _PAD_ID = np.int64(2**62)      # sorts after every real id on score ties
 
 class ShardedRetriever(Retriever):
     def __init__(self, spec: RetrieverSpec, *, mesh=None,
-                 clock=time.monotonic, **_):
+                 clock=time.monotonic, tracer=None, **_):
         super().__init__(spec)
         self.mesh = mesh
         self.clock = clock
         self.catalog: dict[int, np.ndarray] = {}
         self.metrics = ServiceMetrics(clock)
+        # tracing is opt-in: spec option trace_sample > 0 (or an injected
+        # tracer) — everything else runs through the zero-cost noop
+        rate = float(spec.opt("trace_sample", 0.0))
+        if tracer is not None:
+            self.tracer = tracer
+        elif rate > 0.0:
+            self.tracer = Tracer(clock=clock, sample_rate=rate,
+                                 seed=int(spec.opt("trace_seed", 0)))
+        else:
+            self.tracer = NOOP_TRACER
+        # flight recorder of lifecycle events (compaction phases,
+        # repartitions, failovers); named `events` — `journal` is taken by
+        # the CompactionPlanner's mutation-replay log
+        self.events = EventJournal(
+            capacity=int(spec.opt("event_capacity", 1024)), clock=clock)
         self.generation = 0            # completed segment swaps (sync+async)
         self._planner: CompactionPlanner | None = None
         self._rebalanced = False       # a repartition plan governs the layout
@@ -85,7 +102,8 @@ class ShardedRetriever(Retriever):
             spec.bucket if spec.delta_bucket is None else spec.delta_bucket)
         self.batcher = Microbatcher(
             self._batch_query_fn, spec.cfg.k, batch_size=spec.batch_size,
-            max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics)
+            max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics,
+            tracer=self.tracer)
         self._last_query_stats: dict = {}
 
     def _build_base(self, factors: np.ndarray, ids: np.ndarray,
@@ -188,6 +206,8 @@ class ShardedRetriever(Retriever):
         self.delta.clear()
         self.generation += 1
         self.metrics.record_compact()
+        self.events.emit("generation_swap", generation=self.generation,
+                         sync=True)
 
     def _maintain_partition(self, ids, factors):
         """Target layout for a compaction with no explicit override: uniform
@@ -220,8 +240,16 @@ class ShardedRetriever(Retriever):
             min_overlap=self.spec.min_overlap, mesh=self.mesh,
             slice_rows=(int(self.spec.opt("compact_slice_rows", 512))
                         if slice_rows is None else slice_rows),
-            generation=self.generation, premapped=premapped)
+            generation=self.generation, premapped=premapped,
+            on_phase=self._on_compaction_phase)
+        self.events.emit("compaction_start", frozen_items=int(ids.size),
+                         target_generation=self._planner.target_generation)
         return self._planner
+
+    def _on_compaction_phase(self, old: str, new: str, stats: dict) -> None:
+        self.events.emit("compaction_phase", old=old, new=new,
+                         progress=round(float(stats["progress"]), 4),
+                         target_generation=stats["target_generation"])
 
     def compaction_step(self, max_slices: int = 1) -> bool:
         """Advance the in-flight background compaction by up to
@@ -242,6 +270,8 @@ class ShardedRetriever(Retriever):
         compact).  Pure shadow state: no query result ever changes."""
         if self._planner is None:
             return False
+        self.events.emit("compaction_abort", phase=self._planner.phase,
+                         progress=round(float(self._planner.progress), 4))
         self._planner = None
         self.metrics.record_compact_abort()
         return True
@@ -264,6 +294,8 @@ class ShardedRetriever(Retriever):
             self.delta.clear()
         self.generation = planner.target_generation
         self.metrics.record_compact(async_=True)
+        self.events.emit("generation_swap", generation=self.generation,
+                         replayed=len(journal))
 
     def repartition(self, *, async_: bool = True,
                     n_shards: int | None = None) -> Partition:
@@ -285,6 +317,8 @@ class ShardedRetriever(Retriever):
         part = self.repartitioner.plan(
             weights, self.spec.n_shards if n_shards is None else n_shards)
         self.metrics.record_repartition(skew_before=skew)
+        self.events.emit("repartition", skew_before=skew, async_=async_,
+                         lengths=list(part.lengths))
         self._rebalanced = True       # sticky: later plain compactions re-plan
         # the weights already paid the phi-mapping of this exact frozen
         # catalog — hand it down so it is never derived twice
@@ -296,6 +330,8 @@ class ShardedRetriever(Retriever):
             self.delta.clear()
             self.generation += 1
             self.metrics.record_compact()
+            self.events.emit("generation_swap", generation=self.generation,
+                             sync=True)
         return part
 
     def maybe_rebalance(self, threshold: float = 1.5, *,
@@ -363,9 +399,12 @@ class ShardedRetriever(Retriever):
 
     # ------------------------------------------------------------ queries
 
-    def query(self, users, kappa=None, *, exact=False) -> RetrievalResult:
+    def query(self, users, kappa=None, *, exact=False,
+              explain=False) -> RetrievalResult:
         """``exact=True`` scores every live item through the same kernel —
         the brute-force reference the benchmark compares against.
+        ``explain=True`` attaches shard/delta provenance without changing
+        any answer (the kernel already computes everything explain reports).
 
         While a background compaction is in flight, each query first
         advances it by one bounded slice (the "interleaved with queries"
@@ -376,22 +415,28 @@ class ShardedRetriever(Retriever):
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         q = users.shape[0]
-        users_j = jnp.asarray(users)
-        tau, vals = sparse_map(users_j, self.spec.cfg)
-        q_mask = vals != 0.0
+        # root trace when called directly; child span when the microbatcher
+        # already opened the request_batch root around us
+        with self.tracer.trace_or_span("query", q=q, kappa=kappa):
+            with self.tracer.span("map"):
+                users_j = jnp.asarray(users)
+                tau, vals = sparse_map(users_j, self.spec.cfg)
+                q_mask = vals != 0.0
 
-        b_scores, b_ids, base_stats = self._base_topk(
-            users_j, tau, q_mask, kappa, exact)
-        d_scores, d_ids, d_cand = self.delta.query(
-            users_j, tau, q_mask, kappa, exact=exact)
+            b_scores, b_ids, base_stats = self._base_topk(
+                users_j, tau, q_mask, kappa, exact, explain=explain)
+            with self.tracer.span("delta", n_delta=len(self.delta)):
+                d_scores, d_ids, d_cand = self.delta.query(
+                    users_j, tau, q_mask, kappa, exact=exact)
 
-        cat_scores = np.concatenate([b_scores, d_scores], axis=1)
-        cat_ids = np.concatenate([b_ids, d_ids], axis=1)
-        cat_ids = np.where(cat_scores <= NEG / 2, _PAD_ID, cat_ids)
-        # total order: score desc, catalog id asc — rebuild-equivalent
-        order = np.lexsort((cat_ids, -cat_scores), axis=-1)[:, :kappa]
-        top_ids = np.take_along_axis(cat_ids, order, axis=-1)
-        top_scores = np.take_along_axis(cat_scores, order, axis=-1)
+            with self.tracer.span("merge", kappa=kappa):
+                cat_scores = np.concatenate([b_scores, d_scores], axis=1)
+                cat_ids = np.concatenate([b_ids, d_ids], axis=1)
+                cat_ids = np.where(cat_scores <= NEG / 2, _PAD_ID, cat_ids)
+                # total order: score desc, catalog id asc — rebuild-equivalent
+                order = np.lexsort((cat_ids, -cat_scores), axis=-1)[:, :kappa]
+                top_ids = np.take_along_axis(cat_ids, order, axis=-1)
+                top_scores = np.take_along_axis(cat_scores, order, axis=-1)
 
         ids_out = np.full((q, kappa), -1, np.int64)
         sc_out = np.full((q, kappa), -np.inf, np.float32)
@@ -403,29 +448,76 @@ class ShardedRetriever(Retriever):
         n_live = self.base.n_live + len(self.delta)
         n_cand = base_stats["shard_candidates"].sum(axis=-1) + d_cand
         discard = 1.0 - n_cand / max(n_live, 1)
-        self._last_query_stats = dict(base_stats, discard=discard)
+        self._last_query_stats = {
+            k: v for k, v in base_stats.items() if k != "tile_skips"}
+        self._last_query_stats["discard"] = discard
+        exp = None
+        if explain:
+            # provenance of each winning slot: merge column < base width
+            # means the hit came from the compacted base tier
+            src = np.full((q, kappa), "", object)
+            src[:, :kk] = np.where(real, np.where(order < b_ids.shape[1],
+                                                  "base", "delta"), "")
+            exp = {
+                "backend": self.spec.backend,
+                "n_candidates": np.asarray(n_cand, np.int64).tolist(),
+                "shard_candidates": np.asarray(
+                    base_stats["shard_candidates"], np.int64).tolist(),
+                "delta_candidates": np.asarray(d_cand, np.int64).tolist(),
+                "source": src.tolist(),
+            }
+            exp.update(self._explain_base(ids_out, src == "base",
+                                          base_stats))
         return RetrievalResult(
             ids=ids_out, scores=sc_out,
             n_scored=np.asarray(n_cand, np.int64),
             discarded_frac=discard,
+            explain=exp,
         )
 
-    def _base_topk(self, users_j, q_tau, q_mask, kappa: int, exact: bool
+    def _base_topk(self, users_j, q_tau, q_mask, kappa: int, exact: bool,
+                   explain: bool = False
                    ) -> tuple[np.ndarray, np.ndarray, dict]:
         """Top-kappa of the compacted base tier, in catalog-id space.
 
         Returns ``(scores, ids, stats)`` with stats carrying the per-shard /
-        per-block candidate counts.  The ``sharded-multihost`` backend
+        per-block candidate counts (plus the per-query prepass tile skips
+        when ``explain`` asks for them).  The ``sharded-multihost`` backend
         overrides this with the routed per-host computation + collective
         merge; everything around it (phi-mapping, delta merge, padding,
         metrics) is shared."""
-        res = self.base.query(users_j, q_tau, q_mask, kappa, exact=exact)
+        with self.tracer.span("base", exact=exact):
+            res = self.base.query(users_j, q_tau, q_mask, kappa, exact=exact,
+                                  tracer=self.tracer,
+                                  collect_tile_skips=explain)
         scores = np.asarray(res.scores, np.float32)
         ids = self.base.rows_to_ids(np.asarray(res.rows), scores)
         stats = {"shard_candidates": np.asarray(res.shard_candidates),
                  "block_candidates": res.block_candidates,
                  "tiles_skipped_frac": res.tiles_skipped_frac}
+        if explain:
+            stats["tile_skips"] = res.tile_skips
         return scores, ids, stats
+
+    def _explain_base(self, ids_out: np.ndarray, from_base: np.ndarray,
+                      base_stats: dict) -> dict:
+        """Base-tier columns of the explain dict: the winning shard per
+        result slot (-1 for delta hits and pads) and the block-union
+        prepass skip counts.  ``sharded-multihost`` overrides this to add
+        the serving placement slice and replica per slot."""
+        part = self.base.partition
+        offs = np.cumsum(part.lengths)
+        shard = np.full(ids_out.shape, -1, np.int64)
+        for qi, ki in zip(*np.nonzero(from_base)):
+            row = self.base._row_of.get(int(ids_out[qi, ki]), -1)
+            if row >= 0:
+                shard[qi, ki] = int(np.searchsorted(offs, row, side="right"))
+        out: dict = {"shard": shard.tolist()}
+        sk = base_stats.get("tile_skips")
+        if sk is not None:
+            out["blocks_skipped"] = sk.sum(axis=1).tolist()
+            out["n_blocks"] = int(sk.shape[1])
+        return out
 
     def record_last_query_stats(self, n_real: int | None = None) -> None:
         """Fold the most recent ``query()``'s discard / per-shard /

@@ -57,3 +57,8 @@ class RetrievalResult:
     scores: np.ndarray     # (Q, kappa) inner products (-inf pad)
     n_scored: np.ndarray   # (Q,) how many items were actually scored
     discarded_frac: np.ndarray  # (Q,) fraction of the item set never scored
+    # query(..., explain=True) provenance — None on the default path.  The
+    # explain dict is PURELY diagnostic: ids/scores/n_scored/discarded_frac
+    # are bit-identical with and without it (pinned by the contract suite).
+    # Keys vary by backend; see docs/observability.md for the schema.
+    explain: dict | None = None

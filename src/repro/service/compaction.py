@@ -82,9 +82,13 @@ class CompactionPlanner:
                  *, partition: Partition | None = None, n_shards: int = 1,
                  bucket: int = 256, min_overlap: int = 1, mesh=None,
                  slice_rows: int = 512, generation: int = 0,
-                 premapped: tuple[np.ndarray, np.ndarray] | None = None):
+                 premapped: tuple[np.ndarray, np.ndarray] | None = None,
+                 on_phase=None):
         if slice_rows < 1:
             raise ValueError("slice_rows must be >= 1")
+        # lifecycle hook: called as on_phase(old, new, stats) on every phase
+        # transition — the owner routes it into its event journal
+        self.on_phase = on_phase
         ids = np.asarray(ids, np.int64).ravel()
         factors = np.asarray(factors, np.float32).reshape(ids.size, cfg.k)
         order = np.argsort(ids)
@@ -161,8 +165,15 @@ class CompactionPlanner:
         is parity-safe because the map is row-independent.  segments: one
         shard's posting segment.  meta: one bn-group's block metadata.
         finalize: device upload + assembly.  Calling ``step`` when ready is
-        a no-op.
+        a no-op.  Phase transitions fire the ``on_phase`` hook.
         """
+        before = self.phase
+        phase = self._step()
+        if phase != before and self.on_phase is not None:
+            self.on_phase(before, phase, self.stats())
+        return phase
+
+    def _step(self) -> str:
         if self.phase == "ready":
             return self.phase
         self.slices_done += 1

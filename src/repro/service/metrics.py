@@ -8,6 +8,15 @@ records.  The per-shard and per-block candidate accumulators double as the
 load signal the :class:`~repro.service.repartition.Repartitioner` reads:
 ``shard_skew()`` / ``block_skew()`` (max/mean) decide when a rebalancing
 compaction is worth scheduling.
+
+Latency / queue-wait / service-time / occupancy / discard distributions live
+in fixed log-spaced-bucket :class:`~repro.obs.histogram.LogHistogram`\\ s:
+O(bins) memory over any run length (the old windowed sample lists re-sliced
+O(max_samples) on every record), and :meth:`merge` folds two metrics objects
+associatively — per-batch, per-shard or per-host — which is what makes the
+snapshot collective-safe on the multi-host tier.  Percentile keys are
+unchanged (``latency_p50_ms``/``latency_p99_ms``); their values are now
+bucketed approximations with ~2% relative error (``LogHistogram.latency``).
 """
 from __future__ import annotations
 
@@ -15,13 +24,14 @@ import time
 
 import numpy as np
 
+from repro.obs.histogram import LogHistogram
+
 __all__ = ["ServiceMetrics"]
 
 
 class ServiceMetrics:
-    def __init__(self, clock=time.monotonic, max_samples: int = 65536):
+    def __init__(self, clock=time.monotonic):
         self._clock = clock
-        self.max_samples = max_samples         # per-sample lists are windowed
         self.reset()
 
     def reset(self) -> None:
@@ -40,35 +50,45 @@ class ServiceMetrics:
         self.n_failovers = 0                   # slice reroutes after mark_down
         self.last_repartition_skew = None      # shard skew that triggered it
         self._host_queries = None              # (H,) queries served per host
-        self._occupancy: list[float] = []      # real / padded per batch
-        self._latencies: list[float] = []      # seconds, per request
-        self._discards: list[float] = []       # fraction, per request
+        self.latency_hist = LogHistogram.latency()      # s, per request
+        self.queue_wait_hist = LogHistogram.latency()   # s, enqueue -> flush
+        self.service_hist = LogHistogram.latency()      # s, flush -> done
+        self.occupancy_hist = LogHistogram.fraction()   # real/padded, batch
+        self.discard_hist = LogHistogram.fraction()     # frac, per request
         self._shard_cand = None                # (S,) accumulated candidates
         self._block_cand = None                # (n_blocks,) accumulated
 
-    def _trim(self) -> None:
-        # long-running service: percentiles over a recent window, O(1) memory
-        for name in ("_occupancy", "_latencies", "_discards"):
-            buf = getattr(self, name)
-            if len(buf) > self.max_samples:
-                setattr(self, name, buf[-self.max_samples:])
+    def histograms(self) -> dict[str, LogHistogram]:
+        """Named distribution map, as the exporters consume it."""
+        return {"latency_seconds": self.latency_hist,
+                "queue_wait_seconds": self.queue_wait_hist,
+                "service_seconds": self.service_hist,
+                "occupancy": self.occupancy_hist,
+                "discard": self.discard_hist}
 
     # ---------------------------------------------------------- recording
 
-    def record_batch(self, n_real: int, batch_size: int,
-                     latencies_s) -> None:
+    def record_batch(self, n_real: int, batch_size: int, latencies_s,
+                     queue_waits_s=None, service_s: float | None = None
+                     ) -> None:
+        """One fired microbatch: per-request total latencies, plus the
+        queue-wait / service-time split when the batcher provides it
+        (queue wait = enqueue to flush start, service = the batch's shared
+        query-fn time; total = wait + service per request)."""
         self.n_requests += n_real
         self.n_batches += 1
-        self._occupancy.append(n_real / max(batch_size, 1))
-        self._latencies.extend(float(t) for t in latencies_s)
-        self._trim()
+        self.occupancy_hist.record(n_real / max(batch_size, 1))
+        self.latency_hist.record_many(latencies_s)
+        if queue_waits_s is not None:
+            self.queue_wait_hist.record_many(queue_waits_s)
+        if service_s is not None:
+            self.service_hist.record(float(service_s))
 
     def record_query_stats(self, discard_fracs=None,
                            shard_candidates=None,
                            block_candidates=None) -> None:
         if discard_fracs is not None:
-            self._discards.extend(float(d) for d in discard_fracs)
-            self._trim()
+            self.discard_hist.record_many(discard_fracs)
         if shard_candidates is not None:
             sc = np.asarray(shard_candidates, np.float64)
             if sc.ndim == 2:                   # (Q, S) -> per-shard totals
@@ -130,6 +150,34 @@ class ServiceMetrics:
         self._shard_cand = None
         self._block_cand = None
 
+    # ------------------------------------------------------------ merging
+
+    def merge(self, other: "ServiceMetrics") -> "ServiceMetrics":
+        """Fold ``other`` into self (in place; returns self): counters add,
+        histograms merge bucket-wise (associative), the elapsed window
+        starts at the earlier ``reset`` — so per-shard or per-host metrics
+        objects reduce to one deployment-wide snapshot in any merge order.
+        Shape-tracked accumulator windows (shard/block/host load) only fold
+        when the layouts match; otherwise the larger view wins."""
+        self._t0 = min(self._t0, other._t0)
+        for name in ("n_requests", "n_batches", "n_upserts", "n_deletes",
+                     "n_compactions", "n_async_compactions",
+                     "n_compact_slices", "n_compact_aborts",
+                     "n_repartitions", "n_failovers"):
+            setattr(self, name, getattr(self, name) + getattr(other, name))
+        if other.last_repartition_skew is not None:
+            self.last_repartition_skew = other.last_repartition_skew
+        mine, theirs = self.histograms(), other.histograms()
+        for key in mine:
+            mine[key].merge(theirs[key])
+        for name in ("_shard_cand", "_block_cand", "_host_queries"):
+            a, b = getattr(self, name), getattr(other, name)
+            if a is None:
+                setattr(self, name, None if b is None else b.copy())
+            elif b is not None and a.shape == b.shape:
+                setattr(self, name, a + b)
+        return self
+
     # ---------------------------------------------------------- load signal
 
     @property
@@ -166,22 +214,26 @@ class ServiceMetrics:
 
     # ---------------------------------------------------------- reporting
 
+    @staticmethod
+    def _pct_ms(hist: LogHistogram, p: float) -> float | None:
+        v = hist.percentile(p)
+        return None if v is None else v * 1e3
+
     def snapshot(self) -> dict:
         elapsed = max(self._clock() - self._t0, 1e-9)
-        lat = np.asarray(self._latencies) if self._latencies else None
         return {
             "elapsed_s": float(elapsed),
             "n_requests": self.n_requests,
             "n_batches": self.n_batches,
             "qps": self.n_requests / elapsed,
-            "latency_p50_ms": (float(np.percentile(lat, 50)) * 1e3
-                               if lat is not None else None),
-            "latency_p99_ms": (float(np.percentile(lat, 99)) * 1e3
-                               if lat is not None else None),
-            "occupancy_mean": (float(np.mean(self._occupancy))
-                               if self._occupancy else None),
-            "discard_mean": (float(np.mean(self._discards))
-                             if self._discards else None),
+            "latency_p50_ms": self._pct_ms(self.latency_hist, 50),
+            "latency_p99_ms": self._pct_ms(self.latency_hist, 99),
+            "queue_wait_p50_ms": self._pct_ms(self.queue_wait_hist, 50),
+            "queue_wait_p99_ms": self._pct_ms(self.queue_wait_hist, 99),
+            "service_p50_ms": self._pct_ms(self.service_hist, 50),
+            "service_p99_ms": self._pct_ms(self.service_hist, 99),
+            "occupancy_mean": self.occupancy_hist.mean,   # exact running mean
+            "discard_mean": self.discard_hist.mean,
             "shard_balance": self.shard_skew(),  # max/mean candidate load
             "block_balance": self.block_skew(),
             "n_upserts": self.n_upserts,

@@ -8,6 +8,13 @@ waiting — size trigger — or (b) the oldest request has waited
 with zero factor rows (discarded on the way out), so every launch reuses the
 same compiled computation.
 
+Per-request latency decomposes at the flush point: **queue wait** (enqueue
+to flush start — the coalescing delay the batch-size/deadline policy buys
+throughput with) and **service time** (the batch's shared ``query_fn`` call)
+are recorded as separate histogram keys in ``ServiceMetrics``, and each
+flush runs under a root tracer span (``request_batch`` -> ``queue_wait`` +
+``flush``) when a sampling :class:`~repro.obs.tracing.Tracer` is attached.
+
 The design is synchronous and single-threaded on purpose: deterministic to
 test (the clock is injectable) and trivial to pump from any event loop; the
 concurrency story lives in the driver, not here.
@@ -20,6 +27,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.tracing import NOOP_TRACER
 from repro.service.metrics import ServiceMetrics
 
 __all__ = ["Microbatcher", "QueryResult"]
@@ -29,7 +37,9 @@ __all__ = ["Microbatcher", "QueryResult"]
 class QueryResult:
     ids: np.ndarray         # (kappa,) catalog ids, -1 pads
     scores: np.ndarray      # (kappa,) f32, -inf pads
-    latency_s: float
+    latency_s: float        # enqueue -> batch done (= queue_wait + service)
+    queue_wait_s: float = 0.0   # enqueue -> flush start
+    service_s: float = 0.0      # the batch's shared query_fn time
 
 
 @dataclasses.dataclass
@@ -52,7 +62,7 @@ class Microbatcher:
     def __init__(self, query_fn: Callable, dim: int, *, batch_size: int = 8,
                  max_delay_s: float = 2e-3, clock=time.monotonic,
                  metrics: ServiceMetrics | None = None,
-                 max_results: int = 65536):
+                 max_results: int = 65536, tracer=None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.query_fn = query_fn
@@ -61,6 +71,7 @@ class Microbatcher:
         self.max_delay_s = max_delay_s
         self.clock = clock
         self.metrics = metrics
+        self.tracer = NOOP_TRACER if tracer is None else tracer
         self.max_results = max_results     # uncollected results are evicted
         self._queue: list[_Pending] = []
         self._results: dict[int, QueryResult] = {}
@@ -102,18 +113,29 @@ class Microbatcher:
         users = np.zeros((self.batch_size, self.dim), np.float32)
         for i, p in enumerate(batch):
             users[i] = p.user
-        ids, scores = self.query_fn(users, len(batch))
-        t_done = self.clock()
-        lats = [t_done - p.t_submit for p in batch]
+        with self.tracer.trace("request_batch", n_real=len(batch),
+                               batch_size=self.batch_size) as root:
+            t_fire = self.clock()
+            # queue wait as a span covering the oldest enqueue -> flush start
+            self.tracer.record_span("queue_wait", batch[0].t_submit, t_fire,
+                                    n_waiting=len(batch))
+            with self.tracer.span("flush"):
+                ids, scores = self.query_fn(users, len(batch))
+            t_done = self.clock()
+            waits = [t_fire - p.t_submit for p in batch]
+            service = t_done - t_fire
+            root.set(queue_wait_max_s=max(waits), service_s=service)
+        lats = [w + service for w in waits]
         for i, p in enumerate(batch):
             self._results[p.req_id] = QueryResult(
                 ids=np.asarray(ids[i]), scores=np.asarray(scores[i]),
-                latency_s=lats[i])
+                latency_s=lats[i], queue_wait_s=waits[i], service_s=service)
         # bound memory when clients never collect: evict oldest-first
         while len(self._results) > self.max_results:
             self._results.pop(next(iter(self._results)))
         if self.metrics is not None:
-            self.metrics.record_batch(len(batch), self.batch_size, lats)
+            self.metrics.record_batch(len(batch), self.batch_size, lats,
+                                      queue_waits_s=waits, service_s=service)
 
     def result(self, req_id: int) -> QueryResult | None:
         """Pop the result for a request id (None while still queued)."""

@@ -44,9 +44,11 @@ import numpy as np
 from repro.core.inverted_index import build_segment, candidate_mask_from_table
 from repro.core.mapping import GamConfig, sparse_map
 from repro.core.retrieval import masked_topk
-from repro.kernels.gam_retrieve import RetrievalMeta, export_topk, pack_patterns
+from repro.kernels.gam_retrieve import (RetrievalMeta, expand_tile_skips,
+                                        export_topk, pack_patterns)
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
+from repro.obs.tracing import NOOP_TRACER
 from repro.service.repartition import Partition
 
 __all__ = ["ShardTopK", "ShardedGamIndex", "build_group_meta",
@@ -61,6 +63,8 @@ class ShardTopK:
     shard_candidates: np.ndarray  # (Q, S) per-shard candidate counts
     block_candidates: np.ndarray | None = None  # (Q, n_blocks) per-block
     tiles_skipped_frac: float = 0.0  # fraction of (Q_blk, N_blk) tiles pruned
+    tile_skips: np.ndarray | None = None  # (Q, n_blocks) bool prepass skips
+                                          # (explain-only; None by default)
 
 
 # -------------------------------------------------------- staged build units
@@ -378,7 +382,8 @@ class ShardedGamIndex:
         return np.add.reduceat(blk, starts, axis=1)
 
     def query(self, users: jax.Array, q_tau: jax.Array, q_mask: jax.Array,
-              kappa: int, *, exact: bool = False) -> ShardTopK:
+              kappa: int, *, exact: bool = False, tracer=None,
+              collect_tile_skips: bool = False) -> ShardTopK:
         """users (Q, k) f32 + mapped query patterns -> merged top-kappa.
 
         One fused gam_retrieve pass per bn-group (uniform partitions: exactly
@@ -389,12 +394,26 @@ class ShardedGamIndex:
         (score desc, global row asc) total order, which is what keeps a
         repartitioned catalog bit-identical to the single-launch layout.
         ``exact=True`` scores every live row through the same kernel
-        (``min_overlap=0``) — the brute-force reference path."""
+        (``min_overlap=0``) — the brute-force reference path.
+
+        ``tracer`` wraps each per-group kernel launch and the host merge in
+        spans; ``collect_tile_skips`` additionally expands the kernel's
+        per-query-block skip map to a per-query (Q, n_blocks) bool in
+        ``ShardTopK.tile_skips`` (host-side numpy over existing outputs —
+        the device computation and the answer are identical either way)."""
+        tracer = NOOP_TRACER if tracer is None else tracer
         mo = 0 if exact else self.min_overlap
-        results = [gam_retrieve(users, self.factors_g[g], q_tau, q_mask,
-                                meta, kappa, min_overlap=mo,
-                                alive=self.alive_g[g])
-                   for g, meta in enumerate(self.metas)]
+        q = int(np.asarray(users).shape[0])
+        results = []
+        for g, meta in enumerate(self.metas):
+            with tracer.span("gam_retrieve", group=g, bn=meta.bn,
+                             n_rows=meta.n_rows):
+                results.append(gam_retrieve(
+                    users, self.factors_g[g], q_tau, q_mask, meta, kappa,
+                    min_overlap=mo, alive=self.alive_g[g]))
+        skips = (np.concatenate([expand_tile_skips(r.skipped, q)
+                                 for r in results], axis=1)
+                 if collect_tile_skips and results else None)
         if len(results) == 1:
             res = results[0]
             blk = np.asarray(res.blk_counts)
@@ -402,16 +421,18 @@ class ShardedGamIndex:
                              rows=np.asarray(res.rows, np.int32),
                              shard_candidates=self._shard_candidates(blk),
                              block_candidates=blk,
-                             tiles_skipped_frac=float(res.skipped.mean()))
-        exported = [export_topk(r.vals, r.rows,
-                                offset=self.partition.group_rows(g)[0])
-                    for g, r in enumerate(results)]
-        cat_s = np.concatenate([s for s, _ in exported], axis=1)
-        cat_r = np.concatenate([r for _, r in exported], axis=1)
-        order = np.lexsort((cat_r, -cat_s), axis=-1)[:, :kappa]
-        vals = np.take_along_axis(cat_s, order, axis=-1)
-        rows = np.take_along_axis(cat_r, order, axis=-1)
-        rows = np.where(vals <= NEG / 2, -1, rows).astype(np.int32)
+                             tiles_skipped_frac=float(res.skipped.mean()),
+                             tile_skips=skips)
+        with tracer.span("group_merge", n_groups=len(results)):
+            exported = [export_topk(r.vals, r.rows,
+                                    offset=self.partition.group_rows(g)[0])
+                        for g, r in enumerate(results)]
+            cat_s = np.concatenate([s for s, _ in exported], axis=1)
+            cat_r = np.concatenate([r for _, r in exported], axis=1)
+            order = np.lexsort((cat_r, -cat_s), axis=-1)[:, :kappa]
+            vals = np.take_along_axis(cat_s, order, axis=-1)
+            rows = np.take_along_axis(cat_r, order, axis=-1)
+            rows = np.where(vals <= NEG / 2, -1, rows).astype(np.int32)
         blk = np.concatenate([np.asarray(r.blk_counts) for r in results],
                              axis=1)
         tiles = sum(np.asarray(r.skipped).size for r in results)
@@ -419,7 +440,8 @@ class ShardedGamIndex:
         return ShardTopK(scores=vals, rows=rows,
                          shard_candidates=self._shard_candidates(blk),
                          block_candidates=blk,
-                         tiles_skipped_frac=skipped / max(tiles, 1))
+                         tiles_skipped_frac=skipped / max(tiles, 1),
+                         tile_skips=skips)
 
     def query_dense_reference(self, users: jax.Array, q_tau: jax.Array,
                               q_mask: jax.Array, kappa: int, *,

@@ -277,6 +277,108 @@ def test_candidate_masks_support_matrix():
             open_retriever(_spec(backend), items=items).candidate_masks(users)
 
 
+# ------------------------------------------------------------ explain
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("exact", [False, True])
+def test_explain_is_pure_observation(backend, exact):
+    """query(..., explain=True) must never perturb the answer: ids and
+    scores are BIT-identical with and without it, on every backend, in both
+    pruned and exact mode, with a live delta segment in play."""
+    items = _factors(250, CFG.k, 40)
+    users = _factors(6, CFG.k, 41)
+    r = open_retriever(_spec(backend), items=items)
+    r.upsert(np.arange(300, 308), _factors(8, CFG.k, 42))
+    plain = r.query(users, 10, exact=exact)
+    explained = r.query(users, 10, exact=exact, explain=True)
+    np.testing.assert_array_equal(plain.ids, explained.ids)
+    np.testing.assert_array_equal(plain.scores, explained.scores)
+    np.testing.assert_array_equal(plain.n_scored, explained.n_scored)
+    np.testing.assert_array_equal(plain.discarded_frac,
+                                  explained.discarded_frac)
+    assert plain.explain is None
+    exp = explained.explain
+    assert exp is not None and exp["backend"] == backend
+    assert len(exp["n_candidates"]) == 6
+    # rerunning without explain afterwards is still bit-identical (explain
+    # left no state behind)
+    again = r.query(users, 10, exact=exact)
+    np.testing.assert_array_equal(plain.ids, again.ids)
+    np.testing.assert_array_equal(plain.scores, again.scores)
+
+
+def test_explain_backend_schemas():
+    """Each backend reports the provenance it actually has — per-shard
+    counts, block prepass skips, delta-vs-base source, winning slice and
+    replica — with shapes tied to (q, kappa)."""
+    items = _factors(300, CFG.k, 43)
+    users = _factors(5, CFG.k, 44)
+    q, kappa = 5, 10
+
+    exp = open_retriever(_spec("brute"), items=items).query(
+        users, kappa, explain=True).explain
+    assert exp["shard_candidates"] == [[300]] * q     # one logical shard
+    assert exp["n_candidates"] == [300] * q
+
+    exp = open_retriever(_spec("gam-device"), items=items).query(
+        users, kappa, explain=True).explain
+    assert len(exp["block_candidates"]) == q
+    assert len(exp["blocks_skipped"]) == q
+    assert all(0 <= s <= exp["n_blocks"] for s in exp["blocks_skipped"])
+    for cand, skipped in zip(exp["n_candidates"], exp["blocks_skipped"]):
+        assert cand >= 0 and skipped >= 0
+
+    r = open_retriever(_spec("sharded"), items=items)
+    r.upsert(np.arange(400, 410), _factors(10, CFG.k, 45))
+    res = r.query(users, kappa, explain=True)
+    exp = res.explain
+    assert np.asarray(exp["shard_candidates"]).shape == (q, 2)  # n_shards=2
+    assert np.asarray(exp["n_candidates"]).shape == (q,)
+    assert len(exp["delta_candidates"]) == q
+    src = np.asarray(exp["source"], object)
+    assert src.shape == (q, kappa)
+    assert set(src.ravel()) <= {"base", "delta", ""}
+    # source is truthful: every id >= 400 came from the delta segment
+    from_delta = res.ids >= 400
+    assert (src[from_delta] == "delta").all()
+    assert (src[(res.ids >= 0) & ~from_delta] == "base").all()
+    shard = np.asarray(exp["shard"])
+    assert shard.shape == (q, kappa)
+    assert ((shard >= 0) == (src == "base")).all()    # -1 off the base tier
+
+    r = open_retriever(_spec("sharded-multihost"), items=items)
+    exp = r.query(users, kappa, explain=True).explain
+    sl, rep = np.asarray(exp["slice"]), np.asarray(exp["replica"])
+    assert sl.shape == rep.shape == (q, kappa)
+    assert (sl >= 0).all() and (rep >= 0).all()       # no delta, no failover
+    assert sl.max() < r.base.placement.n_slices
+
+
+def test_explain_delta_item_queried_by_own_factor():
+    """A delta item queried by its own factor wins rank 0 and is labelled
+    as delta provenance."""
+    items = _factors(150, CFG.k, 46)
+    r = open_retriever(_spec("sharded"), items=items)
+    fresh = _factors(1, CFG.k, 47)
+    r.upsert([999], fresh)
+    res = r.query(fresh, 5, explain=True)
+    assert res.ids[0, 0] == 999
+    assert res.explain["source"][0][0] == "delta"
+
+
+@pytest.mark.parametrize("backend", ["srp-lsh", "superbit-lsh", "cro",
+                                     "pca-tree"])
+def test_baseline_backends_cannot_explain(backend):
+    """Hash/tree baselines keep no per-shard or per-block provenance:
+    explain=True is a typed UnsupportedOp, never a silently empty dict."""
+    items = _factors(120, CFG.k, 48)
+    users = _factors(3, CFG.k, 49)
+    r = open_retriever(RetrieverSpec(cfg=CFG, backend=backend), items=items)
+    with pytest.raises(UnsupportedOp, match="explain|provenance"):
+        r.query(users, 10, explain=True)
+
+
 # ------------------------------------------------------------ snapshot guards
 
 
