@@ -5,7 +5,10 @@ Two kinds of checks:
 * **Invariants** (no tolerance — these are correctness, not speed): fused
   kernel recall parity on every retrieval point, multi-host answers
   bit-identical to single-host, background compaction p99 strictly below
-  the synchronous stop-the-world rebuild.
+  the synchronous stop-the-world rebuild, and the QoS overload scenario's
+  "never silently wrong" contract — every outcome typed, zero wrong
+  answers under fault injection, priority-0 p99 better with QoS than
+  without.
 * **Regressions** (tolerance-gated — CI machines are noisy, so the default
   tolerance is generous; catching 3x cliffs is the goal, not 5% drift):
   service-curve p99 per (mode, batch size), compaction-scenario async p99,
@@ -103,6 +106,40 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
                 mh.get("failover", {}).get("n_failovers", 0) >= 1,
                 "failover exercised in multihost scenario",
             )
+    # QoS-under-failure invariants: every request's outcome is typed (no
+    # lost answers), nothing silently wrong under fault injection, fault
+    # routing actually exercised, and admission control earns its keep —
+    # priority-0 p99 strictly better with QoS than without
+    qos = current.get("qos_overload")
+    gate.check(bool(qos), "qos overload scenario recorded")
+    if qos:
+        for run_name in ("qos_on", "qos_off"):
+            o = qos.get(run_name, {}).get("outcomes", {})
+            gate.check(
+                o.get("lost") == 0,
+                f"qos overload {run_name}: every request typed",
+                f"lost={o.get('lost')}",
+            )
+            gate.check(
+                o.get("wrong") == 0,
+                f"qos overload {run_name}: zero silently wrong answers",
+                f"wrong={o.get('wrong')}",
+            )
+        on = qos.get("qos_on", {})
+        gate.check(
+            on.get("counters", {}).get("shed_total", 0) >= 1,
+            "qos overload: typed sheds exercised under overload",
+        )
+        gate.check(
+            on.get("counters", {}).get("n_failovers", 0) >= 1,
+            "qos overload: fault-injection reroutes exercised",
+        )
+        improvement = qos.get("p0_p99_improvement")
+        gate.check(
+            improvement is not None and improvement > 1.0,
+            "priority-0 p99 with QoS beats the no-QoS run",
+            f"off/on ratio {improvement}",
+        )
     # instrumentation invariants: the stage breakdown must be recorded, and
     # tracing at the steady-state 1% sample rate must not move p50 — the
     # bound is generous for CI noise; the honest number rides in the JSON
@@ -148,6 +185,14 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
         b_comp.get("async", {}).get("p99_ms"),
         tol,
     )
+    b_qos = baseline.get("qos_overload")
+    if qos and b_qos:
+        gate.ratio(
+            "qos overload p0 p99 (QoS on)",
+            qos.get("qos_on", {}).get("p0_p99_ms"),
+            b_qos.get("qos_on", {}).get("p0_p99_ms"),
+            tol,
+        )
     b_mh = baseline.get("multihost")
     if mh and b_mh:
         gate.ratio("multihost p99", mh.get("p99_ms"), b_mh.get("p99_ms"), tol)

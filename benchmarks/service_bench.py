@@ -27,6 +27,16 @@ the sync rebuild shows up as the p99 cliff it really is; the acceptance
 number is p99-after-trigger, background strictly below sync.  A follow-up
 skew-aware ``repartition()`` records the planned per-shard layout.
 
+The QoS overload scenario replays one fixed burst arrival process (16
+requests/round, mixed priority classes, sustained past serving capacity)
+through the service's own microbatcher twice — once under a ``QosPolicy``
+(per-class queue caps + deadlines), once with QoS off — while a seeded
+``FaultInjector`` stalls one of two multi-host replicas.  Two acceptance
+numbers: every request's outcome is exact, *flagged* degraded, or a
+*typed* shed (zero lost, zero silently wrong vs a fault-free oracle), and
+priority-0 p99 with QoS beats the no-QoS run (admission control sheds the
+backlog that would otherwise queue in front of it).
+
 Run:  PYTHONPATH=src python benchmarks/service_bench.py [--items N] [--out F]
 """
 from __future__ import annotations
@@ -262,6 +272,140 @@ def run_compaction_scenario(args) -> dict:
     return out
 
 
+# ----------------------------------------------------------- QoS overload
+
+
+def run_qos_overload_scenario(args) -> dict:
+    """Burst overload under live fault injection, QoS on vs off.
+
+    One fixed arrival process — ``rounds`` bursts of 16 requests (10
+    priority-0, 6 priority-1) against a drain capacity of 8 requests per
+    round — feeds the service's own microbatcher over a 2-host replicated
+    placement whose second host is stalled by a seeded injector on ~25% of
+    rounds.  The QoS run adds per-class queue caps and deadlines; the
+    no-QoS run serves the unbounded backlog.  Every admitted request's
+    outcome is classified (exact / flagged-degraded / typed shed / lost)
+    and every non-degraded answer is checked bit-identical against a
+    fault-free single-host oracle — the "never silently wrong" invariant
+    the regression gate enforces, alongside p0-p99(QoS) < p0-p99(no QoS).
+    """
+    from repro.service.faults import FaultInjector
+    from repro.service.qos import QosPolicy, RequestShed, ResultEvicted
+
+    rng = np.random.default_rng(13)
+    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+    n_shards = max(args.shards, 2)
+    burst, rounds, bs = 16, 12, 4
+    users = rng.normal(size=(rounds * burst, args.dim)).astype(np.float32)
+    oracle = open_retriever(
+        RetrieverSpec(cfg=cfg, backend="sharded", n_shards=n_shards,
+                      min_overlap=args.min_overlap, kappa=args.kappa),
+        items=items)
+    oracle.query(users[:1])
+
+    def run(qos_on: bool) -> dict:
+        fi = FaultInjector("stall=0.25,slow=0.25:0.05,hosts=1", seed=0)
+        svc = open_retriever(
+            RetrieverSpec(cfg=cfg, backend="sharded-multihost",
+                          n_shards=n_shards, n_hosts=2, replication=2,
+                          min_overlap=args.min_overlap, kappa=args.kappa,
+                          batch_size=bs, max_delay_s=60.0),
+            items=items, faults=fi)
+        # warm the jit cache, then size the deadlines off steady state
+        warm = rng.normal(size=(bs, args.dim)).astype(np.float32)
+        svc.query(warm)
+        t0 = time.perf_counter()
+        svc.query(warm)
+        t_batch = max(time.perf_counter() - t0, 1e-4)
+        if qos_on:
+            policy = QosPolicy(queue_caps=(8, 4),
+                               deadlines_s=(60.0, 5 * t_batch),
+                               hedge_factor=3.0)
+            svc.qos = policy
+            svc.batcher.policy = policy
+        svc.metrics.reset()
+
+        mb = svc.batcher
+        outcomes = {"served_exact": 0, "served_degraded": 0,
+                    "shed_admission": 0, "shed_deadline": 0,
+                    "shed_no_live_replica": 0, "evicted": 0,
+                    "lost": 0, "wrong": 0}
+        admitted: list[tuple[int, int, int]] = []   # (req_id, row, priority)
+        row = 0
+        for _ in range(rounds):
+            # hold the size trigger so the whole burst lands as one backlog,
+            # then drain two batches — 8 served vs 16 arriving = overload
+            mb.batch_size = len(users) + 1
+            for j in range(burst):
+                prio = 0 if j < 10 else 1
+                try:
+                    admitted.append((mb.submit(users[row], priority=prio),
+                                     row, prio))
+                except RequestShed:
+                    outcomes["shed_admission"] += 1
+                row += 1
+            mb.batch_size = bs
+            mb.flush()
+            mb.flush()
+        while mb.pending:
+            mb.flush()
+
+        lats: dict[int, list[float]] = {0: [], 1: []}
+        for rid, idx, prio in admitted:
+            got = mb.result(rid)
+            if got is None:
+                outcomes["lost"] += 1
+            elif isinstance(got, RequestShed):
+                key = ("shed_deadline" if got.reason == "deadline"
+                       else "shed_no_live_replica")
+                outcomes[key] += 1
+            elif isinstance(got, ResultEvicted):
+                outcomes["evicted"] += 1
+            else:
+                lats[prio].append(got.latency_s)
+                if got.degraded:
+                    outcomes["served_degraded"] += 1
+                    continue
+                outcomes["served_exact"] += 1
+                want = oracle.query(users[idx][None])
+                if not (np.array_equal(got.ids, want.ids[0])
+                        and np.array_equal(got.scores, want.scores[0])):
+                    outcomes["wrong"] += 1
+        snap = svc.metrics.snapshot()
+        pct = lambda v, q: (float(np.percentile(v, q)) * 1e3 if v else None)
+        return {
+            "qos": qos_on,
+            "t_batch_ms": t_batch * 1e3,
+            "outcomes": outcomes,
+            "p0_served": len(lats[0]),
+            "p1_served": len(lats[1]),
+            "p0_p50_ms": pct(lats[0], 50),
+            "p0_p99_ms": pct(lats[0], 99),
+            "p1_p99_ms": pct(lats[1], 99),
+            "counters": {k: snap[k] for k in (
+                "shed_total", "shed_queue_full", "shed_deadline",
+                "shed_no_live_replica", "evicted_total", "degraded_total",
+                "n_failovers", "hedge_issued", "hedge_wins",
+                "breaker_opens", "breaker_probes", "breaker_closes")},
+            "faults": fi.stats(),
+        }
+
+    out = {"burst": burst, "rounds": rounds, "batch_size": bs,
+           "qos_on": run(True), "qos_off": run(False)}
+    out["p0_p99_improvement"] = (out["qos_off"]["p0_p99_ms"]
+                                 / max(out["qos_on"]["p0_p99_ms"], 1e-9))
+    on, off = out["qos_on"], out["qos_off"]
+    print(f"qos overload: p0 p99 {off['p0_p99_ms']:.2f}ms (no QoS) -> "
+          f"{on['p0_p99_ms']:.2f}ms (QoS) x{out['p0_p99_improvement']:.1f}; "
+          f"sheds={on['counters']['shed_total']} "
+          f"failovers={on['counters']['n_failovers']} "
+          f"wrong={on['outcomes']['wrong'] + off['outcomes']['wrong']} "
+          f"lost={on['outcomes']['lost'] + off['outcomes']['lost']}")
+    return out
+
+
 # ------------------------------------------------------------- multi-host
 
 
@@ -444,6 +588,7 @@ def main(argv=None) -> None:
     stages = run_stage_scenario(args)
     overhead = run_overhead_scenario(args)
     compaction = run_compaction_scenario(args)
+    qos_overload = run_qos_overload_scenario(args)
     multihost = run_multihost_scenario(args)
 
     out = {
@@ -457,6 +602,7 @@ def main(argv=None) -> None:
         "stages": stages,
         "overhead": overhead,
         "compaction": compaction,
+        "qos_overload": qos_overload,
         "multihost": multihost,
     }
     with open(args.out, "w") as f:

@@ -43,6 +43,42 @@ def _trace_options(args) -> tuple:
     return (("trace_sample", args.trace_sample),)
 
 
+def _qos_policy(args):
+    """A QosPolicy from the CLI knobs (the default is the no-op policy, so
+    runs without QoS flags behave exactly as before)."""
+    from repro.service.qos import QosPolicy
+    kw = {"breaker_failures": args.breaker_failures}
+    if args.queue_cap:
+        kw["queue_caps"] = (args.queue_cap,)
+    if args.deadline_ms:
+        kw["deadlines_s"] = (args.deadline_ms * 1e-3,)
+    if args.hedge_factor:
+        kw["hedge_factor"] = args.hedge_factor
+    return QosPolicy(**kw)
+
+
+def _fault_injector(args):
+    from repro.service.faults import FaultInjector
+    return (FaultInjector(args.inject_faults, seed=args.fault_seed)
+            if args.inject_faults else None)
+
+
+def _guarded_query(svc, users, deadline_s=None):
+    """One query round that survives unservable rounds: a
+    :class:`~repro.service.collective.NoLiveReplica` (every replica of some
+    slice down or faulted) becomes a typed, counted shed and the server
+    keeps serving — later rounds may succeed after a probe closes the
+    breaker.  Returns the RetrievalResult, or None for a shed round."""
+    from repro.service.collective import NoLiveReplica
+    try:
+        return svc.query(users, deadline_s=deadline_s)
+    except NoLiveReplica as e:
+        svc.metrics.record_shed("no_live_replica")
+        svc.events.emit("request_shed", reason="no_live_replica",
+                        slice=e.slice_id)
+        return None
+
+
 def _open_metrics_writer(args, suffix: str = ""):
     """A periodic JSON-lines metrics writer for ``--metrics-out`` (None when
     the flag is absent or names a ``.prom`` file — Prometheus text is a
@@ -92,6 +128,9 @@ def serve_retrieval(args):
     exceeds S."""
     from repro.core.mapping import GamConfig
     from repro.retriever import RetrieverSpec, open_retriever
+    from repro.service.faults import FaultInjected
+    from repro.service.microbatch import QueryResult
+    from repro.service.qos import RequestShed
 
     rng = np.random.default_rng(0)
     items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
@@ -103,7 +142,9 @@ def serve_retrieval(args):
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
         batch_size=args.service_batch, max_delay_s=args.max_delay_ms * 1e-3,
         options=_trace_options(args))
-    svc = open_retriever(spec, items=items)
+    qos_on = bool(args.queue_cap or args.deadline_ms)
+    svc = open_retriever(spec, items=items, qos=_qos_policy(args),
+                         faults=_fault_injector(args))
     writer = _open_metrics_writer(args)
 
     # warm the base-path jit cache, then restart the clock: index build and
@@ -115,14 +156,24 @@ def serve_retrieval(args):
     svc.metrics.reset()
 
     pending = []
+    n_rejected = n_upsert_faults = 0
     try:
         for r in range(args.requests):
-            pending.append(svc.batcher.submit(
-                rng.normal(size=args.dim).astype(np.float32)))
+            user = rng.normal(size=args.dim).astype(np.float32)
+            try:
+                # with QoS on, alternate priority classes so the coalescing
+                # and per-class shed accounting are visible in the demo
+                pending.append(svc.batcher.submit(
+                    user, priority=r % 2 if qos_on else 0))
+            except RequestShed:
+                n_rejected += 1            # admission control said no
             if r % 16 == 15:                   # interleave streamed upserts
                 new_id = args.items + r
-                svc.upsert([new_id],
-                           rng.normal(size=(1, args.dim)).astype(np.float32))
+                try:
+                    svc.upsert([new_id], rng.normal(size=(1, args.dim))
+                               .astype(np.float32))
+                except FaultInjected:
+                    n_upsert_faults += 1   # injected delta-apply error
             svc.batcher.poll()
             # maintenance triggers: mechanism on the retriever, policy here
             if args.auto_compact and len(svc.delta) >= args.auto_compact:
@@ -143,13 +194,25 @@ def serve_retrieval(args):
               file=sys.stderr)
         svc.events.dump_jsonl(sys.stderr)
         raise
-    served = sum(svc.batcher.result(p) is not None for p in pending)
+    outcomes = [svc.batcher.result(p) for p in pending]
+    served = sum(isinstance(o, QueryResult) for o in outcomes)
+    n_shed = (sum(isinstance(o, RequestShed) for o in outcomes)
+              + n_rejected)
+    n_degraded = sum(isinstance(o, QueryResult) and o.degraded
+                     for o in outcomes)
 
     snap = svc.metrics.snapshot()
     print(f"service: {args.items}+{snap['n_upserts']} items, "
           f"{args.shards} shards, batch={args.service_batch}")
     print(f"served {served}/{args.requests} requests in "
           f"{snap['elapsed_s']:.2f}s  ({snap['qps']:.1f} QPS)")
+    if qos_on or args.inject_faults:
+        print(f"qos: shed={n_shed} "
+              f"(queue_full={snap['shed_queue_full']}, "
+              f"deadline={snap['shed_deadline']}, "
+              f"no_live_replica={snap['shed_no_live_replica']})  "
+              f"degraded={n_degraded}  evicted={snap['evicted_total']}  "
+              f"upsert faults={n_upsert_faults}")
     print(f"latency p50={snap['latency_p50_ms']:.2f}ms "
           f"p99={snap['latency_p99_ms']:.2f}ms  "
           f"occupancy={snap['occupancy_mean']:.2f}")
@@ -203,6 +266,7 @@ def serve_retrieval_multihost(args):
     its deadline coalescing is wall-clock dependent and would diverge)."""
     from repro.core.mapping import GamConfig
     from repro.retriever import RetrieverSpec, open_retriever
+    from repro.service.faults import FaultInjected
 
     jax.config.update("jax_cpu_collectives_implementation", "gloo")
     jax.distributed.initialize(args.coordinator, args.hosts, args.host_id)
@@ -218,7 +282,10 @@ def serve_retrieval_multihost(args):
         n_hosts=args.hosts, replication=args.replication,
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
         batch_size=args.service_batch, options=_trace_options(args))
-    svc = open_retriever(spec, items=items)
+    # the injector is seeded, so every SPMD process draws the same fates
+    # and the chaos (stalls, breaker trips, reroutes) stays collective
+    fi = _fault_injector(args)
+    svc = open_retriever(spec, items=items, qos=_qos_policy(args), faults=fi)
     # per-host artifact files; same tracer seed everywhere, so the h*.jsonl
     # files share trace ids and reassemble into cross-host traces
     writer = _open_metrics_writer(args, suffix=f".h{me}")
@@ -229,18 +296,41 @@ def serve_retrieval_multihost(args):
     svc.metrics.reset()
 
     n_batches = max(1, args.requests // bs)
+    deadline_s = args.deadline_ms * 1e-3 if args.deadline_ms else None
     lat = []
+    n_shed_rounds = n_degraded = n_wrong = n_verified = n_upsert_faults = 0
     try:
         for b in range(n_batches):
             users = rng.normal(size=(bs, args.dim)).astype(np.float32)
             if args.fail_host is not None and b == n_batches // 2:
                 svc.mark_down(args.fail_host)
             if b % 4 == 3:                    # interleaved SPMD upserts
-                svc.upsert([args.items + b],
-                           rng.normal(size=(1, args.dim)).astype(np.float32))
+                try:
+                    svc.upsert([args.items + b],
+                               rng.normal(size=(1, args.dim))
+                               .astype(np.float32))
+                except FaultInjected:
+                    # raised before any mutation, and identically on every
+                    # host (same seeded draw) — the delta stays consistent
+                    n_upsert_faults += 1
             t0 = time.perf_counter()
-            svc.query(users)
+            got = _guarded_query(svc, users, deadline_s=deadline_s)
             lat.append(time.perf_counter() - t0)
+            if got is None:
+                n_shed_rounds += 1            # typed shed; keep serving
+                continue
+            n_degraded += bool(got.degraded)
+            if args.verify and not got.degraded:
+                # ground truth = the same SPMD query with faults off; an
+                # answer under chaos must be the same bits (replica
+                # exactness), else it counts as WRONG
+                svc.faults = None
+                want = svc.query(users)
+                svc.faults = fi
+                n_verified += 1
+                if not (np.array_equal(got.ids, want.ids)
+                        and np.array_equal(got.scores, want.scores)):
+                    n_wrong += 1
             # feed the skew signal (the microbatcher does this on the
             # single-host path); the gathered per-shard candidate counts are
             # identical on every host, so the rebalance trigger stays SPMD
@@ -276,6 +366,23 @@ def serve_retrieval_multihost(args):
         print(f"routing={hosts['routing']}  down={hosts['down']}  "
               f"failovers={hosts['n_failovers']}  "
               f"host load={hosts['host_load']}")
+        if args.inject_faults:
+            snap = svc.metrics.snapshot()
+            print(f"chaos: {fi.stats()}")
+            print(f"chaos: shed rounds={n_shed_rounds}  "
+                  f"degraded={n_degraded}  upsert faults={n_upsert_faults}  "
+                  f"breaker open/probe/close="
+                  f"{snap['breaker_opens']}/{snap['breaker_probes']}/"
+                  f"{snap['breaker_closes']}  "
+                  f"hedges={snap['hedge_issued']}")
+        if args.verify:
+            print(f"verify: {n_verified} rounds bit-identical to fault-free "
+                  f"re-execution, {n_wrong} WRONG "
+                  f"({n_shed_rounds} shed, {n_degraded} degraded)")
+    if args.verify and n_wrong:
+        print(f"FAILED: host {me} saw {n_wrong} wrong answers under faults",
+              file=sys.stderr)
+        sys.exit(1)
     _finish_observability(args, svc, writer, suffix=f".h{me}")
     if args.snapshot and args.replication != args.hosts:
         # the backend would raise UnsupportedOp (no host holds every
@@ -360,6 +467,32 @@ def main():
                     metavar="RATE",
                     help="probability of tracing a request batch end-to-end "
                          "(0 = tracing off, its default noop path)")
+    # QoS + chaos knobs
+    ap.add_argument("--queue-cap", type=int, default=0, metavar="N",
+                    help="admission control: shed submits past N queued "
+                         "requests per priority class (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0, metavar="MS",
+                    help="per-request deadline; expired requests shed, "
+                         "tight ones answer degraded (flagged) down the "
+                         "degrade ladder (0 = none)")
+    ap.add_argument("--hedge-factor", type=float, default=0.0, metavar="F",
+                    help="hedged reads: re-issue a slice when the serving "
+                         "replica runs past F x its own p99 (0 = off; "
+                         "single-process placement only)")
+    ap.add_argument("--breaker-failures", type=int, default=3, metavar="K",
+                    help="circuit breaker: auto-mark_down a host after K "
+                         "consecutive observed failures")
+    ap.add_argument("--inject-faults", metavar="SPEC",
+                    help="live fault injection, e.g. "
+                         "'stall=0.1,drop=0.05,slow=0.2:0.02,"
+                         "delta_error=0.01,hosts=1' (seeded; SPMD-"
+                         "deterministic across hosts)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --inject-faults (default 0)")
+    ap.add_argument("--verify", action="store_true",
+                    help="multihost: re-run every non-degraded round with "
+                         "faults disabled and require bit-identical "
+                         "answers (exits 1 on any wrong answer)")
     args = ap.parse_args()
 
     if args.service and args.hosts > 1:

@@ -116,7 +116,15 @@ class Retriever(abc.ABC):
         prepass block skips, delta-vs-base hit origin, winning replica) to
         ``result.explain`` WITHOUT changing the answers — backends that
         cannot explain raise :class:`UnsupportedOp` rather than silently
-        returning ``explain=None``."""
+        returning ``explain=None``.
+
+        Serving backends additionally accept ``deadline_s`` (remaining
+        per-request budget in seconds): when the budget is tight relative
+        to the backend's cost estimate, the answer steps down a
+        deterministic degrade ladder (skip exact re-rank -> raise the
+        prune threshold -> base segment only) and comes back with
+        ``result.degraded=True`` and the rung in ``result.degrade_rung`` —
+        never silently reduced."""
 
     def candidate_masks(self, users) -> Any:
         """(Q, N) dense candidate masks on device (jit-traceable).  Only

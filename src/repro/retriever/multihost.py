@@ -52,12 +52,14 @@ import numpy as np
 
 from repro.kernels.gam_retrieve import export_topk
 from repro.kernels.gam_score import NEG
+from repro.obs.histogram import LogHistogram
 from repro.obs.tracing import NOOP_TRACER, Tracer
 from repro.retriever.api import RetrieverSpec
 from repro.retriever.sharded import ShardedRetriever
 from repro.retriever.types import UnsupportedOp
 from repro.service import collective
-from repro.service.collective import HostPlacement
+from repro.service.collective import HostPlacement, NoLiveReplica
+from repro.service.qos import HealthTracker
 from repro.service.repartition import Partition
 from repro.service.sharded_index import ShardedGamIndex
 
@@ -281,7 +283,9 @@ class MultiHostIndex:
     # ------------------------------------------------------------- query
 
     def slices_topk(self, slice_ids, users_j, q_tau, q_mask, kappa: int,
-                    exact: bool, tracer=None, collect_tile_skips: bool = False
+                    exact: bool, tracer=None,
+                    collect_tile_skips: bool = False,
+                    min_overlap: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
         """One host's contribution: fused-kernel top-kappa over each listed
         local slice, exported to global rows and merged into a single
@@ -301,7 +305,8 @@ class MultiHostIndex:
             with tracer.span("slice_topk", slice=sl):
                 res = self.get_slice(sl).query(
                     users_j, q_tau, q_mask, kappa, exact=exact,
-                    tracer=tracer, collect_tile_skips=collect_tile_skips)
+                    tracer=tracer, collect_tile_skips=collect_tile_skips,
+                    min_overlap=min_overlap)
             s, r = export_topk(res.scores, res.rows,
                                offset=self.slice_row_offset(sl))
             parts_s.append(s)
@@ -341,6 +346,18 @@ class MultiHostShardedRetriever(ShardedRetriever):
                             else None)
         self._down: frozenset[int] = frozenset()
         super().__init__(spec, **kw)
+        # circuit breaker: observed per-host failure streaks (fault fates
+        # feed it) auto-mark_down; exponential-backoff probes auto-mark_up.
+        # Deterministic given the clock + the seeded fates, so SPMD hosts
+        # open/close breakers in lockstep.
+        self.health = HealthTracker(
+            spec.n_hosts, failures=self.qos.breaker_failures,
+            probe_s=self.qos.breaker_probe_s,
+            probe_max_s=self.qos.breaker_probe_max_s, clock=self.clock,
+            on_open=lambda h: self.mark_down(h),
+            on_close=lambda h: self.mark_up(h),
+            metrics=self.metrics, events=self.events)
+        self._host_lat: dict[int, LogHistogram] = {}   # hedge-delay signal
         if self._distributed:
             # host-id-annotate this process's spans and events so the
             # per-host JSONL exports reassemble into one cross-host trace
@@ -410,17 +427,121 @@ class MultiHostShardedRetriever(ShardedRetriever):
 
     # ------------------------------------------------------------ queries
 
+    def _fates_faulted(self, fates) -> frozenset[int]:
+        """Hosts the fault fates made unusable this round (stall/drop)."""
+        if fates is None:
+            return frozenset()
+        return frozenset(h for h, (kind, _) in enumerate(fates)
+                         if kind in ("stall", "drop"))
+
+    def _probe_tick(self, fates) -> None:
+        """Probe breaker-opened hosts whose backoff elapsed: a probe against
+        a non-faulted host succeeds and closes the breaker (auto mark_up);
+        a faulted one fails and doubles the backoff."""
+        faulted = self._fates_faulted(fates)
+        for h in self.health.due_probes():
+            self.health.probe_result(h, h not in faulted)
+
+    def _route_around_faults(self, placement, fates) -> list[int]:
+        """Fault-aware routing for one query round: each slice goes to its
+        first replica that is neither marked down nor fate-faulted this
+        round (reroutes counted as failovers; faulted primaries feed the
+        breaker's failure streaks, served hosts reset them).  A slice whose
+        every live replica is faulted raises the typed NoLiveReplica — the
+        round is unservable, never silently truncated."""
+        down = self._down
+        live_faulted = self._fates_faulted(fates) - down
+        routing: list[int] = []
+        n_reroutes = 0
+        attempted: set[int] = set()
+        for sl, reps in enumerate(placement.replicas):
+            primary = next((h for h in reps if h not in down), None)
+            if primary is None:
+                raise NoLiveReplica(sl, reps)
+            attempted.add(primary)
+            eff = next((h for h in reps
+                        if h not in down and h not in live_faulted), None)
+            if eff is None:
+                raise NoLiveReplica(sl, reps)
+            if eff != primary:
+                n_reroutes += 1
+            routing.append(eff)
+        if n_reroutes:
+            self.metrics.record_failover(n_reroutes)
+        # breaker bookkeeping: only hosts we would have talked to count
+        for h in sorted(attempted & live_faulted):
+            self.health.record_failure(h)
+        for h in set(routing):
+            self.health.record_success(h)
+        return routing
+
+    def _hedge_delay(self, host: int) -> float | None:
+        """p99-based hedge threshold for ``host`` (None = not enough
+        samples yet, or hedging disabled)."""
+        factor = self.qos.hedge_factor
+        if factor is None:
+            return None
+        hist = self._host_lat.get(host)
+        if hist is None or hist.n < self.qos.hedge_min_samples:
+            return None
+        p99 = hist.percentile(99)
+        return None if p99 is None else p99 * factor
+
+    def _hedge_slices(self, slice_ids, slow_host, slow_elapsed, fates,
+                      users_j, q_tau, q_mask, kappa, exact,
+                      min_overlap) -> None:
+        """Hedged read: the primary call for ``slice_ids`` exceeded its
+        hedge delay, so re-issue each slice to its next live unfaulted
+        replica and keep whichever answer lands first.  Because replicas
+        are exact copies, BOTH answers are the same bits — the hedge buys
+        tail latency, never correctness — so the primary's (already
+        computed) result is kept and only latency/win-rate is recorded."""
+        base: MultiHostIndex = self.base
+        down = self._down
+        live_faulted = self._fates_faulted(fates) - down
+        for sl in slice_ids:
+            alt = next((x for x in base.placement.replicas[sl]
+                        if x != slow_host and x not in down
+                        and x not in live_faulted), None)
+            if alt is None:
+                continue
+            t0 = self.clock()
+            with self.tracer.span("hedge", slice=sl, primary=slow_host,
+                                  hedge_host=alt):
+                base.slices_topk((sl,), users_j, q_tau, q_mask, kappa,
+                                 exact, min_overlap=min_overlap)
+            el = self.clock() - t0
+            if fates is not None and fates[alt][0] == "slow":
+                el += fates[alt][1]
+            self._host_lat.setdefault(
+                alt, LogHistogram.latency()).record(el)
+            self.metrics.record_hedge(won=el < slow_elapsed)
+            self.events.emit("hedged_read", slice=sl, primary=slow_host,
+                             hedge_host=alt, won=el < slow_elapsed)
+
     def _base_topk(self, users_j, q_tau, q_mask, kappa, exact,
-                   explain=False):
+                   explain=False, min_overlap=None):
         """Routed per-host kernel passes + collective accumulator merge.
 
         Bit-identical to the parent's single-index path: each slice is
         served by exactly one live replica, per-slice accumulators are
         exported to global rows, and the merge realises the same
-        (score desc, row asc) total order the kernel itself uses."""
+        (score desc, row asc) total order the kernel itself uses.  Under
+        fault injection the router serves around fate-faulted hosts (and
+        the breaker turns failure streaks into automatic mark_down); with
+        hedging enabled, a host call slower than its own p99-based hedge
+        delay re-issues the affected slices to the next live replica —
+        first response wins, and either answer is the same bits because
+        replicas are exact copies."""
         base: MultiHostIndex = self.base
         placement = base.placement
-        routing = placement.route_strict(self._down)
+        # one fate per host per round, drawn identically on every SPMD
+        # process (seeded) — routing stays collective-consistent
+        fates = (self.faults.host_fates(placement.n_hosts)
+                 if self.faults is not None else None)
+        self._probe_tick(fates)
+        routing = self._route_around_faults(placement, fates)
+        faulted = self._fates_faulted(fates)
         q = int(users_j.shape[0])
         per_host = np.zeros(placement.n_hosts, np.int64)
         for h in routing:
@@ -433,7 +554,7 @@ class MultiHostShardedRetriever(ShardedRetriever):
             with self.tracer.span("host_topk", host=me, n_slices=len(mine)):
                 s, r, cand, st = base.slices_topk(
                     mine, users_j, q_tau, q_mask, kappa, exact,
-                    tracer=self.tracer)
+                    tracer=self.tracer, min_overlap=min_overlap)
             local_tiles = np.array(
                 [sum(f * nb for f, nb in st["tiles"]),
                  sum(nb for _, nb in st["tiles"])], np.float32)
@@ -455,11 +576,23 @@ class MultiHostShardedRetriever(ShardedRetriever):
             for h in sorted(set(routing)):
                 mine = tuple(sl for sl in range(placement.n_slices)
                              if routing[sl] == h)
+                t0 = self.clock()
                 with self.tracer.span("host_topk", host=h,
                                       n_slices=len(mine)):
                     s, r, cand_h, st = base.slices_topk(
                         mine, users_j, q_tau, q_mask, kappa, exact,
-                        tracer=self.tracer, collect_tile_skips=explain)
+                        tracer=self.tracer, collect_tile_skips=explain,
+                        min_overlap=min_overlap)
+                elapsed = self.clock() - t0
+                if fates is not None and fates[h][0] == "slow":
+                    elapsed += fates[h][1]       # simulated slow replica
+                hedge_after = self._hedge_delay(h)
+                self._host_lat.setdefault(
+                    h, LogHistogram.latency()).record(elapsed)
+                if hedge_after is not None and elapsed > hedge_after:
+                    self._hedge_slices(mine, h, elapsed, fates, users_j,
+                                       q_tau, q_mask, kappa, exact,
+                                       min_overlap)
                 parts_s.append(s)
                 parts_r.append(r)
                 cand += cand_h

@@ -55,8 +55,10 @@ from repro.retriever.snapshot import read_snapshot, write_snapshot
 from repro.retriever.types import RetrievalResult, UnsupportedOp
 from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
+from repro.service.faults import FaultInjected
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher
+from repro.service.qos import QosPolicy
 from repro.service.repartition import MapCache, Partition, Repartitioner
 from repro.service.sharded_index import ShardedGamIndex
 
@@ -67,10 +69,17 @@ _PAD_ID = np.int64(2**62)      # sorts after every real id on score ties
 
 class ShardedRetriever(Retriever):
     def __init__(self, spec: RetrieverSpec, *, mesh=None,
-                 clock=time.monotonic, tracer=None, **_):
+                 clock=time.monotonic, tracer=None, qos=None, faults=None,
+                 **_):
         super().__init__(spec)
         self.mesh = mesh
         self.clock = clock
+        # QoS policy: injected, spec-option-driven, or the no-op default;
+        # the fault injector is None outside chaos runs
+        self.qos: QosPolicy = (qos if qos is not None
+                               else QosPolicy.from_spec(spec))
+        self.faults = faults
+        self._cost_est: float | None = None    # EWMA full-query seconds
         self.catalog: dict[int, np.ndarray] = {}
         self.metrics = ServiceMetrics(clock)
         # tracing is opt-in: spec option trace_sample > 0 (or an injected
@@ -103,7 +112,7 @@ class ShardedRetriever(Retriever):
         self.batcher = Microbatcher(
             self._batch_query_fn, spec.cfg.k, batch_size=spec.batch_size,
             max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics,
-            tracer=self.tracer)
+            tracer=self.tracer, policy=self.qos, events=self.events)
         self._last_query_stats: dict = {}
 
     def _build_base(self, factors: np.ndarray, ids: np.ndarray,
@@ -147,7 +156,11 @@ class ShardedRetriever(Retriever):
         return self
 
     def upsert(self, ids, factors) -> None:
-        """Insert or overwrite items; visible to the very next query."""
+        """Insert or overwrite items; visible to the very next query.
+        Under fault injection a dealt delta-apply error raises the typed
+        :class:`FaultInjected` BEFORE any state mutates (atomic failure —
+        a retry applies cleanly, nothing half-lands)."""
+        self._maybe_inject_delta_fault("upsert")
         ids = np.asarray(ids, np.int64).ravel()
         factors = np.asarray(factors, np.float32).reshape(
             ids.size, self.spec.cfg.k)
@@ -161,6 +174,7 @@ class ShardedRetriever(Retriever):
         self.metrics.record_upsert(ids.size)
 
     def delete(self, ids) -> None:
+        self._maybe_inject_delta_fault("delete")
         ids = np.asarray(ids, np.int64).ravel()
         for i in ids:
             self.catalog.pop(int(i), None)
@@ -170,6 +184,11 @@ class ShardedRetriever(Retriever):
         if self._planner is not None:
             self._planner.record_delete(ids)
         self.metrics.record_delete(ids.size)
+
+    def _maybe_inject_delta_fault(self, op: str) -> None:
+        if self.faults is not None and self.faults.roll_delta_error():
+            self.events.emit("fault_injected", fault="delta_apply", op=op)
+            raise FaultInjected("delta_apply")
 
     # ------------------------------------------------------- maintenance
 
@@ -399,12 +418,20 @@ class ShardedRetriever(Retriever):
 
     # ------------------------------------------------------------ queries
 
-    def query(self, users, kappa=None, *, exact=False,
-              explain=False) -> RetrievalResult:
+    def query(self, users, kappa=None, *, exact=False, explain=False,
+              deadline_s=None) -> RetrievalResult:
         """``exact=True`` scores every live item through the same kernel —
         the brute-force reference the benchmark compares against.
         ``explain=True`` attaches shard/delta provenance without changing
         any answer (the kernel already computes everything explain reports).
+
+        ``deadline_s`` is the remaining budget for this call: when it is
+        short relative to the EWMA cost estimate of a full query, the
+        deterministic degrade ladder steps down (skip the exact re-rank ->
+        raise the prune threshold one notch -> answer from the base segment
+        only) and the result is stamped ``degraded=True`` with the rung
+        that fired — a reduced-work answer is never silently mistaken for
+        the full one.  With no deadline (the default) nothing changes.
 
         While a background compaction is in flight, each query first
         advances it by one bounded slice (the "interleaved with queries"
@@ -415,19 +442,45 @@ class ShardedRetriever(Retriever):
         kappa = self.spec.kappa if kappa is None else int(kappa)
         users = np.asarray(users, np.float32)
         q = users.shape[0]
+        t_start = self.clock()
+        # degrade-ladder selection: pure function of budget / cost estimate
+        rung = (self.qos.choose_rung(deadline_s, self._cost_est)
+                if deadline_s is not None else 0)
+        applied: list[str] = []
+        eff_exact = exact
+        if rung >= 1 and exact:
+            eff_exact = False
+            applied.append("skip_exact")
+        eff_overlap = None
+        if rung >= 2:
+            eff_overlap = self.spec.min_overlap + 1
+            applied.append("raise_overlap")
+        skip_delta = rung >= 3
+        if skip_delta:
+            applied.append("base_only")
+        degraded = bool(applied)
+        span_kw = ({"degraded": True, "degrade_rung": applied[-1]}
+                   if degraded else {})
         # root trace when called directly; child span when the microbatcher
         # already opened the request_batch root around us
-        with self.tracer.trace_or_span("query", q=q, kappa=kappa):
+        with self.tracer.trace_or_span("query", q=q, kappa=kappa, **span_kw):
             with self.tracer.span("map"):
                 users_j = jnp.asarray(users)
                 tau, vals = sparse_map(users_j, self.spec.cfg)
                 q_mask = vals != 0.0
 
             b_scores, b_ids, base_stats = self._base_topk(
-                users_j, tau, q_mask, kappa, exact, explain=explain)
-            with self.tracer.span("delta", n_delta=len(self.delta)):
-                d_scores, d_ids, d_cand = self.delta.query(
-                    users_j, tau, q_mask, kappa, exact=exact)
+                users_j, tau, q_mask, kappa, eff_exact, explain=explain,
+                min_overlap=eff_overlap)
+            if skip_delta:
+                d_scores = np.zeros((q, 0), np.float32)
+                d_ids = np.zeros((q, 0), np.int64)
+                d_cand = np.zeros(q, np.int64)
+            else:
+                with self.tracer.span("delta", n_delta=len(self.delta)):
+                    d_scores, d_ids, d_cand = self.delta.query(
+                        users_j, tau, q_mask, kappa, exact=eff_exact,
+                        min_overlap=eff_overlap)
 
             with self.tracer.span("merge", kappa=kappa):
                 cat_scores = np.concatenate([b_scores, d_scores], axis=1)
@@ -465,18 +518,35 @@ class ShardedRetriever(Retriever):
                     base_stats["shard_candidates"], np.int64).tolist(),
                 "delta_candidates": np.asarray(d_cand, np.int64).tolist(),
                 "source": src.tolist(),
+                "degraded": degraded,
+                "degrade_rung": applied[-1] if degraded else None,
             }
             exp.update(self._explain_base(ids_out, src == "base",
                                           base_stats))
+        if degraded:
+            self.metrics.record_degraded(applied[-1])
+            # decay the estimate while degrading, so one cost spike (e.g. a
+            # delta-capacity recompile) cannot lock the ladder down forever:
+            # the estimate drifts back under the threshold and the next
+            # query re-probes full service, refreshing the EWMA honestly
+            if self._cost_est is not None:
+                self._cost_est *= 0.9
+        elif rung == 0:
+            # EWMA full-path cost: what choose_rung compares budgets against
+            el = self.clock() - t_start
+            self._cost_est = (el if self._cost_est is None
+                              else 0.7 * self._cost_est + 0.3 * el)
         return RetrievalResult(
             ids=ids_out, scores=sc_out,
             n_scored=np.asarray(n_cand, np.int64),
             discarded_frac=discard,
             explain=exp,
+            degraded=degraded,
+            degrade_rung=applied[-1] if degraded else None,
         )
 
     def _base_topk(self, users_j, q_tau, q_mask, kappa: int, exact: bool,
-                   explain: bool = False
+                   explain: bool = False, min_overlap: int | None = None
                    ) -> tuple[np.ndarray, np.ndarray, dict]:
         """Top-kappa of the compacted base tier, in catalog-id space.
 
@@ -489,7 +559,8 @@ class ShardedRetriever(Retriever):
         with self.tracer.span("base", exact=exact):
             res = self.base.query(users_j, q_tau, q_mask, kappa, exact=exact,
                                   tracer=self.tracer,
-                                  collect_tile_skips=explain)
+                                  collect_tile_skips=explain,
+                                  min_overlap=min_overlap)
         scores = np.asarray(res.scores, np.float32)
         ids = self.base.rows_to_ids(np.asarray(res.rows), scores)
         stats = {"shard_candidates": np.asarray(res.shard_candidates),
@@ -535,13 +606,17 @@ class ShardedRetriever(Retriever):
             st["discard"][sl], st["shard_candidates"][sl],
             bc[sl] if bc is not None else None)
 
-    def _batch_query_fn(self, users: np.ndarray, n_real: int):
+    def _batch_query_fn(self, users: np.ndarray, n_real: int,
+                        deadline_s: float | None = None):
         """Fixed-shape step for the microbatcher; folds per-query discard,
         shard-balance and block-load stats into the metrics — real rows
-        only, never the zero-vector padding."""
-        res = self.query(users)
+        only, never the zero-vector padding.  ``deadline_s`` (the batch's
+        tightest remaining budget) drives the degrade ladder; the info
+        element carries the degraded flag back onto every QueryResult."""
+        res = self.query(users, deadline_s=deadline_s)
         self.record_last_query_stats(n_real)
-        return res.ids, res.scores
+        return res.ids, res.scores, {"degraded": res.degraded,
+                                     "degrade_rung": res.degrade_rung}
 
     def candidate_masks(self, users):
         raise UnsupportedOp(self.spec.backend, "candidate_masks",

@@ -62,3 +62,9 @@ class RetrievalResult:
     # are bit-identical with and without it (pinned by the contract suite).
     # Keys vary by backend; see docs/observability.md for the schema.
     explain: dict | None = None
+    # deadline-driven graceful degradation (the sharded tiers): True iff a
+    # degrade-ladder rung actually reduced the work for this answer, with
+    # the rung name from repro.service.qos.DEGRADE_RUNGS — a degraded
+    # answer is never silently mistaken for the full one.
+    degraded: bool = False
+    degrade_rung: str | None = None

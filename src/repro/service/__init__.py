@@ -90,23 +90,34 @@ Components
 from repro.service.collective import HostPlacement, NoLiveReplica
 from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
+from repro.service.faults import FaultInjected, FaultInjector, FaultSpec
 from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher, QueryResult
+from repro.service.qos import (DEGRADE_RUNGS, HealthTracker, QosPolicy,
+                               RequestShed, ResultEvicted)
 from repro.service.repartition import MapCache, Partition, Repartitioner
 from repro.service.service import GamService, ServiceConfig
 from repro.service.sharded_index import ShardedGamIndex, ShardTopK
 
 __all__ = [
     "CompactionPlanner",
+    "DEGRADE_RUNGS",
     "DeltaSegment",
+    "FaultInjected",
+    "FaultInjector",
+    "FaultSpec",
     "GamService",
+    "HealthTracker",
     "HostPlacement",
     "MapCache",
     "Microbatcher",
     "NoLiveReplica",
     "Partition",
+    "QosPolicy",
     "QueryResult",
+    "RequestShed",
     "Repartitioner",
+    "ResultEvicted",
     "ServiceConfig",
     "ServiceMetrics",
     "ShardTopK",

@@ -111,9 +111,11 @@ class DeltaSegment:
     # ---------------------------------------------------------- query
 
     def query(self, users, q_tau, q_mask, kappa: int, *,
-              exact: bool = False):
+              exact: bool = False, min_overlap: int | None = None):
         """-> (scores (Q, kk) f32 with NEG pads, catalog ids (Q, kk) int64)
-        over the delta rows only; kk = min(kappa, len(self))."""
+        over the delta rows only; kk = min(kappa, len(self)).
+        ``min_overlap`` overrides the segment's prune threshold (the QoS
+        degrade ladder raises it under deadline pressure)."""
         if not len(self):
             q = np.asarray(users).shape[0]
             return (np.zeros((q, 0), np.float32), np.zeros((q, 0), np.int64),
@@ -122,9 +124,10 @@ class DeltaSegment:
         # same fused streaming kernel as the main shards: pad rows are dead
         # via ``alive`` and carry empty patterns, so they are never
         # candidates on either the pruned or the exact (min_overlap=0) path
+        mo = self.min_overlap if min_overlap is None else int(min_overlap)
         res = gam_retrieve(users, self._factors_dev, q_tau, q_mask,
                            self._meta, kk,
-                           min_overlap=0 if exact else self.min_overlap,
+                           min_overlap=0 if exact else mo,
                            alive=self._alive)
         n_cand = np.asarray(res.blk_counts, np.int64).sum(axis=1)
         # empty (NEG-scored) slots carry row -1; clip before the id gather

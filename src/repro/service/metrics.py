@@ -48,6 +48,22 @@ class ServiceMetrics:
         self.n_compact_aborts = 0
         self.n_repartitions = 0
         self.n_failovers = 0                   # slice reroutes after mark_down
+        # ----------------------------------------------------------- QoS
+        self.n_shed = 0                        # typed request sheds, total
+        self.n_shed_queue_full = 0             # admission-control rejections
+        self.n_shed_deadline = 0               # queue-wait budget expirations
+        self.n_shed_no_live_replica = 0        # serve-loop NoLiveReplica sheds
+        self.shed_by_class = {}                # priority class -> shed count
+        self.n_evicted = 0                     # uncollected results evicted
+        self.n_degraded = 0                    # queries answered degraded
+        self.n_degraded_skip_exact = 0
+        self.n_degraded_raise_overlap = 0
+        self.n_degraded_base_only = 0
+        self.n_hedges = 0                      # hedged slice reads issued
+        self.n_hedge_wins = 0                  # hedge answered first
+        self.n_breaker_opens = 0
+        self.n_breaker_probes = 0
+        self.n_breaker_closes = 0
         self.last_repartition_skew = None      # shard skew that triggered it
         self._host_queries = None              # (H,) queries served per host
         self.latency_hist = LogHistogram.latency()      # s, per request
@@ -140,6 +156,53 @@ class ServiceMetrics:
         """Placement slices rerouted to a surviving replica by mark_down."""
         self.n_failovers += int(n)
 
+    def record_shed(self, reason: str, priority: int = 0) -> None:
+        """One typed request shed: ``queue_full`` (admission control),
+        ``deadline`` (queue-wait budget expired before service) or
+        ``no_live_replica`` (serve-loop shed on an unservable slice)."""
+        self.n_shed += 1
+        if reason == "queue_full":
+            self.n_shed_queue_full += 1
+        elif reason == "deadline":
+            self.n_shed_deadline += 1
+        elif reason == "no_live_replica":
+            self.n_shed_no_live_replica += 1
+        p = int(priority)
+        self.shed_by_class[p] = self.shed_by_class.get(p, 0) + 1
+
+    def record_evicted(self, n: int = 1) -> None:
+        """Finished results dropped by the microbatcher's max_results bound
+        before the client collected them."""
+        self.n_evicted += int(n)
+
+    def record_degraded(self, rung: str) -> None:
+        """One query answered via the degrade ladder; ``rung`` is the
+        deepest rung that fired (repro.service.qos.DEGRADE_RUNGS)."""
+        self.n_degraded += 1
+        if rung == "skip_exact":
+            self.n_degraded_skip_exact += 1
+        elif rung == "raise_overlap":
+            self.n_degraded_raise_overlap += 1
+        elif rung == "base_only":
+            self.n_degraded_base_only += 1
+
+    def record_hedge(self, won: bool) -> None:
+        """One hedged slice read issued; ``won`` iff the hedge answered
+        before the primary (either way the answer is bit-identical —
+        replicas are exact copies)."""
+        self.n_hedges += 1
+        if won:
+            self.n_hedge_wins += 1
+
+    def record_breaker(self, event: str) -> None:
+        """Circuit-breaker lifecycle: ``open`` / ``probe`` / ``close``."""
+        if event == "open":
+            self.n_breaker_opens += 1
+        elif event == "probe":
+            self.n_breaker_probes += 1
+        elif event == "close":
+            self.n_breaker_closes += 1
+
     def record_repartition(self, skew_before: float | None = None) -> None:
         self.n_repartitions += 1
         if skew_before is not None:
@@ -163,8 +226,16 @@ class ServiceMetrics:
         for name in ("n_requests", "n_batches", "n_upserts", "n_deletes",
                      "n_compactions", "n_async_compactions",
                      "n_compact_slices", "n_compact_aborts",
-                     "n_repartitions", "n_failovers"):
+                     "n_repartitions", "n_failovers",
+                     "n_shed", "n_shed_queue_full", "n_shed_deadline",
+                     "n_shed_no_live_replica", "n_evicted",
+                     "n_degraded", "n_degraded_skip_exact",
+                     "n_degraded_raise_overlap", "n_degraded_base_only",
+                     "n_hedges", "n_hedge_wins", "n_breaker_opens",
+                     "n_breaker_probes", "n_breaker_closes"):
             setattr(self, name, getattr(self, name) + getattr(other, name))
+        for p, n in other.shed_by_class.items():
+            self.shed_by_class[p] = self.shed_by_class.get(p, 0) + n
         if other.last_repartition_skew is not None:
             self.last_repartition_skew = other.last_repartition_skew
         mine, theirs = self.histograms(), other.histograms()
@@ -248,4 +319,23 @@ class ServiceMetrics:
             "host_load": (self._host_queries.tolist()
                           if self._host_queries is not None else None),
             "host_balance": self.host_skew(),
+            # QoS counters: flat scalars so the Prometheus exporter renders
+            # every one as a repro_* gauge (shed_by_class is a dict and
+            # deliberately JSONL-only)
+            "shed_total": self.n_shed,
+            "shed_queue_full": self.n_shed_queue_full,
+            "shed_deadline": self.n_shed_deadline,
+            "shed_no_live_replica": self.n_shed_no_live_replica,
+            "shed_by_class": {str(p): n
+                              for p, n in sorted(self.shed_by_class.items())},
+            "evicted_total": self.n_evicted,
+            "degraded_total": self.n_degraded,
+            "degraded_skip_exact": self.n_degraded_skip_exact,
+            "degraded_raise_overlap": self.n_degraded_raise_overlap,
+            "degraded_base_only": self.n_degraded_base_only,
+            "hedge_issued": self.n_hedges,
+            "hedge_wins": self.n_hedge_wins,
+            "breaker_opens": self.n_breaker_opens,
+            "breaker_probes": self.n_breaker_probes,
+            "breaker_closes": self.n_breaker_closes,
         }

@@ -383,7 +383,8 @@ class ShardedGamIndex:
 
     def query(self, users: jax.Array, q_tau: jax.Array, q_mask: jax.Array,
               kappa: int, *, exact: bool = False, tracer=None,
-              collect_tile_skips: bool = False) -> ShardTopK:
+              collect_tile_skips: bool = False,
+              min_overlap: int | None = None) -> ShardTopK:
         """users (Q, k) f32 + mapped query patterns -> merged top-kappa.
 
         One fused gam_retrieve pass per bn-group (uniform partitions: exactly
@@ -402,7 +403,10 @@ class ShardedGamIndex:
         ``ShardTopK.tile_skips`` (host-side numpy over existing outputs —
         the device computation and the answer are identical either way)."""
         tracer = NOOP_TRACER if tracer is None else tracer
-        mo = 0 if exact else self.min_overlap
+        # min_overlap override: the QoS degrade ladder raises the prune
+        # threshold one notch under deadline pressure (exact still wins)
+        mo = 0 if exact else (self.min_overlap if min_overlap is None
+                              else int(min_overlap))
         q = int(np.asarray(users).shape[0])
         results = []
         for g, meta in enumerate(self.metas):

@@ -38,3 +38,49 @@ def test_serve_launcher_gam(monkeypatch, capsys):
     serve.main()
     out = capsys.readouterr().out
     assert "vocab rows scored/step" in out
+
+
+def test_serve_loop_survives_no_live_replica(capsys):
+    """The serve loop's guarded query converts an unservable round into a
+    typed, counted shed and keeps serving — marking the host back up makes
+    the very next round answer again (no restart, no stuck state)."""
+    from conftest import unit_factors
+    from repro.launch.serve import _guarded_query
+    from repro.retriever import RetrieverSpec, open_retriever
+
+    items = unit_factors(200, 16, 0)
+    users = unit_factors(4, 16, 1)
+    spec = RetrieverSpec(cfg=__import__("conftest").CFG,
+                         backend="sharded-multihost", n_shards=2,
+                         min_overlap=1, kappa=8, n_hosts=2, replication=1)
+    svc = open_retriever(spec, items=items)
+    want = _guarded_query(svc, users)
+    assert want is not None
+
+    svc.mark_down(0)                  # replication=1: slice 0 unservable
+    assert _guarded_query(svc, users) is None
+    assert _guarded_query(svc, users) is None
+    snap = svc.metrics.snapshot()
+    assert snap["shed_no_live_replica"] == 2 == snap["shed_total"]
+    kinds = [e["kind"] for e in svc.events.tail(10)]
+    assert "request_shed" in kinds
+
+    svc.mark_up(0)                    # recovery is immediate and exact
+    got = _guarded_query(svc, users)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(got.scores, want.scores)
+
+
+def test_serve_launcher_service_qos_flags(monkeypatch, capsys):
+    """End-to-end single-process service demo with QoS + chaos flags on:
+    the stream finishes, and the QoS summary line reports typed sheds /
+    degraded counts instead of crashing on injected delta errors."""
+    import sys
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--service", "--items", "300", "--shards", "2",
+        "--requests", "24", "--service-batch", "4", "--queue-cap", "16",
+        "--deadline-ms", "200", "--inject-faults", "delta_error=1.0"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "qos:" in out and "upsert faults=1" in out

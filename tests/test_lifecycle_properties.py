@@ -22,15 +22,20 @@ import pytest
 from conftest import CFG, unit_factors
 
 from repro.retriever import RetrieverSpec, open_retriever
+from repro.service.faults import FaultInjected, FaultInjector
 
-BACKENDS = ["brute", "gam", "gam-device", "sharded"]
+BACKENDS = ["brute", "gam", "gam-device", "sharded", "sharded-multihost"]
 ID_POOL = 64                       # ops address catalog ids 0..63
+N_HOSTS = 2                        # multihost programs run 2 hosts, rep 2
 USERS = unit_factors(6, CFG.k, 991)
 
 TAGS = ("upsert", "delete", "compact", "compact_async", "step",
-        "repartition", "abort", "snapshot_restore")
-# op mix of the generated programs: mutation-heavy, maintenance-rich
-TAG_P = (0.34, 0.16, 0.05, 0.12, 0.16, 0.05, 0.04, 0.08)
+        "repartition", "abort", "snapshot_restore",
+        "mark_down", "mark_up", "inject_fault", "deadline_query")
+# op mix of the generated programs: mutation-heavy, maintenance-rich,
+# with health churn and chaos riding along
+TAG_P = (0.28, 0.13, 0.04, 0.10, 0.13, 0.04, 0.03, 0.06,
+         0.05, 0.05, 0.04, 0.05)
 
 
 def _spec(backend):
@@ -38,6 +43,10 @@ def _spec(backend):
     if backend == "sharded":
         # small slices so a single program crosses many planner phases
         kw.update(n_shards=2, options=(("compact_slice_rows", 16),))
+    elif backend == "sharded-multihost":
+        # replication == n_hosts keeps snapshots legal mid-program
+        kw.update(n_shards=2, n_hosts=N_HOSTS, replication=N_HOSTS,
+                  options=(("compact_slice_rows", 16),))
     return RetrieverSpec(cfg=CFG, backend=backend, **kw)
 
 
@@ -54,6 +63,7 @@ class LifecycleHarness:
         self.oracle = open_retriever(_spec("brute"), items=items, ids=ids)
         self.tmp = tmp_path
         self.n_snapshots = 0
+        self.faults_active = False     # host faults can auto-mark_down
 
     def check(self, tag=""):
         got = self.r.query(USERS, 8, exact=True)
@@ -62,15 +72,70 @@ class LifecycleHarness:
         np.testing.assert_allclose(got.scores, want.scores, rtol=1e-5,
                                    atol=1e-6, err_msg=tag)
 
+    def _set_faults(self, a, b):
+        """Attach / clear a seeded injector.  Host faults (stall) only go on
+        while no host is marked down, so some live unfaulted replica always
+        exists for every slice — parity stays checkable; the breaker is
+        free to auto-mark_down the faulted host in the meantime."""
+        if self.backend not in ("sharded", "sharded-multihost"):
+            return
+        choice = a % 3
+        if choice == 0:
+            self.r.faults = None
+            self.faults_active = False
+        elif choice == 1:
+            # every upsert/delete raises FaultInjected (pre-mutation)
+            self.r.faults = FaultInjector("delta_error=1.0", seed=b % 97)
+            self.faults_active = True
+        elif self.backend == "sharded-multihost" and not self.r._down:
+            self.r.faults = FaultInjector(
+                f"stall=0.5,hosts={b % N_HOSTS}", seed=b % 97)
+            self.faults_active = True
+
     def apply(self, op):
         tag, a, b = op
         if tag == "upsert":
             ids, fac = [a % ID_POOL], unit_factors(1, CFG.k, 10_000 + b)
-            self.r.upsert(ids, fac)
-            self.oracle.upsert(ids, fac)
+            try:
+                self.r.upsert(ids, fac)
+            except FaultInjected:
+                pass     # raised before mutation -> oracle must skip too
+            else:
+                self.oracle.upsert(ids, fac)
         elif tag == "delete":
-            self.r.delete([a % ID_POOL])
-            self.oracle.delete([a % ID_POOL])
+            try:
+                self.r.delete([a % ID_POOL])
+            except FaultInjected:
+                pass
+            else:
+                self.oracle.delete([a % ID_POOL])
+        elif tag == "mark_down":
+            # never strand a slice: with host faults active the breaker may
+            # already be marking hosts down, and the last live host stays up
+            if (self.backend == "sharded-multihost"
+                    and not self.faults_active
+                    and len(self.r._down | {a % N_HOSTS}) < N_HOSTS):
+                self.r.mark_down(a % N_HOSTS)
+        elif tag == "mark_up":
+            if self.backend == "sharded-multihost":
+                self.r.mark_up(a % N_HOSTS)
+        elif tag == "inject_fault":
+            self._set_faults(a, b)
+        elif tag == "deadline_query":
+            if self.backend in ("sharded", "sharded-multihost"):
+                if a % 2:
+                    # a generous budget never degrades: exact answers stay
+                    # bit-identical to the oracle
+                    got = self.r.query(USERS, 8, exact=True, deadline_s=1e6)
+                    assert not got.degraded and got.degrade_rung is None
+                    want = self.oracle.query(USERS, 8, exact=True)
+                    np.testing.assert_array_equal(got.ids, want.ids,
+                                                  err_msg=str(op))
+                else:
+                    # a spent budget degrades to the floor — and says so
+                    got = self.r.query(USERS, 8, deadline_s=0.0)
+                    assert got.degraded
+                    assert got.degrade_rung == "base_only"
         elif tag == "compact":
             self.r.compact()
             self.oracle.compact()
@@ -90,6 +155,7 @@ class LifecycleHarness:
             self.n_snapshots += 1
             self.r.snapshot(path)
             self.r = open_retriever(_spec(self.backend), snapshot=path)
+            self.faults_active = False   # fresh instance: no injector
         else:                                  # pragma: no cover
             raise AssertionError(op)
         self.check(tag=str(op))
@@ -98,7 +164,7 @@ class LifecycleHarness:
         for op in ops:
             self.apply(op)
         # drain any still-active build: the swap itself must be invisible
-        while (self.backend == "sharded"
+        while (self.backend.startswith("sharded")
                and self.r.maintenance_stats()["compaction"]["active"]):
             self.r.compaction_step()
             self.check("drain")
@@ -118,7 +184,7 @@ def random_program(seed, n_ops):
 def test_lifecycle_stress_deterministic(backend, tmp_path):
     """Seeded random interleavings on every first-class backend (the
     tier-1 slice of the stress suite; CI's slow step runs more)."""
-    n_ops = 24 if backend == "sharded" else 12
+    n_ops = 24 if backend.startswith("sharded") else 12
     h = LifecycleHarness(backend, tmp_path)
     h.run(random_program(seed=101, n_ops=n_ops))
 
@@ -281,7 +347,8 @@ def test_snapshot_mid_repartition_build_is_consistent(tmp_path):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("backend", ["sharded", "gam-device"])
+@pytest.mark.parametrize("backend",
+                         ["sharded", "sharded-multihost", "gam-device"])
 def test_lifecycle_hypothesis_interleavings(backend, tmp_path):
     """Hypothesis-generated op streams over the same flat encoding (tuples
     shrink towards short, small programs).  Guarded like the repo's other
