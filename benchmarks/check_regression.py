@@ -5,10 +5,13 @@ Two kinds of checks:
 * **Invariants** (no tolerance — these are correctness, not speed): fused
   kernel recall parity on every retrieval point, multi-host answers
   bit-identical to single-host, background compaction p99 strictly below
-  the synchronous stop-the-world rebuild, and the QoS overload scenario's
+  the synchronous stop-the-world rebuild, the QoS overload scenario's
   "never silently wrong" contract — every outcome typed, zero wrong
   answers under fault injection, priority-0 p99 better with QoS than
-  without.
+  without — and the online-drift scenario's streaming contract: pushed
+  state bit-identical to a from-scratch rebuild, trainer-on recall at
+  least the frozen-factor baseline, and the angular push gate actually
+  suppressing redundant upserts.
 * **Regressions** (tolerance-gated — CI machines are noisy, so the default
   tolerance is generous; catching 3x cliffs is the goal, not 5% drift):
   service-curve p99 per (mode, batch size), compaction-scenario async p99,
@@ -140,6 +143,42 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
             "priority-0 p99 with QoS beats the no-QoS run",
             f"off/on ratio {improvement}",
         )
+    # online-drift invariants: the streaming trainer + geometry-aware push
+    # policy must (a) never return a silently-wrong answer (pushed-state
+    # queries bit-identical to a from-scratch rebuild at every parity
+    # checkpoint), (b) beat the frozen-factor baseline on mean recall under
+    # the same staleness budget, and (c) actually exercise the angular gate
+    # (both pushes and suppressions observed)
+    drift = current.get("online_drift")
+    gate.check(bool(drift), "online drift scenario recorded")
+    if drift:
+        gate.check(
+            drift.get("wrong") == 0,
+            "online drift: zero silently wrong answers at parity checkpoints",
+            f"wrong={drift.get('wrong')}/{drift.get('n_parity_checkpoints')}",
+        )
+        r_on = drift.get("recall_online_mean")
+        r_off = drift.get("recall_frozen_mean")
+        gate.check(
+            r_on is not None and r_off is not None and r_on >= r_off,
+            "online drift: trainer-on recall beats frozen factors",
+            f"online {r_on} vs frozen {r_off}",
+        )
+        gate.check(
+            drift.get("pushed_total", 0) >= 1
+            and drift.get("suppressed_total", 0) >= 1,
+            "online drift: angular push gate exercised (pushes + suppressions)",
+            f"pushed={drift.get('pushed_total')} "
+            f"suppressed={drift.get('suppressed_total')}",
+        )
+        b_drift = baseline.get("online_drift")
+        if b_drift:
+            b_mean = b_drift.get("recall_online_mean")
+            gate.check(
+                r_on is not None and b_mean is not None and r_on >= b_mean - 0.05,
+                "online drift: trainer-on recall within band of baseline",
+                f"current {r_on} vs baseline {b_mean} (band 0.05)",
+            )
     # instrumentation invariants: the stage breakdown must be recorded, and
     # tracing at the steady-state 1% sample rate must not move p50 — the
     # bound is generous for CI noise; the honest number rides in the JSON

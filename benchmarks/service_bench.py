@@ -406,6 +406,127 @@ def run_qos_overload_scenario(args) -> dict:
     return out
 
 
+# ----------------------------------------------------------- online drift
+
+
+def run_drift_scenario(args) -> dict:
+    """Recall-vs-staleness under concept drift: trainer on vs frozen.
+
+    One seeded drift workload (hot item subset random-walking on the
+    sphere) runs against two identical ``sharded`` retrievers.  The frozen
+    one keeps its round-0 factors; the online one is fed by
+    ``StreamingMF.partial_fit`` each round with re-trained factors pushed
+    through the angular-drift-gated ``PushPolicy`` (staleness clock =
+    round counter, so the curves are machine-independent).  Per round the
+    bench records recall@kappa against the *current* true factors and the
+    mean staleness (rounds since push) of the hot set.
+
+    Three invariants ride to the regression gate: trainer-on recall beats
+    the frozen index, every checkpointed answer is bit-identical to a
+    from-scratch rebuild at the same pushed factors (live mutation is
+    never silently wrong), and the angular gate actually suppresses a
+    nonzero fraction of offers (the geometry is earning its keep).
+
+    The workload constants are fixed (not scaled by --items/--requests) so
+    CI smoke runs compare against the committed baselines.
+    """
+    from repro.online import (DriftSimulator, OnlineMFConfig, PushPolicy,
+                              StreamingMF)
+
+    rounds, staleness_budget, min_cos = 10, 4.0, 0.995
+    sim = DriftSimulator(n_users=48, n_items=256, k=args.dim, seed=17,
+                         drift=0.2, hot_frac=0.5, events_per_round=2048)
+    cfg = GamConfig(k=args.dim, scheme="parse_tree", threshold=args.threshold)
+    spec = RetrieverSpec(cfg=cfg, backend="sharded", n_shards=args.shards,
+                         min_overlap=args.min_overlap, kappa=args.kappa)
+    items0 = sim.items_at_start
+    ids0 = np.arange(sim.n_items, dtype=np.int64)
+    frozen = open_retriever(spec, items=items0, ids=ids0)
+    online = open_retriever(spec, items=items0, ids=ids0)
+
+    trainer = StreamingMF(OnlineMFConfig(k=args.dim, lr=0.5, momentum=0.6,
+                                         reg=1e-4, batch=1024, seed=3,
+                                         update_users=False))
+    trainer.warm_start(u=sim.users, v=items0)
+    tick = [0.0]                      # round counter doubles as the clock
+    policy = PushPolicy(online, min_cos=min_cos, staleness_s=staleness_budget,
+                        clock=lambda: tick[0])
+    policy.seed(ids0, items0)
+    catalog = {int(i): items0[j].copy() for j, i in enumerate(ids0)}
+    last_push = dict.fromkeys(map(int, ids0), 0.0)
+
+    eval_users = sim.users
+    curve = []
+    wrong = n_checkpoints = 0
+    prev_pushed = prev_sup = 0
+    for r in range(1, rounds + 1):
+        ev = sim.step()
+        tick[0] = float(sim.round)
+        st = trainer.partial_fit(ev)
+        touched = st["touched_items"]
+        policy.offer(touched, trainer.item_factors(touched))
+        p_ids, p_fac = policy.flush()
+        for i, f in zip(p_ids, p_fac):
+            catalog[int(i)] = f.copy()
+            last_push[int(i)] = tick[0]
+        truth = sim.true_topk(args.kappa, eval_users)
+        got_on = online.query(eval_users, args.kappa)
+        got_fr = frozen.query(eval_users, args.kappa)
+        stale_hot = float(np.mean([tick[0] - last_push[int(i)]
+                                   for i in sim.hot]))
+        curve.append({
+            "round": r,
+            "recall_online": sim.recall(got_on.ids, truth),
+            "recall_frozen": sim.recall(got_fr.ids, truth),
+            "staleness_online": stale_hot,
+            "staleness_frozen": tick[0],
+            "pushed": policy.n_pushed - prev_pushed,
+            "suppressed": policy.n_suppressed - prev_sup,
+        })
+        prev_pushed, prev_sup = policy.n_pushed, policy.n_suppressed
+        if r % 3 == 0 or r == rounds:
+            # never silently wrong: the live drifted index must answer
+            # bit-identically to a from-scratch rebuild at the same
+            # pushed factors
+            ids = np.asarray(sorted(catalog), np.int64)
+            fac = np.stack([catalog[int(i)] for i in ids])
+            rebuilt = open_retriever(spec, items=fac, ids=ids)
+            want = rebuilt.query(eval_users, args.kappa)
+            if not (np.array_equal(got_on.ids, want.ids)
+                    and np.array_equal(got_on.scores, want.scores)):
+                wrong += 1
+            n_checkpoints += 1
+    snap = online.metrics.snapshot()
+    ps = policy.stats()
+    out = {
+        "rounds": rounds, "kappa": args.kappa,
+        "staleness_budget_rounds": staleness_budget, "min_cos": min_cos,
+        "n_items": sim.n_items, "n_hot": int(sim.hot.size),
+        "events_per_round": sim.events_per_round,
+        "curve": curve,
+        "recall_online_mean": float(np.mean([c["recall_online"]
+                                             for c in curve])),
+        "recall_frozen_mean": float(np.mean([c["recall_frozen"]
+                                             for c in curve])),
+        "recall_online_final": curve[-1]["recall_online"],
+        "recall_frozen_final": curve[-1]["recall_frozen"],
+        "staleness_online_final": curve[-1]["staleness_online"],
+        "pushed_total": policy.n_pushed,
+        "suppressed_total": policy.n_suppressed,
+        "suppression_rate": ps["suppression_rate"],
+        "push_staleness_p50_rounds": snap["push_staleness_p50_s"],
+        "wrong": wrong, "n_parity_checkpoints": n_checkpoints,
+        "trainer": trainer.stats(),
+    }
+    print(f"online drift: recall {out['recall_frozen_final']:.2f} (frozen) "
+          f"-> {out['recall_online_final']:.2f} (trainer on) after {rounds} "
+          f"rounds; pushed={out['pushed_total']} "
+          f"suppressed={out['suppressed_total']} "
+          f"(rate {out['suppression_rate']:.0%}); "
+          f"parity wrong={wrong}/{n_checkpoints}")
+    return out
+
+
 # ------------------------------------------------------------- multi-host
 
 
@@ -589,6 +710,7 @@ def main(argv=None) -> None:
     overhead = run_overhead_scenario(args)
     compaction = run_compaction_scenario(args)
     qos_overload = run_qos_overload_scenario(args)
+    online_drift = run_drift_scenario(args)
     multihost = run_multihost_scenario(args)
 
     out = {
@@ -603,6 +725,7 @@ def main(argv=None) -> None:
         "overhead": overhead,
         "compaction": compaction,
         "qos_overload": qos_overload,
+        "online_drift": online_drift,
         "multihost": multihost,
     }
     with open(args.out, "w") as f:

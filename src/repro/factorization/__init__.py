@@ -1,3 +1,4 @@
-from repro.factorization.mf import MfConfig, train_mf
+from repro.factorization.mf import (MfConfig, MfState, mf_minibatch_step,
+                                    train_mf)
 
-__all__ = ["MfConfig", "train_mf"]
+__all__ = ["MfConfig", "MfState", "mf_minibatch_step", "train_mf"]

@@ -4,17 +4,24 @@ L2-regularised MF on observed (user, item, rating) triples, trained with
 minibatch SGD + momentum in JAX.  Produces the latent factors U, V the GAM
 mapping consumes.  Biases optional (the paper evaluates raw inner products,
 so the default matches: no biases, centred ratings).
+
+The jitted minibatch step is public (``mf_minibatch_step``) and
+``train_mf(..., return_state=True)`` additionally returns the final
+:class:`MfState` (params + momentum velocity + rating offset) — the
+warm-start handoff the streaming trainer (``repro.online.StreamingMF``)
+consumes instead of re-deriving optimizer state from scratch.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["MfConfig", "train_mf"]
+__all__ = ["MfConfig", "MfState", "mf_minibatch_step", "train_mf"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +34,21 @@ class MfConfig:
     batch: int = 8192
     seed: int = 0
     center: bool = True
+
+
+class MfState(NamedTuple):
+    """Final trainer state: the warm-start contract for incremental MF.
+
+    ``params``/``vel`` are ``{"u": (n_users, k), "v": (n_items, k)}``
+    pytrees (params and momentum velocity share structure); ``offset`` is
+    the rating mean subtracted before training (0.0 when ``center=False``)
+    — a consumer must subtract it from incoming ratings to stay in the
+    same residual space.
+    """
+
+    params: dict
+    vel: dict
+    offset: float
 
 
 @partial(jax.jit, static_argnames=("reg",))
@@ -43,7 +65,11 @@ def _loss_fn(params, rows, cols, vals, reg):
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
-def _step(params, vel, rows, cols, vals, cfg: MfConfig):
+def mf_minibatch_step(params, vel, rows, cols, vals, cfg: MfConfig):
+    """One momentum-SGD step on a (rows, cols, vals) minibatch.
+
+    Returns ``(params, vel, mse)``.  Input params/vel buffers are donated.
+    """
     (_, mse), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
         params, rows, cols, vals, cfg.reg
     )
@@ -53,8 +79,11 @@ def _step(params, vel, rows, cols, vals, cfg: MfConfig):
 
 
 def train_mf(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-             n_users: int, n_items: int, cfg: MfConfig = MfConfig()):
-    """Returns (U, V, history) with history = list of per-epoch train MSE."""
+             n_users: int, n_items: int, cfg: MfConfig = MfConfig(),
+             return_state: bool = False):
+    """Returns (U, V, history) with history = list of per-epoch train MSE;
+    with ``return_state=True``, (U, V, history, MfState) — same U/V bits,
+    plus the final optimizer state for streaming warm starts."""
     rng = np.random.default_rng(cfg.seed)
     vals = np.asarray(vals, np.float32)
     offset = float(vals.mean()) if cfg.center else 0.0
@@ -75,11 +104,14 @@ def train_mf(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
         mses = []
         for s in range(0, n, cfg.batch):
             idx = order[s : s + cfg.batch]
-            params, vel, mse = _step(
+            params, vel, mse = mf_minibatch_step(
                 params, vel,
                 jnp.asarray(rows[idx]), jnp.asarray(cols[idx]),
                 jnp.asarray(vals[idx]), cfg,
             )
             mses.append(float(mse))
         history.append(float(np.mean(mses)))
-    return np.asarray(params["u"]), np.asarray(params["v"]), history
+    u, v = np.asarray(params["u"]), np.asarray(params["v"])
+    if return_state:
+        return u, v, history, MfState(params=params, vel=vel, offset=offset)
+    return u, v, history

@@ -115,6 +115,35 @@ def _finish_observability(args, svc, writer, suffix: str = "") -> None:
                   f"{st['n_sampled']}/{st['n_started']})")
 
 
+def _learn_setup(args, svc, items):
+    """``--learn`` wiring: a StreamingMF + PushPolicy pair over either the
+    seeded drift simulator or a JSONL events file (``--learn-events``).
+    Returns ``(trainer, policy, sim, event_rounds)``."""
+    from repro.online import (EventBatch, OnlineMFConfig, PushPolicy,
+                              StreamingMF)
+
+    policy = PushPolicy(svc, min_cos=args.push_min_cos,
+                        staleness_s=args.push_staleness_s)
+    policy.seed(np.arange(items.shape[0]), items)
+    n_rounds = max(args.requests // max(args.learn_interval, 1), 1)
+    if args.learn_events:
+        feed = EventBatch.from_jsonl(args.learn_events)
+        trainer = StreamingMF(OnlineMFConfig(k=args.dim, lr=0.5,
+                                             momentum=0.6, seed=1))
+        trainer.warm_start(v=items)
+        # timestamp-ordered replay, one contiguous slice per learn round
+        per = max(len(feed) // n_rounds, 1)
+        rounds = [EventBatch(feed.ts[s:s + per], feed.users[s:s + per],
+                             feed.items[s:s + per], feed.values[s:s + per])
+                  for s in range(0, len(feed), per)]
+        return trainer, policy, None, rounds
+    sim = args.learn_sim
+    trainer = StreamingMF(OnlineMFConfig(k=args.dim, lr=0.5, momentum=0.6,
+                                         seed=1, update_users=False))
+    trainer.warm_start(u=sim.users, v=items)
+    return trainer, policy, sim, None
+
+
 def serve_retrieval(args):
     """Open a unified-API retriever (default backend: the sharded streaming
     service), stream upserts + microbatched queries, print the
@@ -125,7 +154,10 @@ def serve_retrieval(args):
     segment holds >= N rows (subsequent queries each advance one bounded
     slice until the atomic swap); ``--rebalance S`` triggers a skew-aware
     repartition when the metrics' per-shard candidate skew (max/mean)
-    exceeds S."""
+    exceeds S.  ``--learn`` interleaves online factor learning: every
+    ``--learn-interval`` requests one event round feeds
+    ``StreamingMF.partial_fit`` and the re-trained factors go through the
+    angular-drift-gated ``PushPolicy`` into live upserts."""
     from repro.core.mapping import GamConfig
     from repro.retriever import RetrieverSpec, open_retriever
     from repro.service.faults import FaultInjected
@@ -133,8 +165,16 @@ def serve_retrieval(args):
     from repro.service.qos import RequestShed
 
     rng = np.random.default_rng(0)
-    items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
-    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    learn = bool(args.learn or args.learn_events)
+    args.learn_sim = None
+    if learn and not args.learn_events:
+        from repro.online import DriftSimulator
+        args.learn_sim = DriftSimulator(n_users=64, n_items=args.items,
+                                        k=args.dim, seed=2, drift=args.drift)
+        items = args.learn_sim.items_at_start
+    else:
+        items = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+        items /= np.linalg.norm(items, axis=1, keepdims=True)
     cfg = GamConfig(k=args.dim, scheme="parse_tree",
                     threshold=args.gam_item_threshold)
     spec = RetrieverSpec(
@@ -155,6 +195,10 @@ def serve_retrieval(args):
               .astype(np.float32))
     svc.metrics.reset()
 
+    trainer = policy = sim = event_rounds = None
+    if learn:
+        trainer, policy, sim, event_rounds = _learn_setup(args, svc, items)
+    learn_rounds = 0
     pending = []
     n_rejected = n_upsert_faults = 0
     try:
@@ -167,7 +211,20 @@ def serve_retrieval(args):
                     user, priority=r % 2 if qos_on else 0))
             except RequestShed:
                 n_rejected += 1            # admission control said no
-            if r % 16 == 15:                   # interleave streamed upserts
+            if learn and r % args.learn_interval == args.learn_interval - 1:
+                ev = (sim.step() if sim is not None
+                      else (event_rounds[learn_rounds]
+                            if learn_rounds < len(event_rounds) else None))
+                if ev is not None and len(ev):
+                    st = trainer.partial_fit(ev)
+                    touched = st["touched_items"]
+                    policy.offer(touched, trainer.item_factors(touched))
+                    try:
+                        policy.flush()
+                    except FaultInjected:
+                        n_upsert_faults += 1   # batch stays pending; retried
+                    learn_rounds += 1
+            elif r % 16 == 15:                 # interleave streamed upserts
                 new_id = args.items + r
                 try:
                     svc.upsert([new_id], rng.normal(size=(1, args.dim))
@@ -227,6 +284,26 @@ def serve_retrieval(args):
               f"({snap['n_compact_slices']} slices)  "
               f"repartitions={snap['n_repartitions']}  "
               f"shard bns={ms['repartition']['partition']['bns']}")
+    if learn:
+        # land anything still pending (staleness clocks notwithstanding)
+        policy.flush(force=True)
+        snap = svc.metrics.snapshot()
+        ts = trainer.stats()
+        ps = policy.stats()
+        p50 = snap["push_staleness_p50_s"]
+        print(f"learn: {learn_rounds} rounds, {ts['n_events']} events, "
+              f"{ts['n_items']} items ({ts['n_grows']} capacity grows), "
+              f"mse={ts['mse']:.4f}")
+        print(f"push: {snap['push_total']} pushed, "
+              f"{snap['push_suppressed']} suppressed "
+              f"(rate {ps['suppression_rate']:.0%}), staleness "
+              f"p50={'n/a' if p50 is None else f'{p50 * 1e3:.1f}ms'}")
+        if sim is not None:
+            eval_users = sim.users[:16]
+            got = svc.query(eval_users, args.kappa, exact=True)
+            rec = sim.recall(got.ids, sim.true_topk(args.kappa, eval_users))
+            print(f"learn: recall@{args.kappa} vs drifted truth = {rec:.2f} "
+                  f"(index tracks {sim.round} rounds of drift)")
     _finish_observability(args, svc, writer)
 
     if args.snapshot:
@@ -467,6 +544,28 @@ def main():
                     metavar="RATE",
                     help="probability of tracing a request batch end-to-end "
                          "(0 = tracing off, its default noop path)")
+    # online learning (repro.online: StreamingMF + PushPolicy)
+    ap.add_argument("--learn", action="store_true",
+                    help="interleave online factor learning: the seeded "
+                         "drift simulator feeds StreamingMF.partial_fit "
+                         "and re-trained factors reach the index through "
+                         "the angular-drift-gated PushPolicy")
+    ap.add_argument("--learn-events", metavar="PATH",
+                    help="replay implicit-feedback events from a JSONL "
+                         "file (ts/user/item/value per line) instead of "
+                         "the simulator; implies --learn")
+    ap.add_argument("--learn-interval", type=int, default=16, metavar="N",
+                    help="ingest one event round every N requests")
+    ap.add_argument("--push-min-cos", type=float, default=0.98,
+                    metavar="COS",
+                    help="angular push gate: upsert a re-trained factor "
+                         "when cos(new, last pushed) drops below COS")
+    ap.add_argument("--push-staleness-s", type=float, default=2.0,
+                    metavar="S",
+                    help="staleness budget: push a dirty factor after S "
+                         "seconds even below the angular gate")
+    ap.add_argument("--drift", type=float, default=0.1, metavar="D",
+                    help="simulator per-round drift step on hot items")
     # QoS + chaos knobs
     ap.add_argument("--queue-cap", type=int, default=0, metavar="N",
                     help="admission control: shed submits past N queued "
@@ -495,6 +594,11 @@ def main():
                          "answers (exits 1 on any wrong answer)")
     args = ap.parse_args()
 
+    if (args.learn or args.learn_events) and args.hosts > 1:
+        ap.error("--learn runs on the single-host service loop "
+                 "(--hosts 1); the SPMD stream has no trainer yet")
+    if (args.learn or args.learn_events) and not args.service:
+        ap.error("--learn requires --service")
     if args.service and args.hosts > 1:
         if args.fail_host is not None:
             # fail fast (not NoLiveReplica tracebacks halfway through the

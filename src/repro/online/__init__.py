@@ -1,0 +1,19 @@
+"""Online learning tier: streaming matrix factorisation + geometry-aware
+publishing into the live retriever — the layer that closes the paper's
+train → map → serve loop (see docs/online_learning.md).
+
+- :class:`EventBatch` — timestamp-ordered implicit-feedback events.
+- :class:`StreamingMF` — ``partial_fit`` incremental WMF with per-row
+  adaptive steps, pow2 capacity growth and ``train_mf`` warm start.
+- :class:`PushPolicy` — angular-drift + staleness gated ``upsert``
+  publisher with full ServiceMetrics/tracing/journal observability.
+- :class:`DriftSimulator` — seeded concept-drift workload for benches
+  and tests.
+"""
+from repro.online.drift import DriftSimulator
+from repro.online.events import EventBatch
+from repro.online.push import PushPolicy
+from repro.online.trainer import OnlineMFConfig, StreamingMF
+
+__all__ = ["DriftSimulator", "EventBatch", "OnlineMFConfig", "PushPolicy",
+           "StreamingMF"]

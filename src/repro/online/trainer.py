@@ -1,0 +1,271 @@
+"""StreamingMF: incremental matrix factorisation over implicit-feedback
+event streams.
+
+``partial_fit(events)`` consumes timestamp-ordered :class:`EventBatch`\\ es
+and advances the factor matrices in place — no epochs, no full-dataset
+passes.  The update is WMF-style weighted regression (Hu et al.: confidence
+``c = 1 + alpha * |value|`` per event) with per-row adaptive step sizes: a
+momentum velocity exactly like the offline trainer's, scaled per factor row
+by an AdaGrad accumulator ``lr / (1 + sqrt(sum g^2))`` so hot rows anneal
+while cold rows keep learning fast.  The parameter update itself goes
+through ``repro.training.optimizer.sgd_update`` and gradient clipping
+through ``global_norm`` — the same primitives the offline tiers use.
+
+Capacities are powers of two (``MapCache``'s trick): event chunks are
+padded to pow2 lengths with zero-confidence rows and the factor tables grow
+by capacity doubling, so the jit cache holds O(log) specialisations however
+the stream grows.  Zero-confidence padding contributes exactly zero
+gradient AND zero L2 pull (the regulariser is masked per event), so padded
+steps are bit-identical to unpadded ones in effect.
+
+Warm start: ``StreamingMF.from_state(mf_state)`` adopts the params +
+momentum velocity + rating offset that ``train_mf(..., return_state=True)``
+returns, so the streaming trainer continues the offline run instead of
+re-deriving optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.factorization.mf import MfState
+from repro.online.events import EventBatch
+from repro.training.optimizer import global_norm, sgd_update
+
+__all__ = ["OnlineMFConfig", "StreamingMF"]
+
+_CAP_MIN = 64                          # smallest factor-table capacity
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineMFConfig:
+    k: int = 16
+    lr: float = 0.1
+    reg: float = 1e-4
+    momentum: float = 0.9
+    alpha: float = 1.0                 # confidence = 1 + alpha * |value|
+    batch: int = 1024                  # max events per jitted step
+    clip_norm: float = 0.0             # 0 = no gradient clipping
+    seed: int = 0
+    init_scale: float = 0.1            # cold-start row init (train_mf's)
+    update_users: bool = True          # False freezes user factors
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+def _online_step(params, vel, gsq, rows, cols, prefs, confs,
+                 cfg: OnlineMFConfig):
+    """One weighted minibatch step.  ``confs == 0`` rows are padding: they
+    contribute no error gradient and (masked) no L2 pull."""
+
+    def loss_fn(p):
+        u = p["u"][rows]
+        v = p["v"][cols]
+        pred = jnp.sum(u * v, axis=1)
+        live = (confs > 0).astype(jnp.float32)
+        err2 = confs * (pred - prefs) ** 2
+        l2 = cfg.reg * jnp.sum(live[:, None] * (u * u + v * v))
+        mse = jnp.sum(err2) / jnp.maximum(jnp.sum(confs), 1e-9)
+        return jnp.sum(err2) + l2, mse
+
+    (_, mse), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    # per-row AdaGrad accumulator: squared-gradient mass per factor row
+    gsq = jax.tree.map(lambda a, g: a + jnp.sum(g * g, axis=1), gsq, grads)
+    vel = jax.tree.map(lambda m, g: cfg.momentum * m + g, vel, grads)
+    # adaptive per-row step: lr / (1 + sqrt(accumulated g^2)), momentum-
+    # smoothed; the update itself is the shared SGD primitive
+    step = jax.tree.map(
+        lambda m, a: (cfg.lr / (1.0 + jnp.sqrt(a)))[:, None] * m, vel, gsq)
+    if not cfg.update_users:
+        step = {"u": jnp.zeros_like(step["u"]), "v": step["v"]}
+    params = sgd_update(1.0, step, params)
+    return params, vel, gsq, mse, gnorm
+
+
+class StreamingMF:
+    """Incremental WMF trainer with growable pow2-capacity factor tables."""
+
+    def __init__(self, cfg: OnlineMFConfig = OnlineMFConfig(), *,
+                 n_users: int = 0, n_items: int = 0, offset: float = 0.0):
+        self.cfg = cfg
+        self.offset = float(offset)
+        self.n_users = 0               # 1 + max user id seen
+        self.n_items = 0
+        self.n_events = 0
+        self.n_steps = 0
+        self.n_grows = 0
+        self.last_mse = None
+        self.last_grad_norm = None
+        self._params = {"u": self._init_rows("u", 0, _CAP_MIN),
+                        "v": self._init_rows("v", 0, _CAP_MIN)}
+        self._vel = jax.tree.map(jnp.zeros_like, self._params)
+        self._gsq = {"u": jnp.zeros(_CAP_MIN, jnp.float32),
+                     "v": jnp.zeros(_CAP_MIN, jnp.float32)}
+        self._np_cache: dict = {}      # "u"/"v" -> numpy mirror (lazy)
+        if n_users or n_items:
+            self._ensure_capacity(n_users, n_items)
+            self.n_users, self.n_items = int(n_users), int(n_items)
+
+    # ------------------------------------------------------------ warm start
+
+    @classmethod
+    def from_state(cls, state: MfState,
+                   cfg: OnlineMFConfig = OnlineMFConfig()) -> "StreamingMF":
+        """Adopt ``train_mf(..., return_state=True)``'s final state: params,
+        momentum velocity and rating offset continue seamlessly."""
+        u = np.asarray(state.params["u"], np.float32)
+        v = np.asarray(state.params["v"], np.float32)
+        t = cls(cfg, offset=state.offset)
+        t.warm_start(u=u, v=v, vel_u=np.asarray(state.vel["u"], np.float32),
+                     vel_v=np.asarray(state.vel["v"], np.float32))
+        return t
+
+    def warm_start(self, *, u=None, v=None, vel_u=None, vel_v=None,
+                   offset: float | None = None) -> None:
+        """Overwrite the leading factor (and optionally velocity) rows."""
+        if offset is not None:
+            self.offset = float(offset)
+        for axis, fac, vel in (("u", u, vel_u), ("v", v, vel_v)):
+            if fac is None:
+                continue
+            fac = np.asarray(fac, np.float32)
+            if fac.shape[1] != self.cfg.k:
+                raise ValueError(f"expected k={self.cfg.k}, got {fac.shape}")
+            n = fac.shape[0]
+            self._ensure_capacity(n if axis == "u" else 0,
+                                  n if axis == "v" else 0)
+            self._params[axis] = self._params[axis].at[:n].set(fac)
+            if vel is not None:
+                self._vel[axis] = self._vel[axis].at[:n].set(
+                    np.asarray(vel, np.float32))
+            if axis == "u":
+                self.n_users = max(self.n_users, n)
+            else:
+                self.n_items = max(self.n_items, n)
+            self._np_cache.pop(axis, None)
+
+    # -------------------------------------------------------------- capacity
+
+    def _init_rows(self, axis: str, lo: int, hi: int) -> jnp.ndarray:
+        """Deterministic cold-start rows [lo, hi): seeded per _CAP_MIN-row
+        block, so every growth path (64->512 or 64->128->512) materialises
+        bit-identical factors.  Capacities are pow2 >= _CAP_MIN, so lo/hi
+        always land on block boundaries."""
+        blocks = []
+        for b in range(lo, hi, _CAP_MIN):
+            rng = np.random.default_rng((self.cfg.seed, ord(axis), b))
+            blocks.append(rng.normal(
+                scale=self.cfg.init_scale,
+                size=(min(_CAP_MIN, hi - b), self.cfg.k)).astype(np.float32))
+        return jnp.asarray(np.concatenate(blocks))
+
+    def _ensure_capacity(self, n_users: int, n_items: int) -> None:
+        for axis, need in (("u", n_users), ("v", n_items)):
+            cap = self._params[axis].shape[0]
+            if need <= cap:
+                continue
+            new_cap = max(_pow2(need), _CAP_MIN)
+            fresh = self._init_rows(axis, cap, new_cap)
+            self._params[axis] = jnp.concatenate([self._params[axis], fresh])
+            self._vel[axis] = jnp.concatenate(
+                [self._vel[axis], jnp.zeros_like(fresh)])
+            self._gsq[axis] = jnp.concatenate(
+                [self._gsq[axis],
+                 jnp.zeros(new_cap - cap, jnp.float32)])
+            self._np_cache.pop(axis, None)
+            self.n_grows += 1
+
+    @property
+    def capacity(self) -> tuple[int, int]:
+        return (int(self._params["u"].shape[0]),
+                int(self._params["v"].shape[0]))
+
+    # ------------------------------------------------------------- training
+
+    def partial_fit(self, events: EventBatch) -> dict:
+        """Consume one timestamp-ordered event batch; returns fit stats
+        including ``touched_items`` (the ids whose factors moved — what a
+        push policy should offer to the retriever)."""
+        if not isinstance(events, EventBatch):
+            raise TypeError(f"expected EventBatch, got {type(events)}")
+        if len(events) == 0:
+            return {"n_events": 0, "n_steps": 0, "mse": None,
+                    "grad_norm": None,
+                    "touched_users": np.empty(0, np.int64),
+                    "touched_items": np.empty(0, np.int64)}
+        cfg = self.cfg
+        self._ensure_capacity(int(events.users.max()) + 1,
+                              int(events.items.max()) + 1)
+        self.n_users = max(self.n_users, int(events.users.max()) + 1)
+        self.n_items = max(self.n_items, int(events.items.max()) + 1)
+
+        prefs_all = events.values.astype(np.float32) - self.offset
+        confs_all = 1.0 + cfg.alpha * np.abs(events.values).astype(np.float32)
+        params, vel, gsq = self._params, self._vel, self._gsq
+        mse = gnorm = None
+        n_steps = 0
+        for s in range(0, len(events), cfg.batch):
+            rows = events.users[s:s + cfg.batch]
+            cols = events.items[s:s + cfg.batch]
+            prefs = prefs_all[s:s + cfg.batch]
+            confs = confs_all[s:s + cfg.batch]
+            pad = _pow2(rows.size) - rows.size
+            if pad:
+                # zero-confidence padding: gathers row 0 but contributes
+                # zero gradient and (masked) zero L2
+                rows = np.concatenate([rows, np.zeros(pad, np.int64)])
+                cols = np.concatenate([cols, np.zeros(pad, np.int64)])
+                prefs = np.concatenate([prefs, np.zeros(pad, np.float32)])
+                confs = np.concatenate([confs, np.zeros(pad, np.float32)])
+            params, vel, gsq, mse, gnorm = _online_step(
+                params, vel, gsq, jnp.asarray(rows), jnp.asarray(cols),
+                jnp.asarray(prefs), jnp.asarray(confs), cfg)
+            n_steps += 1
+        self._params, self._vel, self._gsq = params, vel, gsq
+        self._np_cache.clear()
+        self.n_events += len(events)
+        self.n_steps += n_steps
+        self.last_mse = float(mse)
+        self.last_grad_norm = float(gnorm)
+        return {"n_events": len(events), "n_steps": n_steps,
+                "mse": self.last_mse, "grad_norm": self.last_grad_norm,
+                "touched_users": np.unique(events.users),
+                "touched_items": np.unique(events.items)}
+
+    # -------------------------------------------------------------- factors
+
+    def _rows(self, axis: str, n: int, ids) -> np.ndarray:
+        if axis not in self._np_cache:
+            self._np_cache[axis] = np.asarray(self._params[axis])
+        mat = self._np_cache[axis]
+        if ids is None:
+            return mat[:n].copy()
+        ids = np.asarray(ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise IndexError(f"{axis} id out of range [0, {n})")
+        return mat[ids].copy()
+
+    def user_factors(self, ids=None) -> np.ndarray:
+        return self._rows("u", self.n_users, ids)
+
+    def item_factors(self, ids=None) -> np.ndarray:
+        return self._rows("v", self.n_items, ids)
+
+    def stats(self) -> dict:
+        cap_u, cap_v = self.capacity
+        return {"n_users": self.n_users, "n_items": self.n_items,
+                "cap_users": cap_u, "cap_items": cap_v,
+                "n_events": self.n_events, "n_steps": self.n_steps,
+                "n_grows": self.n_grows, "mse": self.last_mse,
+                "grad_norm": self.last_grad_norm, "offset": self.offset}

@@ -64,6 +64,10 @@ class ServiceMetrics:
         self.n_breaker_opens = 0
         self.n_breaker_probes = 0
         self.n_breaker_closes = 0
+        # -------------------------------------------------- online learning
+        self.n_pushes = 0                      # factor pushes landed
+        self.n_push_suppressed = 0             # angular gate said "not yet"
+        self.n_push_flushes = 0                # PushPolicy.flush() calls
         self.last_repartition_skew = None      # shard skew that triggered it
         self._host_queries = None              # (H,) queries served per host
         self.latency_hist = LogHistogram.latency()      # s, per request
@@ -71,6 +75,7 @@ class ServiceMetrics:
         self.service_hist = LogHistogram.latency()      # s, flush -> done
         self.occupancy_hist = LogHistogram.fraction()   # real/padded, batch
         self.discard_hist = LogHistogram.fraction()     # frac, per request
+        self.push_staleness_hist = LogHistogram.latency()  # s dirty -> push
         self._shard_cand = None                # (S,) accumulated candidates
         self._block_cand = None                # (n_blocks,) accumulated
 
@@ -80,7 +85,8 @@ class ServiceMetrics:
                 "queue_wait_seconds": self.queue_wait_hist,
                 "service_seconds": self.service_hist,
                 "occupancy": self.occupancy_hist,
-                "discard": self.discard_hist}
+                "discard": self.discard_hist,
+                "push_staleness_seconds": self.push_staleness_hist}
 
     # ---------------------------------------------------------- recording
 
@@ -203,6 +209,17 @@ class ServiceMetrics:
         elif event == "close":
             self.n_breaker_closes += 1
 
+    def record_push(self, n_pushed: int, n_suppressed: int = 0,
+                    staleness_s=None) -> None:
+        """One PushPolicy flush: ``n_pushed`` factors landed via upsert,
+        ``n_suppressed`` held back by the angular gate, ``staleness_s``
+        the dirty-to-push ages of the pushed factors."""
+        self.n_push_flushes += 1
+        self.n_pushes += int(n_pushed)
+        self.n_push_suppressed += int(n_suppressed)
+        if staleness_s is not None:
+            self.push_staleness_hist.record_many(staleness_s)
+
     def record_repartition(self, skew_before: float | None = None) -> None:
         self.n_repartitions += 1
         if skew_before is not None:
@@ -232,7 +249,8 @@ class ServiceMetrics:
                      "n_degraded", "n_degraded_skip_exact",
                      "n_degraded_raise_overlap", "n_degraded_base_only",
                      "n_hedges", "n_hedge_wins", "n_breaker_opens",
-                     "n_breaker_probes", "n_breaker_closes"):
+                     "n_breaker_probes", "n_breaker_closes",
+                     "n_pushes", "n_push_suppressed", "n_push_flushes"):
             setattr(self, name, getattr(self, name) + getattr(other, name))
         for p, n in other.shed_by_class.items():
             self.shed_by_class[p] = self.shed_by_class.get(p, 0) + n
@@ -338,4 +356,11 @@ class ServiceMetrics:
             "breaker_opens": self.n_breaker_opens,
             "breaker_probes": self.n_breaker_probes,
             "breaker_closes": self.n_breaker_closes,
+            # online-learning publisher (PushPolicy); staleness is the
+            # dirty-to-push age distribution of landed factors
+            "push_total": self.n_pushes,
+            "push_suppressed": self.n_push_suppressed,
+            "push_flushes": self.n_push_flushes,
+            "push_staleness_p50_s": self.push_staleness_hist.percentile(50),
+            "push_staleness_p99_s": self.push_staleness_hist.percentile(99),
         }

@@ -1,7 +1,14 @@
 """Property-based lifecycle stress suite: arbitrary interleavings of
 upsert / delete / query / compact / compact-step / repartition / abort /
-snapshot-restore, every intermediate state checked bit-identical against
-the ``brute`` oracle.
+snapshot-restore / feed-events / push, every intermediate state checked
+bit-identical against the ``brute`` oracle.
+
+The ``feed_events`` / ``push`` ops drive the online tier through the same
+harness: a ``StreamingMF`` trainer consumes seeded event batches and a
+``PushPolicy`` (fake round clock) publishes re-trained factors into the
+retriever mid-program — whatever ``flush`` actually pushed is mirrored
+into the oracle, so trainer pushes interleave arbitrarily with deletes,
+compactions, faults and restores without ever breaking parity.
 
 This is the acceptance harness of the maintenance subsystem: background
 compaction and skew-aware repartitioning are performance machinery that by
@@ -21,6 +28,7 @@ import numpy as np
 import pytest
 from conftest import CFG, unit_factors
 
+from repro.online import EventBatch, OnlineMFConfig, PushPolicy, StreamingMF
 from repro.retriever import RetrieverSpec, open_retriever
 from repro.service.faults import FaultInjected, FaultInjector
 
@@ -31,11 +39,12 @@ USERS = unit_factors(6, CFG.k, 991)
 
 TAGS = ("upsert", "delete", "compact", "compact_async", "step",
         "repartition", "abort", "snapshot_restore",
-        "mark_down", "mark_up", "inject_fault", "deadline_query")
+        "mark_down", "mark_up", "inject_fault", "deadline_query",
+        "feed_events", "push")
 # op mix of the generated programs: mutation-heavy, maintenance-rich,
-# with health churn and chaos riding along
-TAG_P = (0.28, 0.13, 0.04, 0.10, 0.13, 0.04, 0.03, 0.06,
-         0.05, 0.05, 0.04, 0.05)
+# with health churn, chaos and online-trainer pushes riding along
+TAG_P = (0.22, 0.11, 0.04, 0.10, 0.11, 0.04, 0.03, 0.06,
+         0.05, 0.05, 0.04, 0.05, 0.06, 0.04)
 
 
 def _spec(backend):
@@ -64,6 +73,14 @@ class LifecycleHarness:
         self.tmp = tmp_path
         self.n_snapshots = 0
         self.faults_active = False     # host faults can auto-mark_down
+        # online tier riding the same program: trainer over the id pool,
+        # policy publishing into self.r on a fake round clock
+        self.clock = [0.0]
+        self.trainer = StreamingMF(OnlineMFConfig(k=CFG.k, lr=0.3, seed=17))
+        self.trainer.warm_start(v=items)
+        self.policy = PushPolicy(self.r, min_cos=0.99, staleness_s=3.0,
+                                 clock=lambda: self.clock[0])
+        self.policy.seed(ids, items)
 
     def check(self, tag=""):
         got = self.r.query(USERS, 8, exact=True)
@@ -150,11 +167,33 @@ class LifecycleHarness:
         elif tag == "abort":
             if hasattr(self.r, "abort_compaction"):
                 self.r.abort_compaction()
+        elif tag == "feed_events":
+            self.clock[0] += 1.0
+            rng = np.random.default_rng((a, b))
+            n = 8
+            ev = EventBatch(
+                ts=self.clock[0] + np.arange(n) / n,
+                users=rng.integers(0, 8, size=n),
+                items=rng.integers(0, ID_POOL, size=n),
+                values=rng.normal(loc=1.0, scale=0.3, size=n))
+            fit = self.trainer.partial_fit(ev)
+            touched = fit["touched_items"]
+            self.policy.offer(touched, self.trainer.item_factors(touched))
+        elif tag == "push":
+            self.clock[0] += 1.0
+            try:
+                p_ids, p_fac = self.policy.flush(force=bool(a % 2))
+            except FaultInjected:
+                pass     # batch stays pending -> oracle must skip too
+            else:
+                if p_ids.size:
+                    self.oracle.upsert(p_ids, p_fac)
         elif tag == "snapshot_restore":
             path = os.fspath(self.tmp / f"s{self.n_snapshots}.npz")
             self.n_snapshots += 1
             self.r.snapshot(path)
             self.r = open_retriever(_spec(self.backend), snapshot=path)
+            self.policy.retriever = self.r   # policy follows the restore
             self.faults_active = False   # fresh instance: no injector
         else:                                  # pragma: no cover
             raise AssertionError(op)

@@ -354,7 +354,18 @@ def test_service_metrics_snapshot_has_split_keys():
     m = ServiceMetrics()
     snap = m.snapshot()
     for key in ("queue_wait_p50_ms", "queue_wait_p99_ms",
-                "service_p50_ms", "service_p99_ms"):
+                "service_p50_ms", "service_p99_ms",
+                "push_staleness_p50_s", "push_staleness_p99_s"):
         assert key in snap and snap[key] is None    # empty -> None, not 0
     assert set(m.histograms()) == {"latency_seconds", "queue_wait_seconds",
-                                   "service_seconds", "occupancy", "discard"}
+                                   "service_seconds", "occupancy", "discard",
+                                   "push_staleness_seconds"}
+    m.record_push(3, 2, staleness_s=[0.5, 1.0, 2.0])
+    snap = m.snapshot()
+    assert snap["push_total"] == 3 and snap["push_suppressed"] == 2
+    assert snap["push_flushes"] == 1
+    np.testing.assert_allclose(snap["push_staleness_p50_s"], 1.0, rtol=0.05)
+    other = ServiceMetrics()
+    other.record_push(1, 0, staleness_s=[4.0])
+    merged = m.merge(other)
+    assert merged.snapshot()["push_total"] == 4
