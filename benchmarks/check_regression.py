@@ -272,6 +272,39 @@ def check_retrieval(current: dict, baseline: dict, tol: float) -> Gate:
             p.get("speedup"),
             tol,
         )
+    # memory-vs-recall frontier invariants: the compressed catalog must buy
+    # at least 4x items-per-byte over the f32 representation WITHOUT losing
+    # recall on the exact-rerank path (absolute parity — recall is a
+    # correctness number, not a latency number, so no tolerance applies)
+    frontier = current.get("frontier", {})
+    fpoints = {p["name"]: p for p in frontier.get("points", [])}
+    gate.check(bool(fpoints), "memory-recall frontier recorded")
+    f32 = fpoints.get("f32")
+    comp = fpoints.get("int8_r4_compressed")
+    if f32 and comp:
+        ratio = f32["bytes_per_item"] / comp["bytes_per_item"]
+        gate.check(
+            ratio >= 4.0,
+            "compressed catalog >= 4x items per byte vs f32",
+            f"{ratio:.2f}x",
+        )
+        for name, p in fpoints.items():
+            if name == "f32":
+                continue
+            gate.check(
+                p["recall_exact_path"] >= f32["recall_exact_path"],
+                f"frontier {name}: exact-path recall parity with f32",
+                f"{p['recall_exact_path']} vs {f32['recall_exact_path']}",
+            )
+    # latency is ratio-gated against the baseline's frontier when it has
+    # one; older baselines predate the sweep and are skipped gracefully
+    b_front = {p["name"]: p for p in
+               baseline.get("frontier", {}).get("points", [])}
+    for name, p in fpoints.items():
+        b = b_front.get(name)
+        if b is not None:
+            gate.ratio(f"frontier {name} query ms", p.get("query_ms"),
+                       b.get("query_ms"), tol)
     return gate
 
 

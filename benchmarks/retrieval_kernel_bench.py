@@ -17,6 +17,15 @@ measured discard reflects true pruning.  Each point records wall time for
 both paths, the scored-tile fraction from the block prepass, and recall
 parity (fused ids must equal the dense ids bit-for-bit).
 
+A second sweep records the **memory-vs-recall frontier** of the compressed
+catalog representations (``docs/compression.md``): for f32 / int8 (at two
+re-rank pool sizes) / int8 + varint-compressed postings, the bytes per item
+with a component breakdown (factors, posting structure, pattern bitsets),
+recall@kappa against the brute oracle on both the pruned and the
+exact-rerank path, and the served query latency.  The regression gate pins
+``>= 4x`` items-per-byte at exact-path recall parity on the compressed
+setting.
+
 Run:  PYTHONPATH=src python benchmarks/retrieval_kernel_bench.py [--tiny]
 Writes BENCH_retrieval.json.
 """
@@ -30,6 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import (encode_postings, pattern_dict_encode,
+                            pattern_dict_nbytes)
+from repro.core.inverted_index import table_to_csr
 from repro.core.mapping import GamConfig, sparse_map
 from repro.core.retrieval import masked_topk
 from repro.kernels.gam_score import NEG
@@ -128,6 +140,86 @@ def run_point(items: np.ndarray, users: np.ndarray, cfg: GamConfig, *,
     }
 
 
+# ------------------------------------------------- memory-recall frontier
+
+# the four catalog representations the serving tier can hold; "f32" is the
+# uncompressed reference every ratio is against
+FRONTIER_SETTINGS = (
+    {"name": "f32", "quantize": "none", "rerank_factor": 4,
+     "compress_postings": False},
+    {"name": "int8_r2", "quantize": "int8", "rerank_factor": 2,
+     "compress_postings": False},
+    {"name": "int8_r4", "quantize": "int8", "rerank_factor": 4,
+     "compress_postings": False},
+    {"name": "int8_r4_compressed", "quantize": "int8", "rerank_factor": 4,
+     "compress_postings": True},
+)
+
+
+def catalog_bytes(retriever, compressed: bool) -> dict:
+    """Serving-state footprint by component, measured off the actual arrays
+    (what a snapshot of this representation carries)."""
+    meta = retriever._retrieve_meta
+    n = retriever.n_items
+    if meta.quantize == "int8":
+        factor_bytes = int(np.asarray(meta.factors_q).nbytes
+                           + np.asarray(meta.scales).nbytes)
+    else:
+        factor_bytes = int(retriever.items.nbytes)
+    table = np.asarray(retriever.device_index.table)
+    counts = np.asarray(retriever.device_index.counts)
+    if compressed:
+        index_bytes = int(encode_postings(*table_to_csr(table,
+                                                        counts)).nbytes)
+        bits = np.ascontiguousarray(np.asarray(meta.item_bits_t).T[:n])
+        pattern_bytes = pattern_dict_nbytes(*pattern_dict_encode(bits))
+    else:
+        index_bytes = int(table.nbytes + counts.nbytes)
+        pattern_bytes = int(np.asarray(meta.item_bits_t).nbytes)
+    total = factor_bytes + index_bytes + pattern_bytes
+    return {"factor_bytes": factor_bytes, "index_bytes": index_bytes,
+            "pattern_bytes": pattern_bytes, "total_bytes": total,
+            "bytes_per_item": total / n}
+
+
+def run_frontier(items: np.ndarray, users: np.ndarray, cfg: GamConfig, *,
+                 kappa: int, min_overlap: int, reps: int) -> list[dict]:
+    """One point per FRONTIER_SETTINGS entry over the same catalog."""
+    oracle = open_retriever(RetrieverSpec(cfg=cfg, backend="brute"),
+                            items=items)
+    o_ids = np.asarray(oracle.query(users, kappa).ids)
+    tau, vals = sparse_map(jnp.asarray(items), cfg)
+    tau, mask = np.asarray(tau), np.asarray(vals) != 0.0
+    bucket = int(np.bincount(tau[mask].ravel(), minlength=cfg.p).max())
+
+    def recall(ids: np.ndarray) -> float:
+        return float(np.mean([np.isin(ids[qi], o_ids[qi]).mean()
+                              for qi in range(o_ids.shape[0])]))
+
+    points = []
+    for s in FRONTIER_SETTINGS:
+        spec = RetrieverSpec(cfg=cfg, backend="gam-device",
+                             min_overlap=min_overlap, bucket=bucket,
+                             quantize=s["quantize"],
+                             rerank_factor=s["rerank_factor"],
+                             compress_postings=s["compress_postings"])
+        retriever = open_retriever(spec, items=items)
+        pruned = np.asarray(retriever.query(users, kappa).ids)
+        exact = np.asarray(retriever.query(users, kappa, exact=True).ids)
+        lat_s = _time(lambda: retriever.query(users, kappa), reps)
+        points.append({
+            "name": s["name"],
+            "quantize": s["quantize"],
+            "rerank_factor": s["rerank_factor"],
+            "compress_postings": s["compress_postings"],
+            "recall_at_kappa": recall(pruned),
+            "recall_exact_path": recall(exact),
+            "query_ms": lat_s * 1e3,
+            **catalog_bytes(retriever, s["compress_postings"]),
+        })
+    return points
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, nargs="+",
@@ -176,6 +268,28 @@ def main(argv=None) -> None:
                   f"{pt['fused_ms']:.1f},{pt['speedup']:.2f},"
                   f"{pt['recall_parity']}")
 
+    # memory-vs-recall frontier on the smallest catalog of the sweep (the
+    # representation ratios are size-stable; the big sizes only add wall
+    # time), at the loosest min_overlap so pruning recall is representative
+    n_f = min(args.items)
+    items, centers = clustered_catalog(n_f, args.dim, args.clusters,
+                                       args.sigma, seed=n_f)
+    sel = np.sort(rng.integers(0, len(centers), args.queries))
+    users = centers[sel] + args.sigma * rng.normal(
+        size=(args.queries, args.dim)).astype(np.float32)
+    users /= np.linalg.norm(users, axis=1, keepdims=True)
+    frontier = run_frontier(items, users, cfg, kappa=args.kappa,
+                            min_overlap=min(args.min_overlap),
+                            reps=args.reps)
+    f32 = frontier[0]
+    print("frontier: name,bytes/item,x_items_per_byte,recall,recall_exact,"
+          "query_ms")
+    for pt in frontier:
+        print(f"{pt['name']},{pt['bytes_per_item']:.1f},"
+              f"{f32['bytes_per_item'] / pt['bytes_per_item']:.2f},"
+              f"{pt['recall_at_kappa']:.3f},{pt['recall_exact_path']:.3f},"
+              f"{pt['query_ms']:.1f}")
+
     out = {
         "backend": jax.default_backend(),
         "config": {
@@ -184,6 +298,9 @@ def main(argv=None) -> None:
             "threshold": args.threshold, "bn": args.bn, "bq": args.bq,
         },
         "points": points,
+        "frontier": {"n_items": n_f, "kappa": args.kappa,
+                     "min_overlap": min(args.min_overlap),
+                     "points": frontier},
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

@@ -25,10 +25,10 @@ def main() -> None:
         ("gam_head_bench", gam_head_bench),
         ("ablation_schemes", ablation_schemes),
     ):
-        t0 = time.time()
+        t0 = time.monotonic()
         try:
             mod.main()
-            print(f"# {name} done in {time.time() - t0:.1f}s\n")
+            print(f"# {name} done in {time.monotonic() - t0:.1f}s\n")
         except Exception as e:  # pragma: no cover
             import traceback
             traceback.print_exc()

@@ -1,0 +1,31 @@
+"""Host-side codecs for the compressed catalog representation.
+
+Three independent, individually bit-exact (or, for quantization, bounded
+and re-ranked) building blocks — see ``docs/compression.md`` for how the
+serving tier composes them:
+
+* :mod:`repro.compress.postings` — delta + group-varint coding of sorted
+  posting lists (lossless).
+* :mod:`repro.compress.patterns` — dictionary coding of shared sparsity
+  patterns (lossless).
+* :mod:`repro.compress.quantize` — int8 factor blocks with per-block f32
+  scales, decoded inside the retrieval kernel (lossy, error-bounded, made
+  exact again by the f32 re-rank stage).
+"""
+from repro.compress.patterns import (pattern_dict_decode, pattern_dict_encode,
+                                     pattern_dict_nbytes)
+from repro.compress.postings import (CodecError, CompressedPostings,
+                                     decode_postings, delta_decode,
+                                     delta_encode, encode_postings,
+                                     group_varint_decode, group_varint_encode)
+from repro.compress.quantize import (dequantize_int8,
+                                     quantization_error_bound, quantize_int8,
+                                     score_error_bound)
+
+__all__ = [
+    "CodecError", "CompressedPostings", "decode_postings", "delta_decode",
+    "delta_encode", "dequantize_int8", "encode_postings",
+    "group_varint_decode", "group_varint_encode", "pattern_dict_decode",
+    "pattern_dict_encode", "pattern_dict_nbytes",
+    "quantization_error_bound", "quantize_int8", "score_error_bound",
+]

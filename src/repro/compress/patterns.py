@@ -1,0 +1,43 @@
+"""Pattern dictionary: factor shared sparsity structure out of per-item rows.
+
+The tessellation map sends every item in a cell to the SAME sparsity
+pattern, so the (n, words) packed-bitset matrix the kernel metadata and the
+snapshots carry is massively redundant: the number of *distinct* rows is
+bounded by the number of occupied cells, not the catalog size.  The
+dictionary form stores the unique rows once plus a per-item int32 index —
+``uniq[inverse]`` reconstructs the original matrix bit-exactly.
+
+This is the "factor out shared pattern structure" half of the compressed
+index: posting structures are pure functions of the patterns, so a catalog
+snapshot that carries ``(uniq, inverse)`` has already paid for its posting
+lists' shared structure once per cell instead of once per item.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pattern_dict_decode", "pattern_dict_encode", "pattern_dict_nbytes"]
+
+
+def pattern_dict_encode(bits) -> tuple[np.ndarray, np.ndarray]:
+    """(n, words) uint32 rows -> (unique rows (u, words), inverse (n,) i32)."""
+    bits = np.ascontiguousarray(bits, np.uint32)
+    if bits.size == 0:
+        return bits.reshape(0, bits.shape[1] if bits.ndim == 2 else 0), \
+            np.empty(0, np.int32)
+    uniq, inverse = np.unique(bits, axis=0, return_inverse=True)
+    return uniq, inverse.reshape(-1).astype(np.int32)
+
+
+def pattern_dict_decode(uniq, inverse) -> np.ndarray:
+    """Inverse of :func:`pattern_dict_encode` (bit-exact)."""
+    uniq = np.ascontiguousarray(uniq, np.uint32)
+    inverse = np.asarray(inverse, np.int64)
+    if inverse.size == 0:
+        return np.empty((0, uniq.shape[1] if uniq.ndim == 2 else 0),
+                        np.uint32)
+    return uniq[inverse]
+
+
+def pattern_dict_nbytes(uniq, inverse) -> int:
+    return int(np.asarray(uniq).nbytes + np.asarray(inverse).nbytes)

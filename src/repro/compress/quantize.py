@@ -1,0 +1,65 @@
+"""Int8 factor quantization with per-block scales.
+
+The factor slabs are the HBM sink of the serving tier: ``n_rows * k`` f32.
+Quantizing to int8 with one f32 scale per kernel item block (``bn`` rows —
+the same block the fused kernel streams, so the scale rides in SMEM next to
+its tile) cuts that 4x while the decode stays a single multiply inside the
+kernel's inner loop (PAPERS.md "Efficient Inner Product Approximation in
+Hybrid Spaces": quantized dense scoring behind sparse candidate generation,
+exact re-rank on top).
+
+Error model (see ``docs/compression.md``): with block scale
+``s = max|x| / 127``, every dequantized element is within ``s/2`` of its f32
+original, so a k-dim dot product against a query ``u`` is off by at most
+``(s/2) * sum|u|`` — :func:`score_error_bound`.  The serving path never
+relies on the bound for correctness (the top pool is re-ranked against the
+exact f32 rows); it sizes ``rerank_factor``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["dequantize_int8", "quantization_error_bound", "quantize_int8",
+           "score_error_bound"]
+
+
+def quantize_int8(x, block: int) -> tuple[np.ndarray, np.ndarray]:
+    """(n, k) f32, n a multiple of ``block`` -> ((n, k) int8, per-block f32
+    scales).  Symmetric round-to-nearest-even into [-127, 127]; an all-zero
+    block gets scale 1.0 (decodes to exact zeros)."""
+    x = np.ascontiguousarray(x, np.float32)
+    n, k = x.shape
+    block = int(block)
+    if block < 1 or n % block:
+        raise ValueError(f"rows {n} not a multiple of block {block}")
+    nb = n // block
+    amax = np.abs(x).reshape(nb, block * k).max(axis=1) if n else \
+        np.empty(0, np.float32)
+    scales = np.where(amax > 0, amax / np.float32(127.0), 1.0)
+    scales = scales.astype(np.float32)
+    q = np.rint(x.reshape(nb, block, k) / scales[:, None, None])
+    q = np.clip(q, -127, 127).astype(np.int8)
+    return q.reshape(n, k), scales
+
+
+def dequantize_int8(q, scales, block: int) -> np.ndarray:
+    """Host-side reference decode (the kernel does the same multiply on
+    device): (n, k) int8 + per-block scales -> (n, k) f32."""
+    q = np.ascontiguousarray(q, np.int8).astype(np.float32)
+    n, k = q.shape
+    nb = n // int(block)
+    s = np.asarray(scales, np.float32)
+    return (q.reshape(nb, int(block), k) * s[:, None, None]).reshape(n, k)
+
+
+def quantization_error_bound(scales) -> np.ndarray:
+    """Per-block bound on |x - dequant(quant(x))| per element: half a
+    quantization step."""
+    return np.asarray(scales, np.float32) * np.float32(0.5)
+
+
+def score_error_bound(scales, users) -> np.ndarray:
+    """(Q, n_blocks) bound on the dot-product error of any item in a block
+    against each query: ``(scale/2) * sum|u|``."""
+    u1 = np.abs(np.asarray(users, np.float32)).sum(axis=-1)
+    return u1[:, None] * quantization_error_bound(scales)[None, :]

@@ -54,16 +54,36 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compress.quantize import quantize_int8
 from repro.kernels.gam_score import NEG
 
-__all__ = ["RetrievalMeta", "GamRetrieveResult", "TOPK_EMPTY_ROW",
-           "build_retrieval_meta", "effective_bq", "expand_tile_skips",
-           "export_topk", "gam_retrieve", "pack_patterns"]
+__all__ = ["RetrievalMeta", "GamRetrieveResult", "RowCapacityError",
+           "TOPK_EMPTY_ROW", "build_retrieval_meta", "effective_bq",
+           "expand_tile_skips", "export_topk", "gam_retrieve",
+           "pack_patterns"]
 
 # Row sentinel for non-candidate tile entries: larger than any real global row
-# (catalogs < 2^30 rows) so the (score desc, row asc) tie-break at NEG always
-# prefers an accumulator "empty" slot (negative row) over a discarded item.
+# (catalogs < 2^30 rows — enforced by RowCapacityError at build/assembly
+# time) so the (score desc, row asc) tie-break at NEG always prefers an
+# accumulator "empty" slot (negative row) over a discarded item.
 _NO_ROW = np.int32(1 << 30)
+
+#: Hard structural-row ceiling: rows at or past this value would collide
+#: with the `_NO_ROW` tile sentinel and silently corrupt the tie-break.
+ROW_CAPACITY = int(_NO_ROW)
+
+
+class RowCapacityError(ValueError):
+    """A catalog layout would push structural rows to >= 2^30, where real
+    rows collide with the kernel's ``_NO_ROW`` non-candidate sentinel and
+    results silently corrupt.  Raised loudly at ``build_retrieval_meta`` /
+    partition-validation time instead."""
+
+    def __init__(self, what: str, rows: int):
+        super().__init__(
+            f"{what} = {rows} rows exceeds the kernel row capacity "
+            f"{ROW_CAPACITY} (2^30): row ids would collide with the "
+            f"_NO_ROW sentinel. Shard the catalog across hosts instead.")
 
 # Exported-accumulator sentinel for EMPTY top-kappa slots: the largest int32,
 # so it sorts after every real global row (< 2^30 + any shard offset < 2^31)
@@ -135,6 +155,9 @@ class RetrievalMeta:
     bn: int                  # item-block width (grid tile on the item axis)
     n_rows: int              # structural rows of the factor array served
     n_pad: int               # n_rows rounded up to a multiple of bn
+    quantize: str = "none"            # "none" | "int8"
+    factors_q: jax.Array | None = None  # (n_pad, k) int8 quantized factors
+    scales: jax.Array | None = None     # (1, n_blocks) f32 dequant scales
 
     @property
     def n_blocks(self) -> int:
@@ -165,10 +188,29 @@ def _pack_patterns_jnp(tau: jax.Array, mask: jax.Array, words: int) -> jax.Array
     return jnp.zeros((q, words), jnp.uint32).at[rows, word].add(vals)
 
 
+def quantize_meta(meta: RetrievalMeta, factors) -> RetrievalMeta:
+    """Attach an int8 factor slab + per-block scales to existing metadata.
+
+    ``factors``: (m, k) f32 with m <= meta.n_pad; rows past m quantize as
+    zeros (structural pads).  One f32 scale per ``bn``-row kernel block, so
+    the scale rides the same grid axis as its factor tile."""
+    f = np.asarray(factors, np.float32)
+    if f.ndim != 2 or f.shape[0] > meta.n_pad:
+        raise ValueError(f"factors shape {f.shape} does not fit "
+                         f"n_pad={meta.n_pad}")
+    fp = np.zeros((meta.n_pad, f.shape[1]), np.float32)
+    fp[: f.shape[0]] = f
+    q, scales = quantize_int8(fp, block=meta.bn)
+    return dataclasses.replace(
+        meta, quantize="int8", factors_q=jnp.asarray(q),
+        scales=jnp.asarray(scales.reshape(1, -1)))
+
+
 def build_retrieval_meta(tau: np.ndarray, mask: np.ndarray, p: int, *,
                          n_rows: int | None = None,
                          spill_rows: np.ndarray | None = None,
-                         bn: int = 256) -> RetrievalMeta:
+                         bn: int = 256, factors: np.ndarray | None = None,
+                         quantize: str = "none") -> RetrievalMeta:
     """Build the kernel's block metadata for ``n_rows`` structural rows.
 
     ``tau``/``mask``: (n, k) patterns of the *real* rows, which must occupy
@@ -177,7 +219,11 @@ def build_retrieval_meta(tau: np.ndarray, mask: np.ndarray, p: int, *,
     + an ``alive`` mask, which callers with pad rows must supply).
     ``spill_rows``: global row ids that are unconditional candidates (posting
     bucket overflow — same recall-preserving semantics as ``DeviceIndex``).
+    ``quantize="int8"`` additionally quantizes ``factors`` (required then)
+    into a per-block-scaled int8 slab the kernel decodes in its inner loop.
     """
+    if quantize not in ("none", "int8"):
+        raise ValueError(f"unknown quantize mode {quantize!r}")
     tau = np.asarray(tau)
     mask = np.asarray(mask, bool)
     n = tau.shape[0]
@@ -188,6 +234,8 @@ def build_retrieval_meta(tau: np.ndarray, mask: np.ndarray, p: int, *,
     bn = max(8, min(int(bn), -(-max(n_rows, 1) // 8) * 8))
     n_blocks = -(-max(n_rows, 1) // bn)
     n_pad = n_blocks * bn
+    if n_pad > ROW_CAPACITY:     # before any O(n_pad) allocation
+        raise RowCapacityError("padded catalog (n_pad)", n_pad)
     bits = np.zeros((n_pad, words), np.uint32)
     if n:
         bits[:n] = pack_patterns(tau, mask, p)
@@ -195,13 +243,18 @@ def build_retrieval_meta(tau: np.ndarray, mask: np.ndarray, p: int, *,
     if spill_rows is not None and np.asarray(spill_rows).size:
         spill[np.asarray(spill_rows, np.int64)] = True
     union = np.bitwise_or.reduce(bits.reshape(n_blocks, bn, words), axis=1)
-    return RetrievalMeta(
+    meta = RetrievalMeta(
         item_bits_t=jnp.asarray(np.ascontiguousarray(bits.T)),
         block_union=jnp.asarray(union),
         block_spill=jnp.asarray(spill.reshape(n_blocks, bn).any(axis=1)),
         spill8=jnp.asarray(spill.astype(np.int8)[None, :]),
         p=int(p), words=words, bn=bn, n_rows=n_rows, n_pad=n_pad,
     )
+    if quantize == "int8":
+        if factors is None:
+            raise ValueError("quantize='int8' requires the factor slab")
+        meta = quantize_meta(meta, factors)
+    return meta
 
 
 # ----------------------------------------------------------------- kernel
@@ -250,9 +303,15 @@ def _merge_topk(acc_s, acc_r, tile_s, tile_r, *, kappa, loop_merge):
     return jnp.concatenate(sel_s, axis=1), jnp.concatenate(sel_r, axis=1)
 
 
-def _kernel(skip_ref, u_ref, qb_ref, v_ref, ib_ref, sp_ref, al_ref,
-            vals_ref, rows_ref, cnt_ref, *,
-            kappa, min_overlap, bn, words, loop_merge, fused_words):
+def _kernel(skip_ref, u_ref, qb_ref, v_ref, *rest,
+            kappa, min_overlap, bn, words, loop_merge, fused_words,
+            quantized=False):
+    if quantized:
+        # int8 factor tile + its per-block SMEM scale precede the bit refs
+        sc_ref, ib_ref, sp_ref, al_ref, vals_ref, rows_ref, cnt_ref = rest
+    else:
+        sc_ref = None
+        ib_ref, sp_ref, al_ref, vals_ref, rows_ref, cnt_ref = rest
     j = pl.program_id(1)
     bq = u_ref.shape[0]
 
@@ -270,8 +329,12 @@ def _kernel(skip_ref, u_ref, qb_ref, v_ref, ib_ref, sp_ref, al_ref,
                       fused_words=fused_words)
         cand = ((ov >= min_overlap) | (sp_ref[...] != 0)) & (al_ref[...] != 0)
         cnt_ref[...] = jnp.sum(cand.astype(jnp.int32), axis=1, keepdims=True)
+        v = v_ref[...]
+        if quantized:
+            # in-loop decode: int8 tile * per-block scale (one SMEM scalar)
+            v = v.astype(jnp.float32) * sc_ref[0, 0]
         scores = jax.lax.dot_general(
-            u_ref[...], v_ref[...],
+            u_ref[...], v,
             dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -350,11 +413,108 @@ def _gam_retrieve(users, factors, q_tau, q_mask, alive, ibT, union, bspill,
     return GamRetrieveResult(vals, rows, cnt[:q], skip == 1)
 
 
+@partial(jax.jit, static_argnames=("kappa", "min_overlap", "bq", "bn",
+                                   "words", "n_pad", "interpret",
+                                   "loop_merge"))
+def _gam_retrieve_q(users, factors_q, scales, q_tau, q_mask, alive, ibT,
+                    union, bspill, spill8, *, kappa, min_overlap, bq, bn,
+                    words, n_pad, interpret, loop_merge):
+    """The int8 variant of :func:`_gam_retrieve`: streams the quantized
+    (n_pad, k) slab plus a (1, n_blocks) scale row and decodes per tile
+    inside the kernel.  ``kappa`` here is the rerank POOL width — the
+    caller re-ranks the pool against exact f32 rows afterwards."""
+    q, k = users.shape
+    bq = effective_bq(q, bq)
+    qp = -(-q // bq) * bq
+    nb = n_pad // bn
+
+    q_bits = _pack_patterns_jnp(q_tau, q_mask, words)
+
+    ub = jnp.sum(jax.lax.population_count(
+        q_bits[:, None, :] & union[None, :, :]).astype(jnp.int32), axis=-1)
+    possible = (ub >= min_overlap) | bspill[None, :]            # (q, nb)
+    possible = jnp.pad(possible, ((0, qp - q), (0, 0)))
+    skip = jnp.logical_not(
+        possible.reshape(qp // bq, bq, nb).any(axis=1)).astype(jnp.int32)
+
+    up = jnp.pad(users.astype(jnp.float32), ((0, qp - q), (0, 0)))
+    qbp = jnp.pad(q_bits, ((0, qp - q), (0, 0)))
+    al8 = jnp.pad(alive.astype(jnp.int8), (0, n_pad - alive.shape[0]))[None, :]
+
+    vals, rows, cnt = pl.pallas_call(
+        partial(_kernel, kappa=kappa, min_overlap=min_overlap, bn=bn,
+                words=words, loop_merge=loop_merge, fused_words=interpret,
+                quantized=True),
+        grid=(qp // bq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, words), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((words, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, kappa), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, kappa), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qp, kappa), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kappa), jnp.int32),
+            jax.ShapeDtypeStruct((qp, nb), jnp.int32),
+        ),
+        interpret=interpret,
+    )(skip, up, qbp, factors_q, scales, ibT, spill8, al8)
+
+    vals = vals[:q]
+    rows = jnp.where(vals <= NEG / 2, -1, rows[:q])
+    return GamRetrieveResult(vals, rows, cnt[:q], skip == 1)
+
+
+def _rerank_pool(pool_res: GamRetrieveResult, users, factors,
+                 kappa: int) -> GamRetrieveResult:
+    """Exact f32 re-rank of a quantized-score candidate pool.
+
+    For every query the pool's surviving rows are re-scored against the
+    exact factor rows with the SAME host matvec the CPU oracle uses, then
+    the top-``kappa`` are selected under the kernel's (score desc, row asc)
+    total order — so whenever the pool covers the true top-``kappa`` (the
+    ``rerank_factor`` sizing question), the answer is bit-identical to the
+    dense oracle."""
+    rows_p = np.asarray(pool_res.rows)
+    vals_p = np.asarray(pool_res.vals, np.float32)
+    fr = np.asarray(factors, np.float32)
+    un = np.asarray(users, np.float32)
+    qn = un.shape[0]
+    out_s = np.full((qn, kappa), NEG, np.float32)
+    out_r = np.full((qn, kappa), -1, np.int32)
+    empty_key = np.int64(TOPK_EMPTY_ROW)
+    for qi in range(qn):
+        valid = (rows_p[qi] >= 0) & (vals_p[qi] > NEG / 2)
+        ex = np.full(rows_p.shape[1], NEG, np.float32)
+        vr = rows_p[qi][valid].astype(np.int64)
+        if vr.size:
+            ex[valid] = fr[vr] @ un[qi]
+        key_rows = np.where(valid, rows_p[qi].astype(np.int64), empty_key)
+        order = np.lexsort((key_rows, -ex))[:kappa]
+        out_s[qi] = ex[order]
+        out_r[qi] = np.where(key_rows[order] == empty_key, -1,
+                             rows_p[qi][order])
+    return GamRetrieveResult(jnp.asarray(out_s), jnp.asarray(out_r),
+                             pool_res.blk_counts, pool_res.skipped)
+
+
 def gam_retrieve(users: jax.Array, factors: jax.Array, q_tau: jax.Array,
                  q_mask: jax.Array, meta: RetrievalMeta, kappa: int, *,
                  min_overlap: int = 1, alive: jax.Array | None = None,
                  bq: int = 32, interpret: bool = False,
-                 loop_merge: bool | None = None) -> GamRetrieveResult:
+                 loop_merge: bool | None = None,
+                 rerank_factor: int = 4) -> GamRetrieveResult:
     """Fused candidate-pruned top-kappa MIPS over ``meta.n_rows`` items.
 
     ``users``: (Q, k) f32 query factors; ``factors``: (n_rows, k) f32 item
@@ -364,6 +524,12 @@ def gam_retrieve(users: jax.Array, factors: jax.Array, q_tau: jax.Array,
     exact/brute-force path through the same kernel).  ``loop_merge`` forces
     the Mosaic selection-loop merge (defaults to the faster ``lax.top_k``
     merge under ``interpret``); both realise the identical total order.
+
+    With ``meta.quantize == "int8"`` the kernel streams ``meta.factors_q``
+    (decoded in-loop from per-block scales) and keeps a top-``kappa *
+    rerank_factor`` pool, which is then re-ranked against the exact f32
+    ``factors`` rows — ``factors`` becomes the exact re-rank store and is
+    never shipped through the kernel launch.
     """
     factors = jnp.asarray(factors)
     if factors.shape[0] != meta.n_rows:
@@ -373,6 +539,19 @@ def gam_retrieve(users: jax.Array, factors: jax.Array, q_tau: jax.Array,
         alive = jnp.ones((meta.n_rows,), bool)
     if loop_merge is None:
         loop_merge = not interpret
+    if meta.quantize == "int8":
+        kappa = int(kappa)
+        pool = max(kappa, min(kappa * max(1, int(rerank_factor)),
+                              meta.n_pad))
+        pool_res = _gam_retrieve_q(
+            jnp.asarray(users), meta.factors_q, meta.scales,
+            jnp.asarray(q_tau), jnp.asarray(q_mask, bool),
+            jnp.asarray(alive), meta.item_bits_t, meta.block_union,
+            meta.block_spill, meta.spill8,
+            kappa=pool, min_overlap=int(min_overlap), bq=int(bq),
+            bn=meta.bn, words=meta.words, n_pad=meta.n_pad,
+            interpret=bool(interpret), loop_merge=bool(loop_merge))
+        return _rerank_pool(pool_res, users, factors, kappa)
     return _gam_retrieve(
         jnp.asarray(users), factors, jnp.asarray(q_tau),
         jnp.asarray(q_mask, bool), jnp.asarray(alive), meta.item_bits_t,

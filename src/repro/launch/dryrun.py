@@ -132,12 +132,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["status"] = "skip"
         rec["reason"] = SKIPS[(arch, shape_name)]
         return rec
-    t0 = time.time()
+    t0 = time.monotonic()
     lowered = build_lowered(cfg, shape, mesh)
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t0 = time.time()
+    rec["lower_s"] = round(time.monotonic() - t0, 1)
+    t0 = time.monotonic()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.monotonic() - t0, 1)
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)
     rec["bytes_per_device"] = {

@@ -644,9 +644,9 @@ def main():
             size=(args.batch, cfg.n_image_tokens, cfg.d_frontend)),
             jnp.float32)
 
-    t0 = time.time()
+    t0 = time.monotonic()
     res = eng.generate(batch)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"arch={cfg.arch_id} gam={args.gam} "
           f"{args.batch}x{args.new_tokens} tokens in {dt:.2f}s")
     print("tokens:\n", res.tokens)

@@ -73,13 +73,13 @@ def train(arch: str, *, reduced: bool, steps: int, batch_size: int,
                          seed=seed)
     rng = np.random.default_rng(seed)
     losses = []
-    t0 = time.time()
+    t0 = time.monotonic()
     for step, tokens in zip(range(steps), pipe):
         batch = build_batch(cfg, tokens, rng)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if step % log_every == 0 or step == steps - 1:
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"nll {float(metrics['nll']):.4f} "
                   f"lr {float(metrics['lr']):.2e} "

@@ -89,8 +89,11 @@ class LogHistogram:
         self.vmin = min(self.vmin, float(v.min()))
         self.vmax = max(self.vmax, float(v.max()))
         # side="left": v < lo -> 0 (underflow), v in (edges[i-1], edges[i]]
-        # -> bucket i, v > hi -> bins + 1 (overflow)
+        # -> bucket i, v > hi -> bins + 1 (overflow).  searchsorted puts
+        # v == lo at index 0, but the documented contract is [lo, hi]
+        # in-range — lift exact-lo values into the first bucket.
         idx = np.searchsorted(self.edges, v, side="left")
+        idx = np.where((idx == 0) & (v >= self.lo), 1, idx)
         idx = np.where(v > self.hi, self.bins + 1, idx)
         self.counts += np.bincount(idx, minlength=self.counts.size)
 

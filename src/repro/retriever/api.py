@@ -52,6 +52,9 @@ class RetrieverSpec:
     bn: int | None = None         # fused-kernel item-block width (None=auto)
     bq: int = 32                  # fused-kernel query-block height
     seed: int = 0                 # randomised backends (LSH baselines)
+    compress_postings: bool = False   # delta+group-varint posting storage
+    quantize: str = "none"        # item-factor slab dtype: "none" | "int8"
+    rerank_factor: int = 4        # exact-rerank pool = kappa * this (int8)
     options: tuple[tuple[str, Any], ...] = ()   # backend-specific extras
 
     def opt(self, name: str, default: Any = None) -> Any:

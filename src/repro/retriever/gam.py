@@ -19,14 +19,20 @@ bit-identically without re-deriving anything.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inverted_index import DeviceIndex, InvertedIndex
+from repro.compress.postings import CompressedPostings, decode_postings, \
+    encode_postings
+from repro.core.inverted_index import (CompressedInvertedIndex, DeviceIndex,
+                                       InvertedIndex, csr_to_table,
+                                       table_to_csr)
 from repro.core.mapping import GamConfig, sparse_map
 from repro.kernels.gam_retrieve import (RetrievalMeta, build_retrieval_meta,
-                                        expand_tile_skips)
+                                        expand_tile_skips, quantize_meta)
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
 from repro.retriever.api import Retriever, RetrieverSpec
@@ -101,7 +107,9 @@ class GamIndexRetriever(Retriever):
             self._retrieve_meta = build_retrieval_meta(
                 self.item_tau, self.item_mask, spec.cfg.p,
                 spill_rows=np.asarray(self.device_index.spill),
-                bn=spec.bn or min(512, -(-max(n, 1) // 128) * 128))
+                bn=spec.bn or min(512, -(-max(n, 1) // 128) * 128),
+                factors=self.items if spec.quantize == "int8" else None,
+                quantize=spec.quantize)
         return self
 
     def upsert(self, ids, factors) -> None:
@@ -125,11 +133,15 @@ class GamIndexRetriever(Retriever):
     # ------------------------------------------------------------ queries
 
     @property
-    def index(self) -> InvertedIndex:
-        """The paper-faithful CSR posting lists (CPU query path)."""
+    def index(self) -> InvertedIndex | CompressedInvertedIndex:
+        """The paper-faithful posting lists (CPU query path) — flat CSR, or
+        the pattern-factored varint encoding when ``spec.compress_postings``
+        (answers are bit-identical either way)."""
         if self._cpu_index is None:
-            self._cpu_index = InvertedIndex(self.item_tau, self.spec.cfg.p,
-                                            mask=self.item_mask)
+            idx = InvertedIndex(self.item_tau, self.spec.cfg.p,
+                                mask=self.item_mask)
+            self._cpu_index = (idx.compress() if self.spec.compress_postings
+                               else idx)
         return self._cpu_index
 
     def map_queries(self, users: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -212,7 +224,8 @@ class GamIndexRetriever(Retriever):
                            jnp.asarray(q_tau), jnp.asarray(q_mask),
                            self._retrieve_meta, kk,
                            min_overlap=0 if exact else self.spec.min_overlap,
-                           bq=self.spec.bq)
+                           bq=self.spec.bq,
+                           rerank_factor=self.spec.rerank_factor)
         vals = np.asarray(res.vals, np.float32)
         rows = np.asarray(res.rows, np.int64)
         empty = vals <= NEG / 2          # slots no candidate could fill
@@ -264,9 +277,17 @@ class GamIndexRetriever(Retriever):
     def stats(self) -> dict:
         out = super().stats()
         out.update(p=self.spec.cfg.p, device=self.device,
-                   bucket=self.spec.bucket)
+                   bucket=self.spec.bucket, quantize=self.spec.quantize,
+                   compress_postings=self.spec.compress_postings)
         if self.device and self.device_index is not None:
             out["n_spill"] = int(self.device_index.spill.shape[0])
+            meta = self._retrieve_meta
+            if meta is not None and meta.quantize == "int8":
+                out["factor_bytes"] = int(np.asarray(meta.factors_q).nbytes
+                                          + np.asarray(meta.scales).nbytes)
+        if isinstance(self._cpu_index, CompressedInvertedIndex):
+            out["index_bytes"] = self._cpu_index.nbytes
+            out["n_patterns"] = self._cpu_index.n_patterns
         return out
 
     def snapshot(self, path: str) -> None:
@@ -278,22 +299,45 @@ class GamIndexRetriever(Retriever):
         if self._scale is not None:
             arrays["scale"] = self._scale
         if not self.device:
-            idx = self.index      # CSR posting lists (built if still lazy)
-            arrays["postings"] = idx.postings
-            arrays["offsets"] = idx.offsets
+            idx = self.index      # posting lists (built if still lazy)
+            if isinstance(idx, CompressedInvertedIndex):
+                arrays["sp_data"] = idx.slot_patterns.data
+                arrays["sp_counts"] = idx.slot_patterns.counts
+                arrays["pi_data"] = idx.pattern_items.data
+                arrays["pi_counts"] = idx.pattern_items.counts
+                extra["codec"] = {"sp_n": int(idx.slot_patterns.n_values),
+                                  "pi_n": int(idx.pattern_items.n_values)}
+            else:
+                arrays["postings"] = idx.postings
+                arrays["offsets"] = idx.offsets
         elif self.device_index is not None:
             meta = self._retrieve_meta
+            if self.spec.compress_postings:
+                # the dense-bucket table re-encoded as delta+group-varint
+                # CSR; restore re-densifies bit-identically
+                table = np.asarray(self.device_index.table)
+                counts = np.asarray(self.device_index.counts)
+                cp = encode_postings(*table_to_csr(table, counts))
+                arrays["table_data"] = cp.data
+                arrays["table_counts"] = cp.counts
+                extra["codec"] = {"table_n": int(cp.n_values),
+                                  "bucket": int(table.shape[1])}
+            else:
+                arrays["table"] = self.device_index.table
+                arrays["counts"] = self.device_index.counts
             arrays.update(
-                table=self.device_index.table,
-                counts=self.device_index.counts,
                 spill=self.device_index.spill,
                 item_bits_t=meta.item_bits_t,
                 block_union=meta.block_union,
                 block_spill=meta.block_spill,
                 spill8=meta.spill8,
             )
+            if meta.quantize == "int8":
+                arrays["factors_q"] = meta.factors_q
+                arrays["scales"] = meta.scales
             extra["meta"] = {"bn": meta.bn, "words": meta.words,
-                             "n_rows": meta.n_rows, "n_pad": meta.n_pad}
+                             "n_rows": meta.n_rows, "n_pad": meta.n_pad,
+                             "quantize": meta.quantize}
         write_snapshot(path, self.spec, arrays, extra)
 
     def restore(self, path: str) -> "GamIndexRetriever":
@@ -309,16 +353,41 @@ class GamIndexRetriever(Retriever):
                        if "scale" in arrays else None)
         p = self.spec.cfg.p
         if not self.device:
-            idx = InvertedIndex.__new__(InvertedIndex)
-            idx.n_items, idx.p, idx.k = (len(self.ids), p,
-                                         self.item_tau.shape[1])
-            idx.postings = np.asarray(arrays["postings"], np.int32)
-            idx.offsets = np.asarray(arrays["offsets"], np.int64)
-            self._cpu_index = idx
+            n, k = len(self.ids), self.item_tau.shape[1]
+            if "sp_data" in arrays:
+                codec = state["codec"]
+                self._cpu_index = CompressedInvertedIndex(
+                    CompressedPostings(
+                        np.asarray(arrays["sp_data"], np.uint8),
+                        np.asarray(arrays["sp_counts"], np.int32),
+                        int(codec["sp_n"])),
+                    CompressedPostings(
+                        np.asarray(arrays["pi_data"], np.uint8),
+                        np.asarray(arrays["pi_counts"], np.int32),
+                        int(codec["pi_n"])),
+                    n_items=n, p=p, k=k)
+            else:
+                idx = InvertedIndex.__new__(InvertedIndex)
+                idx.n_items, idx.p, idx.k = n, p, k
+                idx.postings = np.asarray(arrays["postings"], np.int32)
+                idx.offsets = np.asarray(arrays["offsets"], np.int64)
+                self._cpu_index = idx
         else:
+            if "table_data" in arrays:
+                codec = state["codec"]
+                cp = CompressedPostings(
+                    np.asarray(arrays["table_data"], np.uint8),
+                    np.asarray(arrays["table_counts"], np.int32),
+                    int(codec["table_n"]))
+                table, counts = csr_to_table(
+                    *decode_postings(cp), int(codec["bucket"]),
+                    sentinel=len(self.ids))
+            else:
+                table = np.asarray(arrays["table"])
+                counts = np.asarray(arrays["counts"])
             self.device_index = DeviceIndex(
-                table=jnp.asarray(arrays["table"]),
-                counts=jnp.asarray(arrays["counts"]),
+                table=jnp.asarray(table),
+                counts=jnp.asarray(counts),
                 spill=jnp.asarray(arrays["spill"]),
                 n_items=len(self.ids), p=p)
             self._items_dev = jnp.asarray(self.items)
@@ -330,4 +399,13 @@ class GamIndexRetriever(Retriever):
                 spill8=jnp.asarray(arrays["spill8"]),
                 p=p, words=int(m["words"]), bn=int(m["bn"]),
                 n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"]))
+            if m.get("quantize", "none") == "int8":
+                if "factors_q" in arrays:
+                    self._retrieve_meta = dataclasses.replace(
+                        self._retrieve_meta, quantize="int8",
+                        factors_q=jnp.asarray(arrays["factors_q"], jnp.int8),
+                        scales=jnp.asarray(arrays["scales"], jnp.float32))
+                else:       # older file written before slabs were persisted
+                    self._retrieve_meta = quantize_meta(self._retrieve_meta,
+                                                        self.items)
         return self

@@ -99,20 +99,27 @@ def _slice_index(g: ShardedGamIndex, placement: HostPlacement,
         meta = g.metas[pg]
         o, n = a - p_lo, b - a
         factor_parts.append(g.factors_g[pg][o:o + n])
-        metas.append(dataclasses.replace(
-            meta,
+        repl = dict(
             item_bits_t=meta.item_bits_t[:, o:o + n],
             block_union=meta.block_union[o // meta.bn:(o + n) // meta.bn],
             block_spill=meta.block_spill[o // meta.bn:(o + n) // meta.bn],
             spill8=meta.spill8[:, o:o + n],
-            n_rows=n, n_pad=n))
+            n_rows=n, n_pad=n)
+        if meta.quantize == "int8":
+            # slice boundaries are block-aligned, so the sliced slab and
+            # per-block scales are byte-identical to quantizing the slice
+            # from scratch
+            repl["factors_q"] = meta.factors_q[o:o + n]
+            repl["scales"] = meta.scales[:, o // meta.bn:(o + n) // meta.bn]
+        metas.append(dataclasses.replace(meta, **repl))
     flat = (factor_parts[0] if len(factor_parts) == 1
             else jnp.concatenate(factor_parts))
     return ShardedGamIndex(
         g.cfg, g.item_ids[cat_lo:cat_lo + sub_part.n],
         g.tables[s_lo:s_hi], g.counts[s_lo:s_hi], g.spills[s_lo:s_hi],
         flat, g._alive_host[row_lo:row_lo + sub_part.n_rows],
-        sub_part, g.min_overlap, g.bucket, None, metas)
+        sub_part, g.min_overlap, g.bucket, None, metas,
+        quantize=g.quantize, rerank_factor=g.rerank_factor)
 
 
 class MultiHostIndex:

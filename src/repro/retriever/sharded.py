@@ -40,11 +40,15 @@ lands in a consistent generation with no half-swapped segment observable.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress.postings import CompressedPostings, decode_postings, \
+    encode_postings
+from repro.core.inverted_index import csr_to_table, table_to_csr
 from repro.core.mapping import sparse_map
 from repro.kernels.gam_retrieve import RetrievalMeta
 from repro.kernels.gam_score import NEG
@@ -108,7 +112,8 @@ class ShardedRetriever(Retriever):
             np.zeros((0, spec.cfg.k), np.float32), np.zeros(0, np.int64))
         self.delta = DeltaSegment(
             spec.cfg, spec.min_overlap,
-            spec.bucket if spec.delta_bucket is None else spec.delta_bucket)
+            spec.bucket if spec.delta_bucket is None else spec.delta_bucket,
+            quantize=spec.quantize, rerank_factor=spec.rerank_factor)
         self.batcher = Microbatcher(
             self._batch_query_fn, spec.cfg.k, batch_size=spec.batch_size,
             max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics,
@@ -122,7 +127,8 @@ class ShardedRetriever(Retriever):
             factors, self.spec.cfg, item_ids=ids,
             n_shards=self.spec.n_shards, min_overlap=self.spec.min_overlap,
             bucket=self.spec.bucket, mesh=self.mesh, partition=partition,
-            premapped=premapped)
+            premapped=premapped, quantize=self.spec.quantize,
+            rerank_factor=self.spec.rerank_factor)
 
     def _adopt_base(self, base) -> None:
         """Install a freshly built main segment (the swap point shared by
@@ -257,6 +263,8 @@ class ShardedRetriever(Retriever):
             self.spec.cfg, ids, factors, partition=partition,
             n_shards=self.spec.n_shards, bucket=self.spec.bucket,
             min_overlap=self.spec.min_overlap, mesh=self.mesh,
+            quantize=self.spec.quantize,
+            rerank_factor=self.spec.rerank_factor,
             slice_rows=(int(self.spec.opt("compact_slice_rows", 512))
                         if slice_rows is None else slice_rows),
             generation=self.generation, premapped=premapped,
@@ -656,24 +664,44 @@ class ShardedRetriever(Retriever):
         arrays = {
             "catalog_ids": cat_ids, "catalog_factors": cat_fac,
             "base_item_ids": base.item_ids,
-            "base_tables": base.tables, "base_counts": base.counts,
+            "base_counts": base.counts,
             "base_spills": base.spills,
             "base_factors": base.flat_factors(),
             "base_alive": base._alive_host,
             "delta_ids": self.delta.ids, "delta_factors": self.delta.factors,
         }
+        extra_base: dict = {"bucket": base.bucket,
+                            "partition": {"lengths": list(part.lengths),
+                                          "bns": list(part.bns),
+                                          "caps": list(part.caps)}}
+        if self.spec.compress_postings:
+            # the (S, p, bucket) dense-bucket tables flattened to one CSR
+            # stream (the per-slot counts are already persisted as
+            # base_counts); restore re-densifies shard by shard against
+            # each shard's own pad sentinel, bit-identically
+            tables = np.asarray(base.tables)
+            counts = np.asarray(base.counts).astype(np.int64)
+            post, off = table_to_csr(
+                tables.reshape(-1, tables.shape[-1]), counts.ravel())
+            cp = encode_postings(post, off)
+            arrays["base_tables_data"] = cp.data
+            extra_base["codec"] = {"n_values": int(cp.n_values),
+                                   "bucket": int(tables.shape[-1])}
+        else:
+            arrays["base_tables"] = base.tables
         per_group = []
         for g, meta in enumerate(base.metas):
             arrays[f"meta{g}_item_bits_t"] = meta.item_bits_t
             arrays[f"meta{g}_block_union"] = meta.block_union
             arrays[f"meta{g}_block_spill"] = meta.block_spill
             arrays[f"meta{g}_spill8"] = meta.spill8
+            if meta.quantize == "int8":
+                arrays[f"meta{g}_factors_q"] = meta.factors_q
+                arrays[f"meta{g}_scales"] = meta.scales
             per_group.append({"bn": meta.bn, "words": meta.words,
-                              "n_rows": meta.n_rows, "n_pad": meta.n_pad})
-        extra = {"base": {"bucket": base.bucket,
-                          "partition": {"lengths": list(part.lengths),
-                                        "bns": list(part.bns),
-                                        "caps": list(part.caps)}},
+                              "n_rows": meta.n_rows, "n_pad": meta.n_pad,
+                              "quantize": meta.quantize})
+        extra = {"base": extra_base,
                  "meta": {"n_groups": len(base.metas),
                           "per_group": per_group},
                  "generation": self.generation}
@@ -694,21 +722,51 @@ class ShardedRetriever(Retriever):
                          tuple(b["partition"]["caps"]))
         metas = []
         for g, m in enumerate(state["meta"]["per_group"]):
-            metas.append(RetrievalMeta(
+            meta = RetrievalMeta(
                 item_bits_t=jnp.asarray(arrays[f"meta{g}_item_bits_t"]),
                 block_union=jnp.asarray(arrays[f"meta{g}_block_union"]),
                 block_spill=jnp.asarray(arrays[f"meta{g}_block_spill"]),
                 spill8=jnp.asarray(arrays[f"meta{g}_spill8"]),
                 p=self.spec.cfg.p, words=int(m["words"]), bn=int(m["bn"]),
-                n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"])))
+                n_rows=int(m["n_rows"]), n_pad=int(m["n_pad"]))
+            if (m.get("quantize", "none") == "int8"
+                    and f"meta{g}_factors_q" in arrays):
+                meta = dataclasses.replace(
+                    meta, quantize="int8",
+                    factors_q=jnp.asarray(arrays[f"meta{g}_factors_q"],
+                                          jnp.int8),
+                    scales=jnp.asarray(arrays[f"meta{g}_scales"],
+                                       jnp.float32))
+            metas.append(meta)
+        counts = np.asarray(arrays["base_counts"])
+        if "base_tables_data" in arrays:
+            codec = b["codec"]
+            cp = CompressedPostings(
+                np.asarray(arrays["base_tables_data"], np.uint8),
+                counts.ravel().astype(np.int32), int(codec["n_values"]))
+            post, off = decode_postings(cp)
+            bucket = int(codec["bucket"])
+            p = self.spec.cfg.p
+            shard_tables = []
+            for s in range(part.n_shards):
+                lo, hi = off[s * p], off[(s + 1) * p]
+                soff = off[s * p:(s + 1) * p + 1] - lo
+                tab, _ = csr_to_table(post[lo:hi], soff, bucket,
+                                      sentinel=part.caps[s])
+                shard_tables.append(tab)
+            tables = np.stack(shard_tables)
+        else:
+            tables = np.asarray(arrays["base_tables"])
         self._adopt_base(ShardedGamIndex(
             self.spec.cfg, np.asarray(arrays["base_item_ids"], np.int64),
-            jnp.asarray(arrays["base_tables"]),
-            jnp.asarray(arrays["base_counts"]),
+            jnp.asarray(tables),
+            jnp.asarray(counts),
             jnp.asarray(arrays["base_spills"]),
             jnp.asarray(arrays["base_factors"]),
             np.asarray(arrays["base_alive"], bool),
-            part, self.spec.min_overlap, int(b["bucket"]), None, metas))
+            part, self.spec.min_overlap, int(b["bucket"]), None, metas,
+            quantize=self.spec.quantize,
+            rerank_factor=self.spec.rerank_factor))
         self.catalog = {int(i): f for i, f in zip(
             np.asarray(arrays["catalog_ids"], np.int64),
             np.asarray(arrays["catalog_factors"], np.float32))}

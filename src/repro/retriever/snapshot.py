@@ -18,20 +18,30 @@ from repro.retriever.api import RetrieverSpec
 
 __all__ = ["read_snapshot", "write_snapshot"]
 
-# v3: adds the optional multi-host placement (``state["placement"]``) the
-# ``sharded-multihost`` backend writes.  v2 files (partition + per-bn-group
-# metas + generation) read unchanged — the placement is a deployment knob
-# re-derived from the opening spec, never result-bearing.  v1 files are
-# still rejected loudly here rather than KeyError-ing mid-restore.
-SNAPSHOT_FORMAT = "repro.retriever/v3"
-_READ_COMPAT = (SNAPSHOT_FORMAT, "repro.retriever/v2")
+# v4: the compressed-catalog formats — varint-encoded posting tables
+# (``compress_postings``, storage-only: the reader re-densifies
+# bit-identically, keyed on which arrays are present) and int8 factor slabs
+# with per-block scales (``quantize``/``rerank_factor``, result-bearing:
+# within-backend bitwise score identity pins the scoring path).  v3 (adds
+# the optional multi-host placement) and v2 files read unchanged — their
+# headers predate the new spec fields, so readers fill the uncompressed
+# defaults.  v1 files are still rejected loudly here rather than
+# KeyError-ing mid-restore.
+SNAPSHOT_FORMAT = "repro.retriever/v4"
+_READ_COMPAT = (SNAPSHOT_FORMAT, "repro.retriever/v3", "repro.retriever/v2")
 
 # spec fields that change query RESULTS (not just performance): a snapshot
 # taken under one of these must not silently serve under another.
 # delta_bucket is result-bearing too — bucket spill turns delta rows into
 # unconditional candidates, so a different width changes candidate sets.
+# quantize/rerank_factor change the scoring path and the exact-rerank pool,
+# so bitwise within-backend score identity requires them to match;
+# compress_postings is deliberately absent — it is storage-only.
 _RESULT_FIELDS = ("backend", "min_overlap", "bucket", "whiten",
-                  "delta_bucket")
+                  "delta_bucket", "quantize", "rerank_factor")
+
+# defaults filled when reading pre-v4 headers that predate a result field
+_FIELD_DEFAULTS = {"quantize": "none", "rerank_factor": 4}
 
 # result-equivalent backend upgrades a snapshot may cross: the multi-host
 # backend answers bit-identically to single-host ``sharded`` over the same
@@ -71,6 +81,8 @@ def read_snapshot(path: str, spec: RetrieverSpec
             f"{path}: snapshot mapping schema {header['cfg']} does not match "
             f"spec cfg {_cfg_meta(spec.cfg)}")
     saved = dict(header["spec"])
+    for field, default in _FIELD_DEFAULTS.items():
+        saved.setdefault(field, default)      # pre-v4 headers
     mine = {f: getattr(spec, f) for f in _RESULT_FIELDS}
     if saved["backend"] in _BACKEND_UPGRADES.get(spec.backend, ()):
         saved["backend"] = spec.backend       # sanctioned scale-out restore

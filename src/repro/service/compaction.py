@@ -83,7 +83,8 @@ class CompactionPlanner:
                  bucket: int = 256, min_overlap: int = 1, mesh=None,
                  slice_rows: int = 512, generation: int = 0,
                  premapped: tuple[np.ndarray, np.ndarray] | None = None,
-                 on_phase=None):
+                 on_phase=None, quantize: str = "none",
+                 rerank_factor: int = 4):
         if slice_rows < 1:
             raise ValueError("slice_rows must be >= 1")
         # lifecycle hook: called as on_phase(old, new, stats) on every phase
@@ -103,6 +104,8 @@ class CompactionPlanner:
                              f"frozen catalog has {self.n}")
         self.bucket = bucket
         self.min_overlap = min_overlap
+        self.quantize = quantize
+        self.rerank_factor = int(rerank_factor)
         self.mesh = mesh
         self.slice_rows = int(slice_rows)
         self.target_generation = int(generation) + 1
@@ -223,7 +226,8 @@ class CompactionPlanner:
             self.cfg, self.ids, self.factors, self.partition,
             [t for t, _, _ in self._segs], [c for _, c, _ in self._segs],
             [sp for _, _, sp in self._segs], self._metas,
-            min_overlap=self.min_overlap, bucket=self.bucket, mesh=self.mesh)
+            min_overlap=self.min_overlap, bucket=self.bucket, mesh=self.mesh,
+            quantize=self.quantize, rerank_factor=self.rerank_factor)
         self.phase = "ready"
         return self.phase
 

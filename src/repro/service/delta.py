@@ -31,10 +31,13 @@ class DeltaSegment:
     """Always-queried dense segment of streamed (id, factor) rows."""
 
     def __init__(self, cfg: GamConfig, min_overlap: int = 1,
-                 bucket: int = 64):
+                 bucket: int = 64, *, quantize: str = "none",
+                 rerank_factor: int = 4):
         self.cfg = cfg
         self.min_overlap = min_overlap
         self.bucket = bucket
+        self.quantize = quantize
+        self.rerank_factor = int(rerank_factor)
         self.ids = np.zeros(0, np.int64)          # sorted ascending
         self.factors = np.zeros((0, cfg.k), np.float32)
         self._index: DeviceIndex | None = None
@@ -102,10 +105,14 @@ class DeltaSegment:
         padded = np.zeros((cap, self.cfg.k), np.float32)
         padded[: len(self)] = self.factors
         self._factors_dev = jnp.asarray(padded)
+        # quantization is local: only the delta's own rows are re-quantized
+        # on mutation — base-segment slabs are never touched from here
         self._meta = build_retrieval_meta(
             tau, mask, self.cfg.p, n_rows=cap,
             spill_rows=np.asarray(self._index.spill),
-            bn=min(256, cap))
+            bn=min(256, cap),
+            factors=self.factors if self.quantize == "int8" else None,
+            quantize=self.quantize)
         self._alive = jnp.asarray(np.arange(cap) < len(self))
 
     # ---------------------------------------------------------- query
@@ -128,7 +135,8 @@ class DeltaSegment:
         res = gam_retrieve(users, self._factors_dev, q_tau, q_mask,
                            self._meta, kk,
                            min_overlap=0 if exact else mo,
-                           alive=self._alive)
+                           alive=self._alive,
+                           rerank_factor=self.rerank_factor)
         n_cand = np.asarray(res.blk_counts, np.int64).sum(axis=1)
         # empty (NEG-scored) slots carry row -1; clip before the id gather
         # (the caller replaces their ids via the NEG-score filter anyway)

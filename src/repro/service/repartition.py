@@ -28,6 +28,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.kernels.gam_retrieve import ROW_CAPACITY, RowCapacityError
+
 __all__ = ["MapCache", "Partition", "Repartitioner"]
 
 
@@ -70,6 +72,13 @@ class Partition:
             if cap < max(ln, bn) or cap % bn:
                 raise ValueError(f"shard {s}: cap={cap} must be a multiple "
                                  f"of bn={bn} covering length={ln}")
+        # shard offsets are cap prefix sums, so the last flat row is
+        # sum(caps) - 1; at 2^30 structural rows global ids would collide
+        # with the kernel's _NO_ROW sentinel — fail the plan loudly here,
+        # before any slab is allocated or assembled.
+        total = sum(self.caps)
+        if total > ROW_CAPACITY:
+            raise RowCapacityError("partition (sum of shard caps)", total)
 
     # ------------------------------------------------------------- derived
 

@@ -45,7 +45,8 @@ from repro.core.inverted_index import build_segment, candidate_mask_from_table
 from repro.core.mapping import GamConfig, sparse_map
 from repro.core.retrieval import masked_topk
 from repro.kernels.gam_retrieve import (RetrievalMeta, expand_tile_skips,
-                                        export_topk, pack_patterns)
+                                        export_topk, pack_patterns,
+                                        quantize_meta)
 from repro.kernels.gam_score import NEG
 from repro.kernels.ops import gam_retrieve
 from repro.obs.tracing import NOOP_TRACER
@@ -131,8 +132,11 @@ class ShardedGamIndex:
                  tables: jax.Array, counts: jax.Array, spills: jax.Array,
                  factors: jax.Array, alive: np.ndarray,
                  partition: Partition, min_overlap: int,
-                 bucket: int, mesh=None, metas=None):
+                 bucket: int, mesh=None, metas=None, *,
+                 quantize: str = "none", rerank_factor: int = 4):
         self.cfg = cfg
+        self.quantize = quantize
+        self.rerank_factor = int(rerank_factor)
         self.item_ids = item_ids          # (N,) int64 sorted catalog ids
         self.tables = tables              # (S, p, bucket) int32
         self.counts = counts              # (S, p) int32
@@ -156,6 +160,13 @@ class ShardedGamIndex:
                 lo, hi = partition.group_rows(g)
                 self.factors_g.append(factors[lo:hi])
                 self.alive_g.append(jnp.asarray(self._alive_host[lo:hi]))
+        # int8 slabs: quantize each group's factor slab against its meta's
+        # block width (skipping metas restored with slabs already attached);
+        # the f32 slabs stay resident as the exact re-rank store
+        if quantize == "int8":
+            self.metas = [m if m.quantize == "int8"
+                          else quantize_meta(m, np.asarray(self.factors_g[g]))
+                          for g, m in enumerate(self.metas)]
         # flat row -> catalog id (-1 on pad rows), and id -> flat row
         self._padded_ids = np.full(partition.n_rows, -1, np.int64)
         self._row_of: dict[int, int] = {}
@@ -187,7 +198,8 @@ class ShardedGamIndex:
               item_ids: np.ndarray | None = None, n_shards: int = 1,
               min_overlap: int = 1, bucket: int = 256, mesh=None,
               partition: Partition | None = None,
-              premapped=None) -> "ShardedGamIndex":
+              premapped=None, quantize: str = "none",
+              rerank_factor: int = 4) -> "ShardedGamIndex":
         """Eager build: the same staged units the background compaction
         planner drives incrementally, run back to back.  ``premapped``:
         optional (tau, mask) aligned with the CALLER's row order, when the
@@ -226,12 +238,14 @@ class ShardedGamIndex:
         return ShardedGamIndex.assemble(
             cfg, item_ids, factors, partition,
             [t for t, _, _ in segs], [c for _, c, _ in segs], spill_list,
-            metas, min_overlap=min_overlap, bucket=bucket, mesh=mesh)
+            metas, min_overlap=min_overlap, bucket=bucket, mesh=mesh,
+            quantize=quantize, rerank_factor=rerank_factor)
 
     @staticmethod
     def assemble(cfg: GamConfig, item_ids: np.ndarray, factors: np.ndarray,
                  partition: Partition, tables, counts, spill_list, metas, *,
-                 min_overlap: int, bucket: int, mesh=None
+                 min_overlap: int, bucket: int, mesh=None,
+                 quantize: str = "none", rerank_factor: int = 4
                  ) -> "ShardedGamIndex":
         """Final stage: stack the per-shard segments, lay the factor slabs
         into the padded flat matrix, upload, and construct the index."""
@@ -277,7 +291,8 @@ class ShardedGamIndex:
             spills_j, factors_j = arrs["spills"], arrs["factors"]
         return ShardedGamIndex(cfg, item_ids, tables_j, counts_j, spills_j,
                                factors_j, alive, partition, min_overlap,
-                               bucket, mesh, metas)
+                               bucket, mesh, metas, quantize=quantize,
+                               rerank_factor=rerank_factor)
 
     # ------------------------------------------------------------- state
 
@@ -414,7 +429,8 @@ class ShardedGamIndex:
                              n_rows=meta.n_rows):
                 results.append(gam_retrieve(
                     users, self.factors_g[g], q_tau, q_mask, meta, kappa,
-                    min_overlap=mo, alive=self.alive_g[g]))
+                    min_overlap=mo, alive=self.alive_g[g],
+                    rerank_factor=self.rerank_factor))
         skips = (np.concatenate([expand_tile_skips(r.skipped, q)
                                  for r in results], axis=1)
                  if collect_tile_skips and results else None)

@@ -53,6 +53,32 @@ def test_histogram_underflow_overflow_and_mean():
     assert h.quantile(1.0) == 700.0
 
 
+def test_histogram_bucket_edges_land_in_range():
+    """Exact bucket edges: ``[lo, hi]`` is in-range by contract.
+
+    Regression: ``searchsorted(side="left")`` puts ``v == lo`` at index 0,
+    so exact-lo recordings silently fell into the underflow slot (and out
+    of the quantile error bound) until record_many lifted them into the
+    first bucket."""
+    h = LogHistogram(lo=1e-3, hi=1.0, bins=16)
+    h.record_many(h.edges)                  # every edge, lo and hi included
+    assert h.counts[0] == 0                 # lo is NOT underflow
+    assert h.counts[-1] == 0                # hi is NOT overflow
+    # edges are upper-inclusive: edges[i] -> bucket i, plus lo -> bucket 1
+    expected = np.ones(h.bins, np.int64)
+    expected[0] = 2
+    np.testing.assert_array_equal(h.counts[1:-1], expected)
+    # one ulp outside the range still lands in the out-of-range slots
+    h2 = LogHistogram(lo=1e-3, hi=1.0, bins=16)
+    h2.record_many([np.nextafter(1e-3, 0.0), np.nextafter(1.0, 2.0)])
+    assert h2.counts[0] == 1 and h2.counts[-1] == 1
+    assert h2.counts[1:-1].sum() == 0
+    # single-shot record() goes through the same path
+    h3 = LogHistogram(lo=1e-3, hi=1.0, bins=16)
+    h3.record(1e-3)
+    assert h3.counts[0] == 0 and h3.counts[1] == 1
+
+
 def test_histogram_empty_and_single():
     h = LogHistogram.fraction()
     assert h.n == 0 and h.mean is None and h.quantile(0.5) is None

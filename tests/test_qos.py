@@ -122,6 +122,60 @@ def test_fault_fates_are_seed_deterministic_and_routing_independent():
 # ------------------------------------------------------------- breaker unit
 
 
+def test_duration_clocks_are_monotonic_and_survive_clock_steps():
+    """Regression for the wall-vs-monotonic audit: every duration clock in
+    the serving stack defaults to ``time.monotonic`` (a wall clock stepping
+    under NTP correction must never fire deadlines, probes or staleness
+    pushes spuriously), and a backward step of an injected clock — what a
+    wall clock would have done — leaves all that machinery quiescent."""
+    import time
+    import types
+
+    from repro.online.push import PushPolicy
+
+    assert HealthTracker(2).clock is time.monotonic
+    assert Microbatcher(_null_query_fn, dim=4).clock is time.monotonic
+    assert PushPolicy(types.SimpleNamespace()).clock is time.monotonic
+    ret = open_retriever(_spec(), _factors(20, 16, 0))
+    assert ret.clock is time.monotonic
+    assert PushPolicy(ret).clock is time.monotonic   # inherited from owner
+
+    # microbatcher: a backward step must not age the queue into a deadline
+    # flush; only genuinely elapsed time on the same clock does
+    t, clock = _manual_clock()
+    mb = Microbatcher(_null_query_fn, dim=4, batch_size=8, clock=clock,
+                      max_delay_s=0.5)
+    mb.submit(np.zeros(4))
+    t[0] = -3600.0
+    assert not mb.poll() and mb.pending == 1
+    t[0] = 0.6
+    assert mb.poll() and mb.pending == 0
+
+    # breaker: a backward step must not count down the probe backoff
+    t[0] = 0.0
+    ht = HealthTracker(2, failures=1, probe_s=1.0, clock=clock)
+    ht.record_failure(0)
+    t[0] = -3600.0
+    assert ht.due_probes() == []
+    t[0] = 1.5
+    assert ht.due_probes() == [0]
+
+    # push policy: a backward step must not make a fresh candidate "stale"
+    t[0] = 0.0
+    pushed = []
+    stub = types.SimpleNamespace(upsert=lambda i, f: pushed.append(len(i)))
+    pol = PushPolicy(stub, min_cos=0.5, staleness_s=60.0, clock=clock)
+    f0 = np.ones(16, np.float32)
+    pol.seed([7], f0[None])
+    pol.offer([7], f0[None])            # cos == 1: only staleness can push
+    t[0] = -3600.0
+    ids, _ = pol.flush()
+    assert ids.size == 0 and pol.pending_ids.tolist() == [7]
+    t[0] = 61.0
+    ids, _ = pol.flush()
+    assert ids.tolist() == [7] and pushed == [1]
+
+
 def test_breaker_opens_probes_and_closes_deterministically():
     t, clock = _manual_clock()
     opened, closed = [], []
