@@ -8,7 +8,11 @@ Two kinds of checks:
   the synchronous stop-the-world rebuild, the QoS overload scenario's
   "never silently wrong" contract — every outcome typed, zero wrong
   answers under fault injection, priority-0 p99 better with QoS than
-  without — and the online-drift scenario's streaming contract: pushed
+  without — the traffic-realism scenario's cache contract: every cached
+  answer bit-identical to the uncached oracle across the full mutation
+  stream (exact invalidation), nonzero hit rate under Zipf traffic, and
+  cache-on p99 strictly below cache-off — and the online-drift
+  scenario's streaming contract: pushed
   state bit-identical to a from-scratch rebuild, trainer-on recall at
   least the frozen-factor baseline, and the angular push gate actually
   suppressing redundant upserts.
@@ -143,6 +147,46 @@ def check_service(current: dict, baseline: dict, tol: float) -> Gate:
             "priority-0 p99 with QoS beats the no-QoS run",
             f"off/on ratio {improvement}",
         )
+    # traffic-realism invariants: the hot-query result cache must never
+    # serve a stale answer (exact generation-tag invalidation => every
+    # cached answer bit-identical to the uncached oracle across the full
+    # upsert/delete/compact mutation stream), must actually hit on the
+    # Zipf head, and must buy the p99 it exists for — a hit skips the
+    # device pass, so cache-on p99 is strictly below cache-off
+    traffic = current.get("traffic_realism")
+    gate.check(bool(traffic), "traffic realism scenario recorded")
+    if traffic:
+        gate.check(
+            traffic.get("wrong") == 0,
+            "traffic realism: zero silently wrong cached answers",
+            f"wrong={traffic.get('wrong')}/{traffic.get('n_requests')}",
+        )
+        on = traffic.get("cache_on", {})
+        gate.check(
+            (on.get("hit_rate") or 0) > 0,
+            "traffic realism: cache hit rate nonzero under Zipf traffic",
+            f"hit_rate={on.get('hit_rate')}",
+        )
+        gate.check(
+            on.get("invalidations", 0) >= 1,
+            "traffic realism: mutation stream exercised cache invalidation",
+            f"invalidations={on.get('invalidations')}",
+        )
+        on_p99 = on.get("p99_ms")
+        off_p99 = traffic.get("cache_off", {}).get("p99_ms")
+        gate.check(
+            on_p99 is not None and off_p99 is not None and on_p99 < off_p99,
+            "traffic realism: cache-on p99 strictly beats cache-off",
+            f"on {on_p99} vs off {off_p99}",
+        )
+        b_traffic = baseline.get("traffic_realism")
+        if b_traffic:
+            gate.ratio(
+                "traffic realism cache-on p99",
+                on_p99,
+                b_traffic.get("cache_on", {}).get("p99_ms"),
+                tol,
+            )
     # online-drift invariants: the streaming trainer + geometry-aware push
     # policy must (a) never return a silently-wrong answer (pushed-state
     # queries bit-identical to a from-scratch rebuild at every parity

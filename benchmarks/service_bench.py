@@ -27,6 +27,15 @@ the sync rebuild shows up as the p99 cliff it really is; the acceptance
 number is p99-after-trigger, background strictly below sync.  A follow-up
 skew-aware ``repartition()`` records the planned per-shard layout.
 
+The traffic-realism scenario replays one seeded production-shaped stream —
+Zipf(1.1) hot-query identities, Zipf item-popularity upserts, a delete
+burst and a mid-stream compaction under diurnal inhomogeneous-Poisson
+arrivals — over a ``--traffic-items`` (default 100k) compressed catalog,
+once with the hot-query result cache off (its answers become the uncached
+oracle) and once with it on.  The gate asserts zero silently-wrong cached
+answers across the full mutation stream, a nonzero hit rate, and cache-on
+p99 strictly below cache-off.
+
 The QoS overload scenario replays one fixed burst arrival process (16
 requests/round, mixed priority classes, sustained past serving capacity)
 through the service's own microbatcher twice — once under a ``QosPolicy``
@@ -269,6 +278,136 @@ def run_compaction_scenario(args) -> dict:
           f"async={out['async']['p99_ms']:.2f}ms "
           f"(x{out['p99_speedup']:.1f}); repartition bns="
           f"{out['repartition']['bns']}")
+    return out
+
+
+# ------------------------------------------------------- traffic realism
+
+
+def run_traffic_realism_scenario(args) -> dict:
+    """Production-shaped traffic at catalog scale: Zipf(1.1) hot queries +
+    diurnal arrivals over a ``--traffic-items`` compressed catalog, cache
+    on vs off.
+
+    One seeded :class:`~repro.service.loadgen.LoadGenerator` stream —
+    Zipf-skewed reusable query identities, Zipf item-popularity upserts, a
+    delete burst and a mid-stream ``compact()`` — replays twice through a
+    single-server queue (latency from intended ARRIVAL, so backlog at the
+    diurnal peak counts).  The first run has the result cache off and its
+    answers are kept as the uncached oracle; the second enables
+    ``cache_capacity`` and compares every answer bit-for-bit.  Three
+    acceptance numbers ride to the regression gate: ``wrong == 0`` (exact
+    invalidation means a cache hit is never stale), hit rate > 0 (the Zipf
+    head actually repeats), and cache-on p99 strictly below cache-off (a
+    hit costs no device pass, so it drains the peak-hour backlog).
+
+    The catalog uses the compressed posting + int8 slab representation
+    (``compress_postings=True, quantize="int8"``) so the default 100k-item
+    run fits CI; ``--traffic-items 1000000`` reproduces the 1M-item
+    numbers in ``docs/load_testing.md``.
+    """
+    from repro.service.loadgen import LoadGenerator, LoadProfile
+
+    n_items, dim = args.traffic_items, args.dim
+    rng = np.random.default_rng(19)
+    items = rng.normal(size=(n_items, dim)).astype(np.float32)
+    items /= np.linalg.norm(items, axis=1, keepdims=True)
+    ids = np.arange(n_items, dtype=np.int64)
+    cfg = GamConfig(k=dim, scheme="parse_tree", threshold=args.threshold)
+
+    def spec(cache_rows: int) -> RetrieverSpec:
+        return RetrieverSpec(cfg=cfg, backend="sharded",
+                             n_shards=max(args.shards, 2),
+                             min_overlap=args.min_overlap, kappa=args.kappa,
+                             compress_postings=True, quantize="int8",
+                             rerank_factor=4, cache_capacity=cache_rows)
+
+    # size the arrival process off the measured steady-state query cost:
+    # mean rate just under capacity, 4x diurnal peak well over it — the
+    # backlog the cache is supposed to absorb
+    probe = open_retriever(spec(0), items=items, ids=ids)
+    warm = rng.normal(size=(1, dim)).astype(np.float32)
+    probe.query(warm)
+    t0 = time.perf_counter()
+    probe.query(rng.normal(size=(1, dim)).astype(np.float32))
+    t_query = max(time.perf_counter() - t0, 1e-4)
+    del probe
+
+    n_req = max(args.requests, 64)
+    qps = 0.8 / t_query
+    profile = LoadProfile(zipf_q=1.1, zipf_items=1.1, n_queries=48,
+                          curve="diurnal", qps=qps, peak_ratio=4.0,
+                          period_s=n_req / (2.0 * qps), seed=23)
+    upsert_every = 12
+    delete_at, compact_at = n_req // 2, (3 * n_req) // 4
+    dead = ids[1:40:8].copy()           # 5 ids, same burst in both runs
+
+    def run(cache_rows: int) -> tuple[object, list, list]:
+        svc = open_retriever(spec(cache_rows), items=items, ids=ids)
+        lg = LoadGenerator(profile, dim, item_ids=ids)
+        _, qvec = lg.sample_queries(n_req)
+        arrivals = lg.arrivals(n_req)
+        svc.query(warm)                 # jit warm-up; not a pool query
+        server_free, lats, answers = 0.0, [], []
+        for i in range(n_req):
+            # the seeded mutation stream rides on the same queue: catalog
+            # churn occupies the server AND (cache on) bumps the generation
+            if i and i % upsert_every == 0:
+                uids, ufac = lg.sample_upserts(2)
+                t0 = time.perf_counter()
+                svc.upsert(uids, ufac)
+                server_free = max(server_free, arrivals[i]) + \
+                    (time.perf_counter() - t0)
+            if i == delete_at:
+                t0 = time.perf_counter()
+                svc.delete(dead)
+                server_free = max(server_free, arrivals[i]) + \
+                    (time.perf_counter() - t0)
+            if i == compact_at:
+                t0 = time.perf_counter()
+                svc.compact()
+                server_free = max(server_free, arrivals[i]) + \
+                    (time.perf_counter() - t0)
+            start = max(arrivals[i], server_free)
+            t0 = time.perf_counter()
+            res = svc.query(qvec[i][None])
+            server_free = start + (time.perf_counter() - t0)
+            lats.append(server_free - arrivals[i])
+            answers.append((res.ids[0].copy(), res.scores[0].copy()))
+        return svc, lats, answers
+
+    _, lats_off, oracle = run(0)
+    svc_on, lats_on, got = run(4096)
+
+    wrong = sum(1 for (a, b) in zip(oracle, got)
+                if not (np.array_equal(a[0], b[0])
+                        and np.array_equal(a[1], b[1])))
+    cs = svc_on.cache.stats()
+    pct = lambda v, q: float(np.percentile(np.asarray(v), q)) * 1e3
+    out = {
+        "n_items": n_items, "n_requests": n_req,
+        "t_query_ms": t_query * 1e3,
+        "profile": {"zipf_q": profile.zipf_q, "zipf_items": profile.zipf_items,
+                    "n_queries": profile.n_queries, "curve": profile.curve,
+                    "qps": profile.qps, "peak_ratio": profile.peak_ratio,
+                    "period_s": profile.period_s, "seed": profile.seed},
+        "mutations": {"upserts": (n_req - 1) // upsert_every,
+                      "deleted_ids": int(dead.size), "compactions": 1},
+        "cache_off": {"p50_ms": pct(lats_off, 50), "p99_ms": pct(lats_off, 99)},
+        "cache_on": {"p50_ms": pct(lats_on, 50), "p99_ms": pct(lats_on, 99),
+                     "hit_rate": cs["hit_rate"], "hits": cs["hits"],
+                     "misses": cs["misses"],
+                     "invalidations": cs["invalidations"],
+                     "evictions": cs["evictions"], "size": cs["size"]},
+        "wrong": wrong,
+    }
+    out["p99_speedup"] = (out["cache_off"]["p99_ms"]
+                          / max(out["cache_on"]["p99_ms"], 1e-9))
+    print(f"traffic realism @{n_items} items: p99 "
+          f"{out['cache_off']['p99_ms']:.1f}ms (cache off) -> "
+          f"{out['cache_on']['p99_ms']:.1f}ms (cache on, "
+          f"hit rate {cs['hit_rate']:.0%}) x{out['p99_speedup']:.1f}; "
+          f"wrong={wrong}/{n_req} invalidations={cs['invalidations']}")
     return out
 
 
@@ -667,6 +806,10 @@ def main(argv=None) -> None:
                     default=[1, 4, 8, 16])
     ap.add_argument("--threshold", type=float, default=0.2)
     ap.add_argument("--min-overlap", type=int, default=2)
+    ap.add_argument("--traffic-items", type=int, default=100_000,
+                    help="catalog size for the traffic_realism scenario "
+                         "(compressed backend; 1000000 reproduces the "
+                         "docs/load_testing.md numbers)")
     ap.add_argument("--multihost-procs", type=int, default=2,
                     help="host processes for the multi-host scenario "
                          "(1 = in-process placement only)")
@@ -710,6 +853,7 @@ def main(argv=None) -> None:
     overhead = run_overhead_scenario(args)
     compaction = run_compaction_scenario(args)
     qos_overload = run_qos_overload_scenario(args)
+    traffic = run_traffic_realism_scenario(args)
     online_drift = run_drift_scenario(args)
     multihost = run_multihost_scenario(args)
 
@@ -725,6 +869,7 @@ def main(argv=None) -> None:
         "overhead": overhead,
         "compaction": compaction,
         "qos_overload": qos_overload,
+        "traffic_realism": traffic,
         "online_drift": online_drift,
         "multihost": multihost,
     }

@@ -93,4 +93,47 @@ want = fresh.query(u[:64], 10, exact=True)
 assert np.array_equal(got.ids, want.ids)
 assert np.array_equal(got.scores, want.scores)
 print("   live index bit-identical to a from-scratch rebuild")
+
+print("5. serving: Zipf/diurnal replay with the hot-query result cache")
+from repro.service.loadgen import (LoadGenerator, LoadProfile,  # noqa: E402
+                                   zipf_weights)
+
+# the trained factors through the production-traffic harness
+# (docs/load_testing.md): Zipf-popular REAL user rows as the repeating
+# query identities, Zipf item-popularity churn from the live trainer,
+# diurnal arrival pacing — cache-on answers must match the uncached
+# path bit-for-bit at every step
+profile = LoadProfile(zipf_q=1.1, zipf_items=1.1, n_queries=64,
+                      curve="diurnal", qps=200.0, peak_ratio=4.0,
+                      period_s=1.0, seed=5)
+n_req = 400
+arrivals = LoadGenerator(profile, MF.k).arrivals(n_req)
+rng = np.random.default_rng(profile.seed)
+pool = rng.choice(u.shape[0], size=profile.n_queries, replace=False)
+q_w = zipf_weights(profile.n_queries, profile.zipf_q)
+i_w = zipf_weights(ids.size, profile.zipf_items)
+
+cached = open_retriever(
+    RetrieverSpec(cfg=spec.cfg, backend="sharded", n_shards=2,
+                  min_overlap=2, cache_capacity=256),
+    items=np.stack([catalog[int(i)] for i in ids]), ids=ids)
+wrong = 0
+for i in range(n_req):
+    if i % 40 == 39:              # hot-item churn rides the query stream
+        hot = int(ids[rng.choice(ids.size, p=i_w)])
+        fnew = trainer.item_factors(np.array([hot]))
+        cached.upsert([hot], fnew)
+        fresh.upsert([hot], fnew)
+    user = u[pool[rng.choice(profile.n_queries, p=q_w)]][None]
+    a = cached.query(user, 10, exact=True)
+    b = fresh.query(user, 10, exact=True)
+    wrong += not (np.array_equal(a.ids, b.ids)
+                  and np.array_equal(a.scores, b.scores))
+cs = cached.cache.stats()
+print(f"   {n_req} requests over {arrivals[-1]:.1f}s of diurnal arrivals "
+      f"(mean {n_req / arrivals[-1]:.0f}/s, peak λ {profile.peak_rate:.0f}/s)"
+      f": hit rate {cs['hit_rate']:.0%}, "
+      f"{cs['invalidations']} invalidations, wrong={wrong}/{n_req}")
+assert wrong == 0                 # a cache hit is never silently stale
+assert cs["hit_rate"] > 0.3 and cs["invalidations"] > 0
 print("OK")

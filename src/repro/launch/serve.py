@@ -157,7 +157,14 @@ def serve_retrieval(args):
     exceeds S.  ``--learn`` interleaves online factor learning: every
     ``--learn-interval`` requests one event round feeds
     ``StreamingMF.partial_fit`` and the re-trained factors go through the
-    angular-drift-gated ``PushPolicy`` into live upserts."""
+    angular-drift-gated ``PushPolicy`` into live upserts.
+
+    ``--load-profile`` swaps the fresh-random request stream for the
+    seeded production-traffic harness (``repro.service.loadgen``):
+    Zipf-popular reusable query identities, Zipf item-popularity upserts
+    and diurnal/bursty arrival pacing.  ``--cache N`` enables the exact
+    hot-query result cache (N rows) — under a skewed profile the hit rate
+    and its latency effect show up in the final metrics line."""
     from repro.core.mapping import GamConfig
     from repro.retriever import RetrieverSpec, open_retriever
     from repro.service.faults import FaultInjected
@@ -181,11 +188,19 @@ def serve_retrieval(args):
         cfg=cfg, backend="sharded", n_shards=args.shards,
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
         batch_size=args.service_batch, max_delay_s=args.max_delay_ms * 1e-3,
+        cache_capacity=args.cache,
+        cache_ttl_s=args.cache_ttl_s if args.cache_ttl_s > 0 else None,
         options=_trace_options(args))
     qos_on = bool(args.queue_cap or args.deadline_ms)
     svc = open_retriever(spec, items=items, qos=_qos_policy(args),
                          faults=_fault_injector(args))
     writer = _open_metrics_writer(args)
+    loadgen = arrivals = None
+    if args.load_profile:
+        from repro.service.loadgen import LoadGenerator, LoadProfile
+        loadgen = LoadGenerator(LoadProfile.parse(args.load_profile),
+                                args.dim, item_ids=np.arange(args.items))
+        arrivals = loadgen.arrivals(args.requests)
 
     # warm the base-path jit cache, then restart the clock: index build and
     # base compile time are excluded from QPS/latency.  Delta-path shapes
@@ -203,7 +218,10 @@ def serve_retrieval(args):
     n_rejected = n_upsert_faults = 0
     try:
         for r in range(args.requests):
-            user = rng.normal(size=args.dim).astype(np.float32)
+            if loadgen is not None:       # Zipf-popular reusable identity
+                user = loadgen.sample_queries(1)[1][0]
+            else:
+                user = rng.normal(size=args.dim).astype(np.float32)
             try:
                 # with QoS on, alternate priority classes so the coalescing
                 # and per-class shed accounting are visible in the demo
@@ -225,12 +243,23 @@ def serve_retrieval(args):
                         n_upsert_faults += 1   # batch stays pending; retried
                     learn_rounds += 1
             elif r % 16 == 15:                 # interleave streamed upserts
-                new_id = args.items + r
                 try:
-                    svc.upsert([new_id], rng.normal(size=(1, args.dim))
-                               .astype(np.float32))
+                    if loadgen is not None:    # Zipf item-popularity churn
+                        up_ids, up_fac = loadgen.sample_upserts(1)
+                        svc.upsert(up_ids, up_fac)
+                    else:
+                        svc.upsert([args.items + r],
+                                   rng.normal(size=(1, args.dim))
+                                   .astype(np.float32))
                 except FaultInjected:
                     n_upsert_faults += 1   # injected delta-apply error
+            # diurnal/bursty pacing: requests whose arrivals share one
+            # max-delay window submit back-to-back (denser batches at the
+            # peaks), the poll lands at the window edge
+            if arrivals is not None and r + 1 < args.requests:
+                win = max(args.max_delay_ms * 1e-3, 1e-6)
+                if int(arrivals[r + 1] / win) == int(arrivals[r] / win):
+                    continue
             svc.batcher.poll()
             # maintenance triggers: mechanism on the retriever, policy here
             if args.auto_compact and len(svc.delta) >= args.auto_compact:
@@ -273,6 +302,14 @@ def serve_retrieval(args):
     print(f"latency p50={snap['latency_p50_ms']:.2f}ms "
           f"p99={snap['latency_p99_ms']:.2f}ms  "
           f"occupancy={snap['occupancy_mean']:.2f}")
+    if args.cache:
+        cs = svc.cache.stats()
+        hr = cs["hit_rate"]
+        print(f"cache: {cs['hits']} hits / {cs['misses']} misses "
+              f"(rate {'n/a' if hr is None else f'{hr:.1%}'})  "
+              f"evictions={cs['evictions']}  "
+              f"invalidations={cs['invalidations']}  "
+              f"size={cs['size']}/{cs['capacity']}")
     balance = snap["shard_balance"]
     print(f"discard={snap['discard_mean']:.1%}  "
           f"shard balance (max/mean candidates)="
@@ -358,7 +395,17 @@ def serve_retrieval_multihost(args):
         cfg=cfg, backend="sharded-multihost", n_shards=args.shards,
         n_hosts=args.hosts, replication=args.replication,
         min_overlap=args.gam_min_overlap, kappa=args.kappa,
-        batch_size=args.service_batch, options=_trace_options(args))
+        batch_size=args.service_batch,
+        # per-host result caches; TTL stays None under SPMD so every host
+        # makes identical hit/miss decisions (wall-clock expiry diverges)
+        cache_capacity=args.cache,
+        options=_trace_options(args))
+    lg = None
+    if args.load_profile:
+        # seeded, so every SPMD host draws the identical Zipf stream
+        from repro.service.loadgen import LoadGenerator, LoadProfile
+        lg = LoadGenerator(LoadProfile.parse(args.load_profile), args.dim,
+                           item_ids=np.arange(args.items))
     # the injector is seeded, so every SPMD process draws the same fates
     # and the chaos (stalls, breaker trips, reroutes) stays collective
     fi = _fault_injector(args)
@@ -378,14 +425,19 @@ def serve_retrieval_multihost(args):
     n_shed_rounds = n_degraded = n_wrong = n_verified = n_upsert_faults = 0
     try:
         for b in range(n_batches):
-            users = rng.normal(size=(bs, args.dim)).astype(np.float32)
+            users = (lg.sample_queries(bs)[1] if lg is not None else
+                     rng.normal(size=(bs, args.dim)).astype(np.float32))
             if args.fail_host is not None and b == n_batches // 2:
                 svc.mark_down(args.fail_host)
             if b % 4 == 3:                    # interleaved SPMD upserts
                 try:
-                    svc.upsert([args.items + b],
-                               rng.normal(size=(1, args.dim))
-                               .astype(np.float32))
+                    if lg is not None:
+                        up_ids, up_fac = lg.sample_upserts(1)
+                        svc.upsert(up_ids, up_fac)
+                    else:
+                        svc.upsert([args.items + b],
+                                   rng.normal(size=(1, args.dim))
+                                   .astype(np.float32))
                 except FaultInjected:
                     # raised before any mutation, and identically on every
                     # host (same seeded draw) — the delta stays consistent
@@ -440,6 +492,12 @@ def serve_retrieval_multihost(args):
         print(f"served {n_batches * bs} requests  "
               f"p50={np.percentile(lat_ms, 50):.2f}ms "
               f"p99={np.percentile(lat_ms, 99):.2f}ms")
+        if args.cache:
+            cs = svc.cache.stats()
+            hr = cs["hit_rate"]
+            print(f"cache (per host): {cs['hits']} hits / "
+                  f"{cs['misses']} misses "
+                  f"(rate {'n/a' if hr is None else f'{hr:.1%}'})")
         print(f"routing={hosts['routing']}  down={hosts['down']}  "
               f"failovers={hosts['n_failovers']}  "
               f"host load={hosts['host_load']}")
@@ -482,7 +540,7 @@ def serve_retrieval_multihost(args):
         assert (np.array_equal(a.ids, b.ids)
                 and np.array_equal(a.scores, b.scores))
         if me == 0:
-            print(f"snapshot v3 -> {args.snapshot} (probe bit-identical)")
+            print(f"snapshot -> {args.snapshot} (probe bit-identical)")
 
 
 def main():
@@ -509,6 +567,21 @@ def main():
     ap.add_argument("--service-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--gam-item-threshold", type=float, default=0.2)
+    ap.add_argument("--cache", type=int, default=0, metavar="N",
+                    help="hot-query result cache capacity in rows (0 = "
+                         "off): exact per-row top-kappa memos, invalidated "
+                         "on every catalog mutation via generation tags — "
+                         "a hit skips the kernel AND the request queue")
+    ap.add_argument("--cache-ttl-s", type=float, default=0.0, metavar="S",
+                    help="optional result-cache entry age-out in seconds "
+                         "(0 = no TTL; ignored under --hosts > 1, where "
+                         "wall-clock expiry would desync the SPMD hosts)")
+    ap.add_argument("--load-profile", metavar="SPEC",
+                    help="production-traffic harness, e.g. 'zipf=1.1,"
+                         "curve=diurnal,qps=500,peak=4,period=30': Zipf-"
+                         "popular reusable query identities, Zipf item-"
+                         "popularity upserts, diurnal/bursty arrival "
+                         "pacing (see docs/load_testing.md)")
     ap.add_argument("--hosts", type=int, default=1, metavar="N",
                     help="serve from N host processes (sharded-multihost "
                          "backend over jax.distributed; spawns N local "

@@ -55,6 +55,8 @@ class RetrieverSpec:
     compress_postings: bool = False   # delta+group-varint posting storage
     quantize: str = "none"        # item-factor slab dtype: "none" | "int8"
     rerank_factor: int = 4        # exact-rerank pool = kappa * this (int8)
+    cache_capacity: int = 0       # hot-query result cache rows (0 = off)
+    cache_ttl_s: float | None = None  # optional cache entry age-out
     options: tuple[tuple[str, Any], ...] = ()   # backend-specific extras
 
     def opt(self, name: str, default: Any = None) -> Any:

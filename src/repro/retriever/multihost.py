@@ -337,6 +337,21 @@ class MultiHostIndex:
 
 
 class MultiHostShardedRetriever(ShardedRetriever):
+    """Multi-host placement over the shared ``ShardedRetriever`` machinery.
+
+    The hot-query result cache (``spec.cache_capacity``) is inherited
+    PER HOST PROCESS: each process's retriever owns its own
+    :class:`~repro.service.result_cache.ResultCache` in front of the
+    collective, so a host-local hit skips the phi-map, both kernel
+    launches AND the cross-host merge.  Under SPMD every host sees the
+    same query and mutation stream, so the per-host caches make identical
+    hit/miss decisions in lockstep — provided ``cache_ttl_s`` is None
+    (the default): a wall-clock TTL could expire on one host and not
+    another, desyncing the collective (see docs/load_testing.md).
+    ``mark_down``/``mark_up`` never bump the cache — failover is exact by
+    construction, so cached answers stay bit-identical across reroutes.
+    """
+
     def __init__(self, spec: RetrieverSpec, **kw):
         if spec.n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {spec.n_hosts}")

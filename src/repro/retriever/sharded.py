@@ -64,6 +64,7 @@ from repro.service.metrics import ServiceMetrics
 from repro.service.microbatch import Microbatcher
 from repro.service.qos import QosPolicy
 from repro.service.repartition import MapCache, Partition, Repartitioner
+from repro.service.result_cache import ResultCache
 from repro.service.sharded_index import ShardedGamIndex
 
 __all__ = ["ShardedRetriever"]
@@ -114,10 +115,20 @@ class ShardedRetriever(Retriever):
             spec.cfg, spec.min_overlap,
             spec.bucket if spec.delta_bucket is None else spec.delta_bucket,
             quantize=spec.quantize, rerank_factor=spec.rerank_factor)
+        # hot-query result cache (spec.cache_capacity > 0): exact memo of
+        # per-row top-kappa, invalidated by generation tag on EVERY catalog
+        # mutation — see repro.service.result_cache.  Per-instance, so the
+        # multi-host backend gets one cache per host process for free.
+        self.cache: ResultCache | None = (
+            ResultCache(int(spec.cache_capacity), spec.cache_ttl_s,
+                        clock=clock, metrics=self.metrics)
+            if int(spec.cache_capacity) > 0 else None)
         self.batcher = Microbatcher(
             self._batch_query_fn, spec.cfg.k, batch_size=spec.batch_size,
             max_delay_s=spec.max_delay_s, clock=clock, metrics=self.metrics,
-            tracer=self.tracer, policy=self.qos, events=self.events)
+            tracer=self.tracer, policy=self.qos, events=self.events,
+            cache_probe=(self.cache_probe if self.cache is not None
+                         else None))
         self._last_query_stats: dict = {}
 
     def _build_base(self, factors: np.ndarray, ids: np.ndarray,
@@ -157,6 +168,7 @@ class ShardedRetriever(Retriever):
         self._rebalanced = False
         self.catalog = {int(i): f for i, f in zip(ids, items)}
         self._map_cache.clear()
+        self._bump_cache()
         self.base = self._build_base(items, ids)
         self.delta.clear()
         return self
@@ -173,6 +185,7 @@ class ShardedRetriever(Retriever):
         for i, f in zip(ids, factors):
             self.catalog[int(i)] = f
         self._map_cache.invalidate(ids)     # changed rows re-map lazily
+        self._bump_cache()
         self.base.kill(ids)                 # superseded main rows, if any
         self.delta.upsert(ids, factors)
         if self._planner is not None:       # replayed after the swap
@@ -185,11 +198,22 @@ class ShardedRetriever(Retriever):
         for i in ids:
             self.catalog.pop(int(i), None)
         self._map_cache.invalidate(ids)
+        self._bump_cache()
         self.base.kill(ids)
         self.delta.delete(ids)
         if self._planner is not None:
             self._planner.record_delete(ids)
         self.metrics.record_delete(ids.size)
+
+    def _bump_cache(self) -> None:
+        """Invalidate every cached answer: called on EVERY path that can
+        change what a query returns — build, upsert, delete, the compaction
+        swap (sync and async), repartition and restore.  Factor pushes land
+        through :meth:`upsert`, so they are covered too.  The bump is a
+        version increment, not a scan: stale entries die lazily at lookup
+        (generation mismatch ⇒ miss)."""
+        if self.cache is not None:
+            self.cache.bump()
 
     def _maybe_inject_delta_fault(self, op: str) -> None:
         if self.faults is not None and self.faults.roll_delta_error():
@@ -230,6 +254,7 @@ class ShardedRetriever(Retriever):
                                      premapped=premapped)
         self.delta.clear()
         self.generation += 1
+        self._bump_cache()
         self.metrics.record_compact()
         self.events.emit("generation_swap", generation=self.generation,
                          sync=True)
@@ -320,6 +345,7 @@ class ShardedRetriever(Retriever):
         else:
             self.delta.clear()
         self.generation = planner.target_generation
+        self._bump_cache()
         self.metrics.record_compact(async_=True)
         self.events.emit("generation_swap", generation=self.generation,
                          replayed=len(journal))
@@ -356,6 +382,7 @@ class ShardedRetriever(Retriever):
                                          premapped=(tau, mask))
             self.delta.clear()
             self.generation += 1
+            self._bump_cache()
             self.metrics.record_compact()
             self.events.emit("generation_swap", generation=self.generation,
                              sync=True)
@@ -451,6 +478,18 @@ class ShardedRetriever(Retriever):
         users = np.asarray(users, np.float32)
         q = users.shape[0]
         t_start = self.clock()
+        # hot-query result cache: looked up BEFORE the degrade ladder — a
+        # hit is the zero-cost rung, returning the FULL exact-generation
+        # answer no matter how tight deadline_s is.  Stale entries cannot
+        # hit (every mutation bumped the cache version), so this is
+        # bit-identical to computing below.
+        cache_keys = None
+        if self.cache is not None and q > 0:
+            cache_keys = [ResultCache.key(users[i], kappa, exact)
+                          for i in range(q)]
+            rows = self.cache.get_batch(cache_keys)
+            if rows is not None:
+                return self._answer_from_cache(rows, q, kappa, explain)
         # degrade-ladder selection: pure function of budget / cost estimate
         rung = (self.qos.choose_rung(deadline_s, self._cost_est)
                 if deadline_s is not None else 0)
@@ -544,6 +583,13 @@ class ShardedRetriever(Retriever):
             el = self.clock() - t_start
             self._cost_est = (el if self._cost_est is None
                               else 0.7 * self._cost_est + 0.3 * el)
+        if cache_keys is not None and not degraded:
+            # memoize the full-service answer per row, tagged with the
+            # current cache version (degraded answers are never cached —
+            # they are not what the uncached full path would return)
+            for i, key in enumerate(cache_keys):
+                self.cache.put(key, ids_out[i], sc_out[i],
+                               int(n_cand[i]), float(discard[i]))
         return RetrievalResult(
             ids=ids_out, scores=sc_out,
             n_scored=np.asarray(n_cand, np.int64),
@@ -552,6 +598,52 @@ class ShardedRetriever(Retriever):
             degraded=degraded,
             degrade_rung=applied[-1] if degraded else None,
         )
+
+    def _answer_from_cache(self, rows, q: int, kappa: int,
+                           explain: bool) -> RetrievalResult:
+        """Assemble a :class:`RetrievalResult` from cached per-row memos —
+        bit-identical to the compute path because each memo stores exactly
+        what that path returned, under the current cache version.  Runs
+        under a ``cache`` trace span; with ``explain=True`` the provenance
+        of every winning slot is ``"cache"``."""
+        with self.tracer.trace_or_span("query", q=q, kappa=kappa):
+            with self.tracer.span("cache", hits=q,
+                                  version=self.cache.version):
+                ids_out = np.stack([r.ids for r in rows])
+                sc_out = np.stack([r.scores for r in rows])
+                n_cand = np.array([r.n_scored for r in rows], np.int64)
+                discard = np.array([r.discarded_frac for r in rows],
+                                   np.float64)
+        # no kernel ran: only the per-request discard stat is meaningful
+        self._last_query_stats = {"discard": discard}
+        exp = None
+        if explain:
+            src = np.where(ids_out >= 0, "cache", "").astype(object)
+            exp = {"backend": self.spec.backend,
+                   "n_candidates": n_cand.tolist(),
+                   "source": src.tolist(),
+                   "cached": True,
+                   "cache_version": self.cache.version,
+                   "degraded": False, "degrade_rung": None}
+        return RetrievalResult(
+            ids=ids_out, scores=sc_out, n_scored=n_cand,
+            discarded_frac=discard, explain=exp)
+
+    def cache_probe(self, user):
+        """Pre-queue probe for the microbatcher's zero-cost admission rung:
+        a live cached answer for this single row (default kappa, inexact
+        path — the microbatcher's only shape) or None.  A miss is NOT
+        counted (the row will be counted when its batch reaches
+        :meth:`query`); returns copies so callers cannot corrupt the
+        memo."""
+        if self.cache is None:
+            return None
+        key = ResultCache.key(np.asarray(user, np.float32),
+                              self.spec.kappa, False)
+        row = self.cache.get(key, count_miss=False)
+        if row is None:
+            return None
+        return row.ids.copy(), row.scores.copy()
 
     def _base_topk(self, users_j, q_tau, q_mask, kappa: int, exact: bool,
                    explain: bool = False, min_overlap: int | None = None
@@ -609,9 +701,10 @@ class ShardedRetriever(Retriever):
         if not st:
             return
         sl = slice(None) if n_real is None else slice(n_real)
+        sc = st.get("shard_candidates")      # absent for cache-hit answers
         bc = st.get("block_candidates")
         self.metrics.record_query_stats(
-            st["discard"][sl], st["shard_candidates"][sl],
+            st["discard"][sl], sc[sl] if sc is not None else None,
             bc[sl] if bc is not None else None)
 
     def _batch_query_fn(self, users: np.ndarray, n_real: int,
@@ -647,9 +740,11 @@ class ShardedRetriever(Retriever):
             posting_load=self.base.posting_load().tolist(),
             metrics=self.metrics.snapshot(),
         )
-        if self._last_query_stats:
+        if "tiles_skipped_frac" in self._last_query_stats:
             out["tiles_skipped_frac"] = (
                 self._last_query_stats["tiles_skipped_frac"])
+        if self.cache is not None:
+            out["result_cache"] = self.cache.stats()
         return out
 
     def snapshot(self, path: str) -> None:
@@ -777,6 +872,7 @@ class ShardedRetriever(Retriever):
         self.delta.replace(np.asarray(arrays["delta_ids"], np.int64),
                            np.asarray(arrays["delta_factors"], np.float32))
         self.generation = int(state.get("generation", 0))
+        self._bump_cache()
         self._planner = None
         # a restored skew-aware layout keeps re-planning on later compactions
         self._rebalanced = part != Partition.uniform(part.n, part.n_shards)

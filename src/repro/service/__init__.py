@@ -86,12 +86,28 @@ Components
 ``MapCache`` (``repartition.py``)
     Incremental per-item phi-map cache: ``repartition()`` re-maps only
     items whose factors changed since the last plan.
+
+``ResultCache`` (``result_cache.py``)
+    Exact hot-query result cache: per-row top-kappa memos keyed on the
+    query's raw bytes and generation-tagged so every catalog mutation
+    invalidates (stale hit impossible by construction); a hit is the QoS
+    ladder's zero-cost rung.  Enabled by
+    ``RetrieverSpec(cache_capacity=...)``.
+
+``LoadGenerator`` / ``LoadProfile`` (``loadgen.py``)
+    Production-traffic harness: Zipf-skewed reusable query identities,
+    Zipf item-popularity upsert streams and diurnal/bursty inhomogeneous
+    Poisson arrivals — all seeded and replayable
+    (``launch/serve.py --load-profile``, the ``traffic_realism``
+    benchmark scenario).  See ``docs/load_testing.md``.
 """
 from repro.service.collective import HostPlacement, NoLiveReplica
 from repro.service.compaction import CompactionPlanner
 from repro.service.delta import DeltaSegment
 from repro.service.faults import FaultInjected, FaultInjector, FaultSpec
+from repro.service.loadgen import LoadGenerator, LoadProfile, zipf_weights
 from repro.service.metrics import ServiceMetrics
+from repro.service.result_cache import CachedResult, ResultCache
 from repro.service.microbatch import Microbatcher, QueryResult
 from repro.service.qos import (DEGRADE_RUNGS, HealthTracker, QosPolicy,
                                RequestShed, ResultEvicted)
@@ -100,6 +116,7 @@ from repro.service.service import GamService, ServiceConfig
 from repro.service.sharded_index import ShardedGamIndex, ShardTopK
 
 __all__ = [
+    "CachedResult",
     "CompactionPlanner",
     "DEGRADE_RUNGS",
     "DeltaSegment",
@@ -109,6 +126,8 @@ __all__ = [
     "GamService",
     "HealthTracker",
     "HostPlacement",
+    "LoadGenerator",
+    "LoadProfile",
     "MapCache",
     "Microbatcher",
     "NoLiveReplica",
@@ -117,9 +136,11 @@ __all__ = [
     "QueryResult",
     "RequestShed",
     "Repartitioner",
+    "ResultCache",
     "ResultEvicted",
     "ServiceConfig",
     "ServiceMetrics",
     "ShardTopK",
     "ShardedGamIndex",
+    "zipf_weights",
 ]

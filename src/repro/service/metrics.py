@@ -64,6 +64,11 @@ class ServiceMetrics:
         self.n_breaker_opens = 0
         self.n_breaker_probes = 0
         self.n_breaker_closes = 0
+        # ------------------------------------------------------ result cache
+        self.n_cache_hits = 0                  # queries answered from cache
+        self.n_cache_misses = 0                # lookups that fell through
+        self.n_cache_evictions = 0             # LRU capacity evictions
+        self.n_cache_invalidations = 0         # generation/TTL-stale drops
         # -------------------------------------------------- online learning
         self.n_pushes = 0                      # factor pushes landed
         self.n_push_suppressed = 0             # angular gate said "not yet"
@@ -209,6 +214,27 @@ class ServiceMetrics:
         elif event == "close":
             self.n_breaker_closes += 1
 
+    def record_cache_event(self, event: str, n: int = 1) -> None:
+        """Result-cache lifecycle: ``hit`` / ``miss`` / ``eviction`` (LRU
+        capacity) / ``invalidation`` (a generation- or TTL-stale entry
+        dropped at lookup).  Mirrored from
+        :class:`~repro.service.result_cache.ResultCache`."""
+        if event == "hit":
+            self.n_cache_hits += int(n)
+        elif event == "miss":
+            self.n_cache_misses += int(n)
+        elif event == "eviction":
+            self.n_cache_evictions += int(n)
+        elif event == "invalidation":
+            self.n_cache_invalidations += int(n)
+
+    def record_cached_request(self, latency_s: float) -> None:
+        """One request answered straight from the result cache (the
+        microbatcher's pre-queue probe): counts toward QPS and the latency
+        distribution but is not a batch — occupancy stays honest."""
+        self.n_requests += 1
+        self.latency_hist.record(float(latency_s))
+
     def record_push(self, n_pushed: int, n_suppressed: int = 0,
                     staleness_s=None) -> None:
         """One PushPolicy flush: ``n_pushed`` factors landed via upsert,
@@ -250,6 +276,8 @@ class ServiceMetrics:
                      "n_degraded_raise_overlap", "n_degraded_base_only",
                      "n_hedges", "n_hedge_wins", "n_breaker_opens",
                      "n_breaker_probes", "n_breaker_closes",
+                     "n_cache_hits", "n_cache_misses", "n_cache_evictions",
+                     "n_cache_invalidations",
                      "n_pushes", "n_push_suppressed", "n_push_flushes"):
             setattr(self, name, getattr(self, name) + getattr(other, name))
         for p, n in other.shed_by_class.items():
@@ -356,6 +384,15 @@ class ServiceMetrics:
             "breaker_opens": self.n_breaker_opens,
             "breaker_probes": self.n_breaker_probes,
             "breaker_closes": self.n_breaker_closes,
+            # result cache: flat scalars -> repro_cache_* gauges; hit_rate
+            # None until the first lookup (exporter skips None)
+            "cache_hits": self.n_cache_hits,
+            "cache_misses": self.n_cache_misses,
+            "cache_evictions": self.n_cache_evictions,
+            "cache_invalidations": self.n_cache_invalidations,
+            "cache_hit_rate": (
+                self.n_cache_hits / (self.n_cache_hits + self.n_cache_misses)
+                if self.n_cache_hits + self.n_cache_misses else None),
             # online-learning publisher (PushPolicy); staleness is the
             # dirty-to-push age distribution of landed factors
             "push_total": self.n_pushes,

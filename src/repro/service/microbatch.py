@@ -100,10 +100,16 @@ class Microbatcher:
                  max_delay_s: float = 2e-3, clock=time.monotonic,
                  metrics: ServiceMetrics | None = None,
                  max_results: int = 65536, tracer=None,
-                 policy: QosPolicy | None = None, events=None):
+                 policy: QosPolicy | None = None, events=None,
+                 cache_probe: Callable | None = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.query_fn = query_fn
+        # optional result-cache probe ``user -> (ids, scores) | None``: a
+        # hit answers at submit time without queueing — the QoS ladder's
+        # zero-cost rung, exempt from admission control because serving it
+        # consumes no queue slot and no device pass
+        self.cache_probe = cache_probe
         self.dim = dim
         self.batch_size = batch_size
         self.max_delay_s = max_delay_s
@@ -129,7 +135,27 @@ class Microbatcher:
         ``priority``: QoS class (0 = most important).  ``deadline_s``:
         per-request total budget from now (defaults to the policy's
         per-class deadline).  Raises :class:`RequestShed` when the class's
-        queue cap rejects the request (admission control)."""
+        queue cap rejects the request (admission control).
+
+        When a ``cache_probe`` is attached and hits, the request completes
+        here — no queue slot, no admission check, no device pass; the
+        result is immediately collectable and its (near-zero) latency is
+        recorded via ``ServiceMetrics.record_cached_request``."""
+        if self.cache_probe is not None:
+            t0 = self.clock()
+            user_row = np.asarray(user, np.float32).reshape(self.dim)
+            hit = self.cache_probe(user_row)
+            if hit is not None:
+                req_id = self._next_id
+                self._next_id += 1
+                el = self.clock() - t0
+                self._results[req_id] = QueryResult(
+                    ids=np.asarray(hit[0]), scores=np.asarray(hit[1]),
+                    latency_s=el, queue_wait_s=0.0, service_s=el)
+                if self.metrics is not None:
+                    self.metrics.record_cached_request(el)
+                self._evict_overflow()
+                return req_id
         cap = self.policy.queue_cap(priority)
         if cap is not None and \
                 sum(p.priority == priority for p in self._queue) >= cap:

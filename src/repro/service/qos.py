@@ -28,7 +28,13 @@ import time
 __all__ = ["DEGRADE_RUNGS", "HealthTracker", "QosPolicy", "RequestShed",
            "ResultEvicted"]
 
-#: rung 0 = full answer; 1..3 = progressively cheaper reduced-work answers
+#: rung 0 = full answer; 1..3 = progressively cheaper reduced-work answers.
+#: Below rung 0 sits an implicit ZERO-COST rung: a hot-query result-cache
+#: hit (``RetrieverSpec.cache_capacity`` > 0) returns the full
+#: current-generation answer before the ladder is even consulted — no
+#: queue slot, no device pass, never degraded — and the microbatcher's
+#: pre-queue probe exempts such requests from admission control (shedding
+#: a request that costs nothing to serve would waste the answer).
 DEGRADE_RUNGS = ("none", "skip_exact", "raise_overlap", "base_only")
 
 

@@ -40,6 +40,35 @@ def test_serve_launcher_gam(monkeypatch, capsys):
     assert "vocab rows scored/step" in out
 
 
+def test_serve_help_pins_the_flag_surface(monkeypatch, capsys):
+    """``--help`` is the serving CLI's public contract: every documented
+    flag group is present (including the traffic-realism trio) and stale
+    references to retired names/formats can't creep back in."""
+    import sys
+
+    import pytest
+
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", ["serve", "--help"])
+    with pytest.raises(SystemExit) as exc:
+        serve.main()
+    assert exc.value.code == 0
+    out = capsys.readouterr().out
+    for flag in ("--service", "--items", "--shards", "--requests",
+                 "--cache N", "--cache-ttl-s S", "--load-profile SPEC",
+                 "--hosts N", "--replication R", "--snapshot PATH",
+                 "--metrics-out PATH", "--trace-out PATH", "--learn",
+                 "--queue-cap N", "--deadline-ms MS", "--inject-faults",
+                 "--verify"):
+        assert flag in out, f"--help lost {flag!r}"
+    # the load harness help must point at its documentation
+    assert "docs/load_testing.md" in out
+    assert "zipf=1.1,curve=diurnal" in out
+    # retired names / formats must not resurface in user-facing text
+    for stale in ("GamService", "snapshot v3", "repro.retriever/v3"):
+        assert stale not in out, f"stale reference {stale!r} in --help"
+
+
 def test_serve_loop_survives_no_live_replica(capsys):
     """The serve loop's guarded query converts an unservable round into a
     typed, counted shed and keeps serving — marking the host back up makes

@@ -1,7 +1,16 @@
 """Property-based lifecycle stress suite: arbitrary interleavings of
 upsert / delete / query / compact / compact-step / repartition / abort /
-snapshot-restore / feed-events / push, every intermediate state checked
-bit-identical against the ``brute`` oracle.
+snapshot-restore / feed-events / push / cached-query, every intermediate
+state checked bit-identical against the ``brute`` oracle.
+
+The sharded backends run with the hot-query result cache enabled
+(``cache_capacity`` in ``_spec``), so every post-op parity check ALSO
+covers the cache path: repeated check queries hit the memo whenever no
+mutation intervened, and a hit that diverged from the oracle would fail
+the very next assertion.  The dedicated ``cached_query`` op pins the
+contract explicitly — a warm repeat is a counted hit bit-identical to the
+oracle, and a mutation in between makes a stale hit impossible by
+construction (generation mismatch ⇒ counted invalidation + miss).
 
 The ``feed_events`` / ``push`` ops drive the online tier through the same
 harness: a ``StreamingMF`` trainer consumes seeded event batches and a
@@ -40,21 +49,25 @@ USERS = unit_factors(6, CFG.k, 991)
 TAGS = ("upsert", "delete", "compact", "compact_async", "step",
         "repartition", "abort", "snapshot_restore",
         "mark_down", "mark_up", "inject_fault", "deadline_query",
-        "feed_events", "push")
+        "feed_events", "push", "cached_query")
 # op mix of the generated programs: mutation-heavy, maintenance-rich,
-# with health churn, chaos and online-trainer pushes riding along
-TAG_P = (0.22, 0.11, 0.04, 0.10, 0.11, 0.04, 0.03, 0.06,
-         0.05, 0.05, 0.04, 0.05, 0.06, 0.04)
+# with health churn, chaos, online-trainer pushes and hot-query cache
+# probes riding along
+TAG_P = (0.17, 0.11, 0.04, 0.10, 0.11, 0.04, 0.03, 0.06,
+         0.05, 0.05, 0.04, 0.05, 0.06, 0.04, 0.05)
 
 
 def _spec(backend):
     kw = dict(min_overlap=2, bucket=512)
     if backend == "sharded":
-        # small slices so a single program crosses many planner phases
-        kw.update(n_shards=2, options=(("compact_slice_rows", 16),))
+        # small slices so a single program crosses many planner phases;
+        # cache on, so EVERY check() also exercises the hot-query memo
+        kw.update(n_shards=2, cache_capacity=32,
+                  options=(("compact_slice_rows", 16),))
     elif backend == "sharded-multihost":
         # replication == n_hosts keeps snapshots legal mid-program
         kw.update(n_shards=2, n_hosts=N_HOSTS, replication=N_HOSTS,
+                  cache_capacity=32,
                   options=(("compact_slice_rows", 16),))
     return RetrieverSpec(cfg=CFG, backend=backend, **kw)
 
@@ -188,6 +201,44 @@ class LifecycleHarness:
             else:
                 if p_ids.size:
                     self.oracle.upsert(p_ids, p_fac)
+        elif tag == "cached_query":
+            cache = getattr(self.r, "cache", None)
+            if cache is not None:
+                # the cache contract, pinned mid-program: a repeated query
+                # HITS, the hit is bit-identical to the brute oracle, and a
+                # mutation in between makes a stale hit impossible by
+                # construction — generation mismatch => counted miss.
+                # Drain any in-flight build first: queries auto-advance it,
+                # and its swap would bump the version mid-sequence.
+                while self.r.maintenance_stats()["compaction"]["active"]:
+                    self.r.compaction_step()
+                rows = USERS[a % len(USERS)][None]
+                first = self.r.query(rows, 8, exact=True)   # warm the memo
+                h0 = cache.n_hits
+                again = self.r.query(rows, 8, exact=True)
+                assert cache.n_hits == h0 + 1, str(op)
+                want = self.oracle.query(rows, 8, exact=True)
+                np.testing.assert_array_equal(again.ids, want.ids,
+                                              err_msg=str(op))
+                np.testing.assert_array_equal(again.ids, first.ids)
+                np.testing.assert_array_equal(again.scores, first.scores)
+                v0 = cache.version
+                up_ids = [b % ID_POOL]
+                up_fac = unit_factors(1, CFG.k, 20_000 + b)
+                try:
+                    self.r.upsert(up_ids, up_fac)
+                except FaultInjected:
+                    pass
+                else:
+                    self.oracle.upsert(up_ids, up_fac)
+                    assert cache.version == v0 + 1, str(op)
+                    m0, i0 = cache.n_misses, cache.n_invalidations
+                    after = self.r.query(rows, 8, exact=True)
+                    assert cache.n_misses == m0 + 1, str(op)
+                    assert cache.n_invalidations == i0 + 1, str(op)
+                    want = self.oracle.query(rows, 8, exact=True)
+                    np.testing.assert_array_equal(after.ids, want.ids,
+                                                  err_msg=str(op))
         elif tag == "snapshot_restore":
             path = os.fspath(self.tmp / f"s{self.n_snapshots}.npz")
             self.n_snapshots += 1

@@ -1,0 +1,495 @@
+"""Production-traffic harness + exact hot-query result cache.
+
+Three layers, matching how the pieces compose in production:
+
+* ``repro.service.loadgen`` in isolation — Zipf weights, the frozen
+  string-parseable :class:`LoadProfile`, rate curves whose mean really is
+  ``qps``, and the seeded :class:`LoadGenerator` (determinism is what lets
+  the benchmark replay one stream against cache-on and cache-off runs).
+* ``repro.service.result_cache`` in isolation — exact byte keying, LRU
+  bound, TTL aging on an injected clock, generation-tag invalidation, the
+  all-or-nothing batch lookup, and the mirror into ``ServiceMetrics``.
+* the wired stack — ``ShardedRetriever`` answering repeats from the memo
+  bit-identically to the brute oracle across mutations, degraded answers
+  never cached, the microbatcher's pre-queue probe, and the per-host
+  lockstep parity of the ``sharded-multihost`` backend.
+
+The adversarial interleavings live in ``test_lifecycle_properties.py``
+(the ``cached_query`` op); this file pins each contract in isolation.
+"""
+import numpy as np
+import pytest
+from conftest import CFG, unit_factors
+
+from repro.retriever import RetrieverSpec, open_retriever
+from repro.service.loadgen import LoadGenerator, LoadProfile, zipf_weights
+from repro.service.metrics import ServiceMetrics
+from repro.service.result_cache import ResultCache
+
+KAPPA = 8
+
+
+def _spec(**kw):
+    base = dict(cfg=CFG, backend="sharded", n_shards=2, min_overlap=2,
+                bucket=512)
+    base.update(kw)
+    return RetrieverSpec(**base)
+
+
+def _brute():
+    return RetrieverSpec(cfg=CFG, backend="brute", min_overlap=2)
+
+
+# ===================================================================== zipf
+
+
+def test_zipf_weights_normalized_and_monotone():
+    w = zipf_weights(100, 1.1)
+    assert w.shape == (100,)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-12)
+    assert (np.diff(w) < 0).all()          # strictly decreasing in rank
+    np.testing.assert_allclose(w[0] / w[1], 2.0 ** 1.1, rtol=1e-12)
+
+
+def test_zipf_weights_s0_is_uniform():
+    np.testing.assert_allclose(zipf_weights(7, 0.0), np.full(7, 1 / 7))
+
+
+def test_zipf_weights_rejects_empty():
+    with pytest.raises(ValueError, match="n >= 1"):
+        zipf_weights(0, 1.1)
+
+
+# ================================================================== profile
+
+
+def test_profile_parse_with_aliases():
+    p = LoadProfile.parse(
+        "zipf=1.3,curve=diurnal,qps=500,peak=4,period=30,queries=64,seed=7")
+    assert p == LoadProfile(zipf_q=1.3, curve="diurnal", qps=500.0,
+                            peak_ratio=4.0, period_s=30.0, n_queries=64,
+                            seed=7)
+    assert isinstance(p.n_queries, int) and isinstance(p.qps, float)
+
+
+def test_profile_parse_empty_is_defaults():
+    assert LoadProfile.parse("") == LoadProfile()
+
+
+def test_profile_parse_rejects_unknown_key_with_vocabulary():
+    with pytest.raises(ValueError, match="peak_ratio"):
+        LoadProfile.parse("qps=10,frequency=3")
+
+
+def test_profile_parse_rejects_non_kv_term():
+    with pytest.raises(ValueError, match="not k=v"):
+        LoadProfile.parse("qps=10,diurnal")
+
+
+@pytest.mark.parametrize("bad", [
+    dict(curve="square"), dict(qps=0.0), dict(peak_ratio=0.5),
+    dict(period_s=0.0), dict(burst_frac=0.0), dict(burst_frac=1.0)])
+def test_profile_validation(bad):
+    with pytest.raises(ValueError):
+        LoadProfile(**bad)
+
+
+@pytest.mark.parametrize("curve", ["constant", "diurnal", "bursty"])
+def test_rate_curve_mean_is_qps(curve):
+    """The contract that makes qps comparable across curves: the mean of
+    lambda(t) over a full period equals qps for every shape."""
+    p = LoadProfile(curve=curve, qps=200.0, peak_ratio=4.0, period_s=10.0,
+                    burst_frac=0.1)
+    grid = np.linspace(0.0, p.period_s, 20001)[:-1]     # one full period
+    mean = np.mean([p.rate(t) for t in grid])
+    np.testing.assert_allclose(mean, p.qps, rtol=1e-3)
+    peak = max(p.rate(t) for t in grid)
+    assert peak <= p.peak_rate * (1 + 1e-9)
+    np.testing.assert_allclose(peak, p.peak_rate, rtol=1e-3)
+
+
+def test_diurnal_swings_between_trough_and_peak():
+    p = LoadProfile(curve="diurnal", qps=100.0, peak_ratio=4.0, period_s=8.0)
+    lo = 2.0 * p.qps / (1.0 + p.peak_ratio)
+    grid = np.linspace(0.0, p.period_s, 40001)
+    rates = np.array([p.rate(t) for t in grid])
+    np.testing.assert_allclose(rates.min(), lo, rtol=1e-3)
+    np.testing.assert_allclose(rates.max(), p.peak_ratio * lo, rtol=1e-3)
+
+
+# ================================================================ generator
+
+
+def test_generator_is_pure_function_of_profile():
+    p = LoadProfile(n_queries=32, curve="diurnal", qps=50.0, period_s=2.0,
+                    seed=3)
+    ids = np.arange(40, dtype=np.int64)
+    a, b = (LoadGenerator(p, CFG.k, item_ids=ids) for _ in range(2))
+    np.testing.assert_array_equal(a.queries, b.queries)
+    for _ in range(3):
+        (ia, qa), (ib, qb) = a.sample_queries(16), b.sample_queries(16)
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(qa, qb)
+        (ua, fa), (ub, fb) = a.sample_upserts(4), b.sample_upserts(4)
+        np.testing.assert_array_equal(ua, ub)
+        np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_array_equal(a.arrivals(64), b.arrivals(64))
+
+
+def test_generator_seed_changes_the_stream():
+    a = LoadGenerator(LoadProfile(seed=0), CFG.k)
+    b = LoadGenerator(LoadProfile(seed=1), CFG.k)
+    assert not np.array_equal(a.queries, b.queries)
+
+
+def test_query_identities_are_unit_norm_and_reused():
+    lg = LoadGenerator(LoadProfile(n_queries=16, zipf_q=1.1, seed=5), CFG.k)
+    np.testing.assert_allclose(np.linalg.norm(lg.queries, axis=1), 1.0,
+                               atol=1e-5)
+    idx, rows = lg.sample_queries(200)
+    assert len(np.unique(idx)) < 200       # hot identities really repeat
+    # a repeated identity is BYTE-identical — exact cache keys collide
+    first = {}
+    for i, row in zip(idx, rows):
+        if i in first:
+            assert row.tobytes() == first[i]
+        first[i] = row.tobytes()
+
+
+def test_query_popularity_is_zipf_skewed():
+    lg = LoadGenerator(LoadProfile(n_queries=64, zipf_q=1.1, seed=2), CFG.k)
+    idx, _ = lg.sample_queries(4000)
+    counts = np.bincount(idx, minlength=64)
+    assert counts[0] > counts[-1]
+    assert counts[:8].sum() / 4000 > 0.5   # analytic top-8 share ~= 0.63
+
+
+def test_upserts_require_item_ids_and_follow_item_zipf():
+    with pytest.raises(ValueError, match="item_ids"):
+        LoadGenerator(LoadProfile(), CFG.k).sample_upserts(1)
+    ids = np.arange(100, 164, dtype=np.int64)
+    lg = LoadGenerator(LoadProfile(zipf_items=1.5, seed=4), CFG.k,
+                       item_ids=ids)
+    up, fac = lg.sample_upserts(2000)
+    assert set(up) <= set(ids)
+    assert fac.shape == (2000, CFG.k)
+    counts = np.bincount(up - 100, minlength=64)
+    assert counts[0] > counts[-1]          # hot items churn most
+
+
+def test_arrivals_are_increasing_and_match_qps():
+    p = LoadProfile(curve="constant", qps=1000.0, seed=6)
+    t = LoadGenerator(p, CFG.k).arrivals(3000)
+    assert (np.diff(t) > 0).all()
+    # 3000 arrivals at 1000 qps should span ~3s (Poisson, generous band)
+    assert 2.5 < t[-1] < 3.6
+    t0 = LoadGenerator(p, CFG.k).arrivals(5, t0=100.0)
+    assert (t0 > 100.0).all()
+
+
+def test_diurnal_arrivals_concentrate_in_the_peak_half():
+    p = LoadProfile(curve="diurnal", qps=200.0, peak_ratio=4.0,
+                    period_s=1.0, seed=8)
+    t = LoadGenerator(p, CFG.k).arrivals(1200)
+    phase = t % p.period_s
+    # sin >= 0 on the first half-period: the high half of the sinusoid
+    hi = (phase < 0.5).sum()
+    lo = (phase >= 0.5).sum()
+    assert hi > 1.5 * lo
+
+
+# ============================================================== cache (unit)
+
+
+def test_cache_rejects_capacity_zero():
+    with pytest.raises(ValueError, match="capacity"):
+        ResultCache(0)
+
+
+def test_cache_key_covers_every_result_knob():
+    row = unit_factors(1, CFG.k, 1)[0]
+    k = ResultCache.key(row, 8, False)
+    assert k == ResultCache.key(row.copy(), 8, False)
+    assert k != ResultCache.key(row, 9, False)      # kappa in the key
+    assert k != ResultCache.key(row, 8, True)       # exact in the key
+    other = row.copy()
+    other[0] += 1e-7                                # any bit flip: new key
+    assert k != ResultCache.key(other, 8, False)
+
+
+def _put(cache, row, tag=0):
+    key = ResultCache.key(row, KAPPA, False)
+    cache.put(key, np.arange(KAPPA) + tag, np.linspace(1, 0, KAPPA),
+              n_scored=50, discarded_frac=0.5)
+    return key
+
+
+def test_cache_hit_miss_and_lru_eviction():
+    c = ResultCache(2)
+    rows = unit_factors(3, CFG.k, 2)
+    assert c.hit_rate is None              # no lookups yet
+    k0, k1 = _put(c, rows[0]), _put(c, rows[1])
+    assert c.get(k0).ids[0] == 0 and len(c) == 2
+    _put(c, rows[2], tag=9)                # k1 is now LRU -> evicted
+    assert c.n_evictions == 1 and len(c) == 2
+    assert c.get(k1) is None
+    assert c.get(k0, count_miss=False) is not None   # probe counts the hit
+    assert (c.n_hits, c.n_misses) == (2, 1)
+    assert c.stats()["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_cache_probe_miss_is_not_counted():
+    c = ResultCache(2)
+    key = ResultCache.key(unit_factors(1, CFG.k, 3)[0], KAPPA, False)
+    assert c.get(key, count_miss=False) is None
+    assert c.n_misses == 0
+
+
+def test_cache_put_copies_the_arrays():
+    c = ResultCache(2)
+    ids = np.arange(KAPPA)
+    key = ResultCache.key(unit_factors(1, CFG.k, 4)[0], KAPPA, False)
+    c.put(key, ids, np.ones(KAPPA, np.float32), 1, 0.0)
+    ids[:] = -7                            # caller scribbles on its array
+    assert c.get(key).ids[0] == 0          # the memo is unharmed
+
+
+def test_cache_generation_bump_invalidates_everything():
+    c = ResultCache(8)
+    key = _put(c, unit_factors(1, CFG.k, 5)[0])
+    assert c.bump() == 1
+    assert c.get(key) is None              # stale hit impossible
+    assert c.n_invalidations == 1 and c.n_misses == 1
+    assert len(c) == 0                     # the stale entry is dropped
+    key = _put(c, unit_factors(1, CFG.k, 5)[0])
+    assert c.get(key).version == 1         # re-memoized under the new gen
+
+
+def test_cache_ttl_ages_out_on_the_injected_clock():
+    t = [0.0]
+    c = ResultCache(8, ttl_s=10.0, clock=lambda: t[0])
+    key = _put(c, unit_factors(1, CFG.k, 6)[0])
+    t[0] = 9.9
+    assert c.get(key) is not None
+    t[0] = 10.1 + 9.9                      # insert time was 0.0
+    assert c.get(key) is None
+    assert c.n_invalidations == 1
+
+
+def test_cache_batch_lookup_is_all_or_nothing():
+    c = ResultCache(8)
+    rows = unit_factors(3, CFG.k, 7)
+    keys = [_put(c, r) for r in rows]
+    missing = ResultCache.key(unit_factors(1, CFG.k, 8)[0], KAPPA, False)
+    assert c.get_batch(keys + [missing]) is None
+    assert (c.n_hits, c.n_misses) == (0, 4)     # 4 misses, no partial hit
+    got = c.get_batch(keys)
+    assert got is not None and len(got) == 3
+    assert (c.n_hits, c.n_misses) == (3, 4)
+
+
+def test_cache_mirrors_counters_into_service_metrics():
+    m = ServiceMetrics()
+    c = ResultCache(1, metrics=m)
+    rows = unit_factors(2, CFG.k, 9)
+    k0 = _put(c, rows[0])
+    _put(c, rows[1])                       # capacity 1 -> evicts k0
+    assert c.get(k0) is None
+    c.bump()
+    assert c.get(ResultCache.key(rows[1], KAPPA, False)) is None
+    assert (m.n_cache_hits, m.n_cache_misses) == (c.n_hits, c.n_misses)
+    assert m.n_cache_evictions == c.n_evictions == 1
+    assert m.n_cache_invalidations == c.n_invalidations == 1
+    snap = m.snapshot()
+    assert snap["cache_misses"] == c.n_misses
+    assert snap["cache_hit_rate"] == c.hit_rate
+
+
+# ======================================================== wired: sharded
+
+
+@pytest.fixture
+def cached_pair():
+    items, ids = unit_factors(80, CFG.k, 10), np.arange(80, dtype=np.int64)
+    r = open_retriever(_spec(cache_capacity=32), items=items, ids=ids)
+    oracle = open_retriever(_brute(), items=items, ids=ids)
+    return r, oracle
+
+
+def test_cache_off_by_default():
+    items = unit_factors(16, CFG.k, 11)
+    r = open_retriever(_spec(), items=items)
+    assert r.cache is None
+    assert "result_cache" not in r.stats()
+
+
+def test_repeat_query_hits_bit_identically(cached_pair):
+    r, oracle = cached_pair
+    u = unit_factors(4, CFG.k, 12)
+    cold = r.query(u, KAPPA, exact=True)
+    assert r.cache.stats()["misses"] == 4 and r.cache.stats()["hits"] == 0
+    warm = r.query(u, KAPPA, exact=True)
+    assert r.cache.stats()["hits"] == 4
+    want = oracle.query(u, KAPPA, exact=True)
+    for got in (cold, warm):
+        np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_array_equal(warm.scores, cold.scores)
+    np.testing.assert_array_equal(warm.n_scored, cold.n_scored)
+    np.testing.assert_array_equal(warm.discarded_frac, cold.discarded_frac)
+    assert r.stats()["result_cache"]["hits"] == 4
+
+
+def test_exact_and_inexact_paths_do_not_share_entries(cached_pair):
+    r, _ = cached_pair
+    u = unit_factors(1, CFG.k, 13)
+    r.query(u, KAPPA, exact=True)
+    h0 = r.cache.n_hits
+    r.query(u, KAPPA, exact=False)         # different key -> miss
+    assert r.cache.n_hits == h0
+    r.query(u, KAPPA, exact=False)
+    assert r.cache.n_hits == h0 + 1
+
+
+def test_explain_marks_cache_hits(cached_pair):
+    r, _ = cached_pair
+    u = unit_factors(2, CFG.k, 14)
+    r.query(u, KAPPA)
+    res = r.query(u, KAPPA, explain=True)
+    assert res.explain["cached"] is True
+    assert res.explain["cache_version"] == r.cache.version
+    assert all(s == "cache" for row in res.explain["source"] for s in row
+               if s)
+
+
+@pytest.mark.parametrize("mutate", ["upsert", "delete", "compact",
+                                    "compact_async", "repartition"])
+def test_every_mutation_invalidates(cached_pair, mutate):
+    """The stale-hit-impossible construction, per mutation type: the bump
+    lands, the old memo is dropped as a counted invalidation, and the
+    re-computed answer matches a brute oracle over the mutated catalog."""
+    r, oracle = cached_pair
+    u = unit_factors(3, CFG.k, 15)
+    r.query(u, KAPPA, exact=True)          # warm the memo
+    v0 = r.cache.version
+    if mutate == "upsert":
+        fac = unit_factors(1, CFG.k, 16)
+        r.upsert([3], fac)
+        oracle.upsert([3], fac)
+    elif mutate == "delete":
+        r.delete([5])
+        oracle.delete([5])
+    elif mutate == "compact":
+        r.compact()
+    elif mutate == "compact_async":
+        r.compact(async_=True)             # bump lands at the swap
+        while r.maintenance_stats()["compaction"]["active"]:
+            r.compaction_step()
+    else:
+        r.repartition(async_=False)
+    assert r.cache.version > v0
+    i0, m0 = r.cache.n_invalidations, r.cache.n_misses
+    got = r.query(u, KAPPA, exact=True)
+    assert r.cache.n_invalidations == i0 + 3     # stale entries dropped
+    assert r.cache.n_misses == m0 + 3
+    want = oracle.query(u, KAPPA, exact=True)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_allclose(got.scores, want.scores, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_snapshot_restore_starts_with_a_fresh_cache(cached_pair, tmp_path):
+    r, _ = cached_pair
+    u = unit_factors(2, CFG.k, 17)
+    r.query(u, KAPPA)
+    r.query(u, KAPPA)
+    assert len(r.cache) > 0
+    path = str(tmp_path / "cached.npz")
+    r.snapshot(path)
+    fresh = open_retriever(_spec(cache_capacity=32), snapshot=path)
+    assert len(fresh.cache) == 0 and fresh.cache.n_hits == 0
+    a, b = r.query(u, KAPPA), fresh.query(u, KAPPA)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_degraded_answers_are_never_cached(cached_pair):
+    r, _ = cached_pair
+    u = unit_factors(2, CFG.k, 18)
+    res = r.query(u, KAPPA, deadline_s=0.0)
+    assert res.degraded                    # spent budget -> floor rung
+    h0 = r.cache.n_hits
+    full = r.query(u, KAPPA)               # same key: MUST recompute
+    assert r.cache.n_hits == h0            # the degraded run memoized nothing
+    assert not full.degraded
+    again = r.query(u, KAPPA)              # the full answer did memoize
+    assert r.cache.n_hits == h0 + 2
+    np.testing.assert_array_equal(again.ids, full.ids)
+
+
+def test_microbatcher_probe_answers_without_queueing(cached_pair):
+    r, _ = cached_pair
+    row = unit_factors(1, CFG.k, 19)[0]
+    rid = r.batcher.submit(row)
+    assert r.cache.n_misses == 0           # probe misses are not counted
+    r.batcher.flush()
+    cold = r.batcher.result(rid)
+    n_req = r.metrics.n_requests
+    rid2 = r.batcher.submit(row)           # probe hit: completes at submit
+    assert r.batcher.pending == 0
+    warm = r.batcher.result(rid2)
+    np.testing.assert_array_equal(warm.ids, cold.ids)
+    np.testing.assert_array_equal(warm.scores, cold.scores)
+    assert warm.queue_wait_s == 0.0
+    assert r.metrics.n_requests == n_req + 1     # counted, not batched
+    assert r.metrics.n_cache_hits >= 1
+
+
+def test_zipf_stream_end_to_end_hit_rate_and_parity():
+    """The production story in one loop: a Zipf-skewed query stream with
+    item churn riding along — a meaningful hit rate emerges, every answer
+    (hit or computed) stays bit-identical to the brute oracle, and the
+    churn shows up as invalidations."""
+    items, ids = unit_factors(64, CFG.k, 20), np.arange(64, dtype=np.int64)
+    r = open_retriever(_spec(cache_capacity=32), items=items, ids=ids)
+    oracle = open_retriever(_brute(), items=items, ids=ids)
+    lg = LoadGenerator(LoadProfile(n_queries=8, zipf_q=1.1, seed=21),
+                       CFG.k, item_ids=ids)
+    for i in range(60):
+        if i and i % 20 == 0:
+            up, fac = lg.sample_upserts(2)
+            seen = {}
+            for j, f in zip(up.tolist(), fac):   # last-write-wins
+                seen[j] = f
+            r.upsert(list(seen), np.stack(list(seen.values())))
+            oracle.upsert(list(seen), np.stack(list(seen.values())))
+        _, rows = lg.sample_queries(1)
+        got = r.query(rows, KAPPA, exact=True)
+        want = oracle.query(rows, KAPPA, exact=True)
+        np.testing.assert_array_equal(got.ids, want.ids, err_msg=str(i))
+    st = r.cache.stats()
+    assert st["hit_rate"] > 0.3            # 8 hot identities, capacity 32
+    assert st["invalidations"] >= 1        # churn really invalidated
+
+
+def test_multihost_caches_stay_in_lockstep():
+    """Per-host caches under SPMD serving: the same request stream drives
+    identical hit/miss decisions and identical answers on the multihost
+    backend as on single-host sharded."""
+    items, ids = unit_factors(96, CFG.k, 22), np.arange(96, dtype=np.int64)
+    one = open_retriever(_spec(cache_capacity=16), items=items, ids=ids)
+    many = open_retriever(
+        _spec(backend="sharded-multihost", n_hosts=2, replication=2,
+              cache_capacity=16), items=items, ids=ids)
+    lg = LoadGenerator(LoadProfile(n_queries=6, zipf_q=1.1, seed=23),
+                       CFG.k, item_ids=ids)
+    for i in range(24):
+        if i % 8 == 7:
+            up, fac = lg.sample_upserts(1)
+            one.upsert(up, fac)
+            many.upsert(up, fac)
+        _, rows = lg.sample_queries(2)
+        a, b = one.query(rows, KAPPA), many.query(rows, KAPPA)
+        np.testing.assert_array_equal(a.ids, b.ids, err_msg=str(i))
+        np.testing.assert_array_equal(a.scores, b.scores)
+    assert one.cache.stats() == many.cache.stats()
+    assert one.cache.stats()["hits"] > 0

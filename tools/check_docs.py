@@ -1,0 +1,151 @@
+"""Docs rot gate: intra-repo link validation + runnable-snippet smoke.
+
+Two checks over the documentation set (``docs/*.md`` plus the package
+``README.md``s):
+
+* **Links.**  Every relative markdown link must resolve to a real file or
+  directory in the repo, and a ``#fragment`` pointing into a markdown file
+  must match one of that file's headings (GitHub anchor slugs).  External
+  (``http(s)://``, ``mailto:``) links are not fetched — CI must not depend
+  on the network.
+* **Snippets.**  Every fenced ``python`` code block is executed against
+  the tier-1 environment, each in a fresh namespace with the repo root as
+  cwd — so a doc example that drifts from the real API fails CI instead of
+  silently rotting.  Illustrative fragments that are not meant to run
+  (elided arguments, undefined placeholder names) opt out by placing
+  ``<!-- doc-snippet: skip -->`` on the line above the fence; blocks
+  fenced with any other language tag (or none) are never executed.
+
+Run:  PYTHONPATH=src python tools/check_docs.py [files...]
+Exit code 1 with a per-finding report on any failure.
+"""
+from __future__ import annotations
+
+import glob
+import io
+import os
+import re
+import sys
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SKIP_MARK = "doc-snippet: skip"
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def default_files() -> list[str]:
+    out = sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    for readme in glob.glob(os.path.join(REPO, "*", "README.md")):
+        out.append(readme)
+    return sorted(set(out))
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor: lowercase, drop punctuation, spaces
+    become hyphens (consecutive removed chars leave consecutive hyphens)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in open(path, encoding="utf-8"):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+        elif not in_fence and line.startswith("#"):
+            slugs.add(slugify(line.lstrip("#")))
+    return slugs
+
+
+def check_links(path: str, failures: list[str]) -> int:
+    """Validate every relative link in ``path``; returns the count seen."""
+    text = open(path, encoding="utf-8").read()
+    # strip fenced code first: sample output may contain bracketed text
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    rel = os.path.relpath(path, REPO)
+    n = 0
+    for target in _LINK.findall(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        n += 1
+        base, _, frag = target.partition("#")
+        dest = (path if not base
+                else os.path.normpath(os.path.join(os.path.dirname(path),
+                                                   base)))
+        if not os.path.exists(dest):
+            failures.append(f"{rel}: broken link -> {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            if frag not in heading_slugs(dest):
+                failures.append(f"{rel}: missing anchor -> {target}")
+    return n
+
+
+def python_blocks(path: str) -> list[tuple[int, bool, str]]:
+    """(first line number, skipped?, source) per fenced ``python`` block."""
+    lines = open(path, encoding="utf-8").read().splitlines()
+    blocks, i = [], 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang, start = m.group(1), i + 1
+        j = start
+        while j < len(lines) and not _FENCE.match(lines[j]):
+            j += 1
+        if lang == "python":
+            skip = any(SKIP_MARK in lines[k]
+                       for k in range(max(0, i - 2), i))
+            blocks.append((start + 1, skip, "\n".join(lines[start:j])))
+        i = j + 1
+    return blocks
+
+
+def run_snippet(path: str, lineno: int, code: str,
+                failures: list[str]) -> None:
+    rel = os.path.relpath(path, REPO)
+    label = f"{rel}:{lineno}"
+    # fresh namespace per block; stdout captured so docs stay quiet in CI
+    stdout, old = io.StringIO(), sys.stdout
+    try:
+        sys.stdout = stdout
+        exec(compile(code, label, "exec"), {"__name__": "__doc_snippet__"})
+    except Exception:
+        tb = traceback.format_exc(limit=3)
+        failures.append(f"{label}: snippet raised\n{tb}")
+    finally:
+        sys.stdout = old
+
+
+def main(argv: list[str] | None = None) -> int:
+    files = [os.path.abspath(f) for f in (argv or [])] or default_files()
+    os.chdir(REPO)
+    failures: list[str] = []
+    n_links = n_run = n_skipped = 0
+    for path in files:
+        n_links += check_links(path, failures)
+        for lineno, skip, code in python_blocks(path):
+            if skip:
+                n_skipped += 1
+                continue
+            n_run += 1
+            run_snippet(path, lineno, code, failures)
+    print(f"docs check: {len(files)} files, {n_links} intra-repo links, "
+          f"{n_run} snippets executed ({n_skipped} marked skip)")
+    for f in failures:
+        print(f"  FAIL {f}")
+    if failures:
+        print(f"docs check: {len(failures)} failure(s)")
+        return 1
+    print("docs check: all good")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
